@@ -1,0 +1,31 @@
+"""Benchmark utilities: timing + CSV row collection."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def timed(name: str, fn: Callable, *args, iters: int = 3, warmup: int = 1,
+          derived: str = "", **kw):
+    """Times fn (best of iters after warmup), records a CSV row."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    ROWS.append((name, best * 1e6, derived))
+    return out
+
+
+def record(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+
+
+def emit_csv():
+    print("name,us_per_call,derived")
+    for name, us, derived in ROWS:
+        print(f"{name},{us:.1f},{derived}")

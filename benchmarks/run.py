@@ -1,0 +1,30 @@
+"""Benchmark runner — one function per survey table + runtime micros.
+
+Prints per-table reproductions (with survey-band assertions) and ends with
+the ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (table1_models, table2_hardware,
+                            table3_cloud_device, table4_edge_device,
+                            table5_cloud_edge_device, table6_device_device,
+                            runtime_micro)
+    from benchmarks.common import emit_csv
+
+    table1_models.run()
+    table2_hardware.run()
+    table3_cloud_device.run()
+    table4_edge_device.run()
+    table5_cloud_edge_device.run()
+    table6_device_device.run()
+    runtime_micro.run()
+    print()
+    emit_csv()
+
+
+if __name__ == '__main__':
+    main()

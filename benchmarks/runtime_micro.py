@@ -1,0 +1,52 @@
+"""Runtime microbenchmarks: per-call timings of the actual JAX/Pallas code
+paths on CPU (smoke-scale).  These are the `us_per_call` rows with real
+measured time; planner tables above are analytic."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.models import Model
+
+
+def run():
+    print("\n== Runtime microbenchmarks (CPU, smoke scale) ==")
+    # kernels
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 256), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 2048), jnp.float32) * .05
+    timed("kernel_exit_head_256x2048",
+          lambda: ops.exit_head_entropy(x, w).block_until_ready(),
+          derived="interpret=True")
+    timed("kernel_compress_256x256",
+          lambda: ops.compress_rows(x)[0].block_until_ready(),
+          derived="int8")
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 128, 4, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 128, 2, 64), jnp.float32)
+    timed("kernel_flash_attn_128",
+          lambda: ops.flash_attention_bshd(q, k, v, block_q=64, block_k=64)
+          .block_until_ready(), derived="causal")
+
+    # one representative per family: forward + decode step
+    for arch in ("yi-6b", "deepseek-v3-671b", "zamba2-1.2b", "xlstm-350m",
+                 "whisper-base", "qwen2-vl-2b"):
+        cfg = get_config(arch + "-smoke")
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.ones((2, 64), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.ones((2, cfg.encdec.encoder_seq_len,
+                                        cfg.d_model), jnp.bfloat16)
+        fwd = jax.jit(lambda p, b: m.forward(p, b).logits)
+        timed(f"forward_{arch}-smoke",
+              lambda: fwd(params, batch).block_until_ready(),
+              derived=f"family={cfg.family}")
+        cache = m.init_decode_cache(2, 64)
+        dec = jax.jit(lambda p, c, t, i: m.decode_step(p, c, t, i))
+        timed(f"decode_{arch}-smoke",
+              lambda: dec(params, cache, jnp.ones((2, 1), jnp.int32),
+                          jnp.int32(3))[0].block_until_ready(),
+              derived="1 token")

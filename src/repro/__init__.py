@@ -1,0 +1,8 @@
+"""repro: collaborative DNN inference for edge intelligence, as a JAX framework.
+
+Executable form of the survey's taxonomy (Ren et al., 2022): four
+collaborative-inference paradigms over a model zoo of 10 architectures,
+with model partition, early exit, hierarchical tiers, failure resilience
+and feature compression as first-class subsystems.
+"""
+__version__ = "0.1.0"

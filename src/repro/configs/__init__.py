@@ -1,0 +1,43 @@
+"""Architecture registry: ``get_config("<arch-id>")`` and ``ARCHS``."""
+from __future__ import annotations
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+from repro.configs.whisper_base import CONFIG as _whisper
+from repro.configs.zamba2_1p2b import CONFIG as _zamba2
+from repro.configs.xlstm_350m import CONFIG as _xlstm
+from repro.configs.mistral_nemo_12b import CONFIG as _nemo
+from repro.configs.yi_6b import CONFIG as _yi
+from repro.configs.llama4_maverick_400b import CONFIG as _llama4
+from repro.configs.starcoder2_3b import CONFIG as _starcoder2
+from repro.configs.qwen2_vl_2b import CONFIG as _qwen2vl
+from repro.configs.deepseek_v3_671b import CONFIG as _dsv3
+from repro.configs.granite_3_2b import CONFIG as _granite
+
+ARCHS = {
+    c.name: c
+    for c in (
+        _whisper, _zamba2, _xlstm, _nemo, _yi,
+        _llama4, _starcoder2, _qwen2vl, _dsv3, _granite,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return ARCHS[name[: -len("-smoke")]].reduced()
+    return ARCHS[name]
+
+
+def shape_applicable(config: ModelConfig, shape_name: str) -> bool:
+    """Whether an (arch, input-shape) pair is runnable (DESIGN.md §3 skips)."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.name == "long_500k" and not config.supports_long_context:
+        return False
+    return True
+
+
+__all__ = [
+    "ARCHS", "get_config", "shape_applicable",
+    "INPUT_SHAPES", "InputShape", "ModelConfig",
+]

@@ -1,0 +1,315 @@
+"""Configuration system for the repro framework.
+
+Every assigned architecture is described by a single `ModelConfig` dataclass that
+covers all six families (dense / moe / ssm / hybrid / encdec / vlm).  A config is
+pure data: the model builder in `repro.models.model` dispatches on `family` and the
+per-layer fields below.
+
+Reduced "smoke" variants (2 layers, d_model <= 512, <= 4 experts) are derived
+mechanically via `ModelConfig.reduced()` so smoke tests always exercise the same
+code path as the full config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned, fixed for every architecture)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0           # routed experts
+    top_k: int = 1
+    num_shared_experts: int = 0
+    d_ff_expert: int = 0           # per-expert FFN width
+    capacity_factor: float = 1.25  # dispatch capacity factor
+    layer_period: int = 1          # every `period`-th layer is MoE (1 = all)
+    first_dense_layers: int = 0    # leading dense layers (DeepSeek-V3: 3)
+    router_aux_coef: float = 0.01  # load-balance aux loss coefficient
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_size: int = 64           # N, SSM state dimension
+    conv_width: int = 4            # depthwise causal conv width (Mamba2)
+    expand: int = 2                # inner expansion factor
+    head_dim: int = 64             # Mamba2 SSD head dim (P)
+    chunk_size: int = 256          # SSD chunked-scan block
+    # xLSTM specifics
+    slstm_layers: Tuple[int, ...] = ()  # layer indices using sLSTM (rest mLSTM)
+    proj_factor: float = 2.0       # xLSTM block up-projection
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 1500    # whisper: 30s audio -> 1500 frames
+
+
+@dataclass(frozen=True)
+class ExitConfig:
+    """Early-exit (BranchyNet/Edgent) configuration.
+
+    `exit_layers` are segment boundaries: after layer index i (1-based count of
+    layers completed) an exit head may fire.  They also double as the candidate
+    partition points for the collaborative-inference planners.
+    """
+    exit_layers: Tuple[int, ...] = ()
+    entropy_threshold: float = 0.5
+    head_hidden: int = 0           # 0 = linear head straight to vocab
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    # attention
+    attention: str = "full"        # full | sliding | mla
+    sliding_window: int = 0        # 0 = no sliding window (full attention)
+    long_context_window: int = 8192  # window used by the long_500k sliding variant
+    rope: str = "rope"             # rope | mrope | none (learned/sinusoidal stub)
+    rope_theta: float = 10_000.0
+    # MLA (DeepSeek-V3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    # family sub-configs
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    encdec: EncDecConfig = field(default_factory=EncDecConfig)
+    exits: ExitConfig = field(default_factory=ExitConfig)
+    # hybrid (zamba2): shared attention block applied every `shared_attn_period`
+    shared_attn_period: int = 0    # 0 = no shared block
+    # vlm / audio frontend stub
+    frontend: str = "none"         # none | audio_frames | vision_patches
+    frontend_tokens: int = 0       # number of frontend embedding positions
+    # misc
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    act: str = "silu"              # silu | gelu
+    tie_embeddings: bool = False
+    mtp_depth: int = 0             # DeepSeek-V3 multi-token-prediction depth
+    dtype: str = "bfloat16"
+    source: str = ""               # citation
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic long decode: SSM/hybrid state, or a sliding window."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.family == "encdec":
+            return False  # whisper: pure full-attention enc-dec, skip long_500k
+        return self.sliding_window > 0 or self.long_context_window > 0
+
+    @property
+    def is_decoder(self) -> bool:
+        return True  # all assigned archs have a decode step
+
+    def segment_boundaries(self) -> Tuple[int, ...]:
+        """Segment boundaries = sorted exit layers + final layer.
+
+        The segmented-scan model executes layers [b_{i-1}, b_i) as one
+        `lax.scan`, evaluating an exit head / partition boundary between
+        segments.  This is the uniform substrate for every collaborative
+        technique in the survey.
+        """
+        bounds = sorted(set(self.exits.exit_layers) | {self.num_layers})
+        return tuple(b for b in bounds if 0 < b <= self.num_layers)
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: 2 layers, d_model <= 512, <= 4 experts."""
+        d_model = min(self.d_model, 256)
+        num_heads = max(2, min(self.num_heads, 4))
+        num_kv = max(1, min(self.num_kv_heads, num_heads))
+        head_dim = max(8, d_model // num_heads)
+        moe = self.moe
+        if moe.num_experts:
+            moe = dataclasses.replace(
+                moe,
+                num_experts=min(4, moe.num_experts),
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=min(moe.d_ff_expert or 128, 128),
+                first_dense_layers=min(moe.first_dense_layers, 1),
+            )
+        ssm = dataclasses.replace(
+            self.ssm,
+            state_size=min(self.ssm.state_size, 16),
+            head_dim=min(self.ssm.head_dim, 32),
+            chunk_size=32,
+            slstm_layers=tuple(i for i in self.ssm.slstm_layers if i < 2) or ((1,) if self.ssm.slstm_layers else ()),
+        )
+        encdec = dataclasses.replace(
+            self.encdec,
+            num_encoder_layers=min(self.encdec.num_encoder_layers, 2),
+            encoder_seq_len=min(self.encdec.encoder_seq_len, 32),
+        )
+        exits = dataclasses.replace(self.exits, exit_layers=(1,) if self.exits.exit_layers else ())
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=2,
+            d_model=d_model,
+            num_heads=num_heads,
+            num_kv_heads=num_kv,
+            head_dim=head_dim,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 1024),
+            q_lora_rank=min(self.q_lora_rank, 64),
+            kv_lora_rank=min(self.kv_lora_rank, 32),
+            qk_nope_head_dim=min(self.qk_nope_head_dim, 32),
+            qk_rope_head_dim=min(self.qk_rope_head_dim, 16),
+            v_head_dim=min(self.v_head_dim, 32),
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            long_context_window=min(self.long_context_window, 64),
+            moe=moe,
+            ssm=ssm,
+            encdec=encdec,
+            exits=exits,
+            shared_attn_period=min(self.shared_attn_period, 1) if self.shared_attn_period else 0,
+            frontend_tokens=min(self.frontend_tokens, 16) if self.frontend_tokens else 0,
+            mtp_depth=min(self.mtp_depth, 1),
+        )
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (used for Table-1 benchmark + roofline N)."""
+        d, v = self.d_model, self.vocab_size
+        hd = self.resolved_head_dim
+        nq, nkv = self.num_heads, self.num_kv_heads
+        emb = v * d * (1 if self.tie_embeddings else 2)
+
+        def attn_params() -> int:
+            if self.attention == "mla":
+                qr, kvr = self.q_lora_rank, self.kv_lora_rank
+                qk = self.qk_nope_head_dim + self.qk_rope_head_dim
+                p = d * qr + qr * nq * qk              # q down + up
+                p += d * (kvr + self.qk_rope_head_dim)  # kv down (+ shared rope k)
+                p += kvr * nq * (self.qk_nope_head_dim + self.v_head_dim)
+                p += nq * self.v_head_dim * d          # o proj
+                return p
+            return d * nq * hd + 2 * d * nkv * hd + nq * hd * d
+
+        def ffn_params(ff: int) -> int:
+            mult = 3 if self.act == "silu" else 2  # gated vs plain
+            return mult * d * ff
+
+        def moe_layer_params() -> int:
+            m = self.moe
+            p = d * m.num_experts  # router
+            p += m.num_experts * ffn_params(m.d_ff_expert)
+            p += m.num_shared_experts * ffn_params(m.d_ff_expert)
+            return p
+
+        def ssm_layer_params() -> int:
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = max(1, d_in // s.head_dim)
+            p = d * (2 * d_in + 2 * s.state_size + nheads)  # in_proj(x,z)+B,C,dt
+            p += s.conv_width * (d_in + 2 * s.state_size)
+            p += d_in * d + nheads  # out proj + A
+            return p
+
+        def xlstm_layer_params(layer_idx: int) -> int:
+            s = self.ssm
+            d_in = int(s.proj_factor * d)
+            p = 2 * d * d_in + d_in * d  # up (x,z) + down
+            p += 3 * d_in * d_in + 3 * d_in  # q,k,v / gates
+            return p
+
+        total = emb
+        layers = self.num_layers
+        for i in range(layers):
+            if self.family in ("dense", "vlm"):
+                total += attn_params() + ffn_params(self.d_ff)
+            elif self.family == "moe":
+                total += attn_params()
+                m = self.moe
+                if i < m.first_dense_layers or (m.layer_period > 1 and (i % m.layer_period) != (m.layer_period - 1)):
+                    total += ffn_params(self.d_ff)
+                else:
+                    total += moe_layer_params()
+            elif self.family == "ssm":
+                if i in self.ssm.slstm_layers:
+                    total += xlstm_layer_params(i)
+                else:
+                    total += xlstm_layer_params(i)
+            elif self.family == "hybrid":
+                total += ssm_layer_params()
+            elif self.family == "encdec":
+                total += attn_params() * 2 + ffn_params(self.d_ff)  # self+cross
+            total += 2 * d  # norms
+        if self.family == "hybrid" and self.shared_attn_period:
+            total += attn_params() + ffn_params(self.d_ff)  # ONE shared block
+        if self.family == "encdec":
+            for _ in range(self.encdec.num_encoder_layers):
+                total += attn_params() + ffn_params(self.d_ff) + 2 * d
+        if self.mtp_depth:
+            total += self.mtp_depth * (attn_params() + moe_layer_params() + 2 * d * d)
+        # exit heads
+        total += len(self.exits.exit_layers) * d * v if not self.tie_embeddings else 0
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if self.family != "moe":
+            return self.param_count()
+        m = self.moe
+        full = self.param_count()
+        # subtract inactive expert FFNs
+        mult = 3 if self.act == "silu" else 2
+        per_expert = mult * self.d_model * m.d_ff_expert
+        n_moe_layers = sum(
+            1 for i in range(self.num_layers)
+            if i >= m.first_dense_layers and (m.layer_period <= 1 or (i % m.layer_period) == (m.layer_period - 1))
+        )
+        inactive = n_moe_layers * (m.num_experts - m.top_k) * per_expert
+        return full - inactive
+
+    def flops_per_token(self, seq_len: int) -> float:
+        """Approximate forward FLOPs per token: 2*N_active + attention term."""
+        n = self.active_param_count() - self.vocab_size * self.d_model  # exclude input embed gather
+        f = 2.0 * n
+        if self.family not in ("ssm",):
+            win = self.sliding_window or seq_len
+            ctx = min(seq_len, win)
+            f += 4.0 * self.num_layers * self.num_heads * self.resolved_head_dim * ctx
+        return f

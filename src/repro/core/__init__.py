@@ -1,0 +1,13 @@
+from repro.core.cost_model import (TABLE2, LINKS, TPU_V5E, CostGraph,
+                                   DeviceProfile, LinkProfile,
+                                   build_cost_graph)
+from repro.core.paradigms import (CollaborationPlan, Scenario, plan_all,
+                                  plan_cloud_device, plan_edge_device,
+                                  plan_cloud_edge_device, plan_device_device)
+
+__all__ = [
+    "TABLE2", "LINKS", "TPU_V5E", "CostGraph", "DeviceProfile", "LinkProfile",
+    "build_cost_graph", "CollaborationPlan", "Scenario", "plan_all",
+    "plan_cloud_device", "plan_edge_device", "plan_cloud_edge_device",
+    "plan_device_device",
+]

@@ -1,0 +1,74 @@
+"""Offloading decisions + intermediate-feature compression ([30], [51], [36]).
+
+The boundary activation is what a partition ships; compressing it trades
+compute + a little accuracy for transfer time.  `compression_decision`
+implements the survey's recurring trade-off (Vision-Pipeline [36] data
+transmission reduction, PADCS [51] intermediate data compression) on top of
+the cost model; `compress_boundary`/`decompress_boundary` are the runtime
+ops (with a Pallas kernel in kernels/feature_compress.py — these jnp
+versions are its oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import DeviceProfile, LinkProfile, compute_time
+
+
+# ---------------------------------------------------------------------------
+# Runtime ops (oracle for kernels/feature_compress)
+# ---------------------------------------------------------------------------
+
+def compress_boundary(x, bits: int = 8):
+    """Per-row symmetric quantization to int8 (bits=8) or int4-in-int8."""
+    qmax = float(2 ** (bits - 1) - 1)
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(xf / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_boundary(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compression_error(x, bits: int = 8) -> jnp.ndarray:
+    q, s = compress_boundary(x, bits)
+    return jnp.sqrt(jnp.mean(jnp.square(
+        decompress_boundary(q, s, jnp.float32) - x.astype(jnp.float32))))
+
+
+# ---------------------------------------------------------------------------
+# Planner decision
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CompressionDecision:
+    compress: bool
+    bits: int
+    tx_time_raw: float
+    tx_time_compressed: float
+    quant_overhead: float
+    speedup: float
+
+
+def compression_decision(boundary_bytes: float, device: DeviceProfile,
+                         link: LinkProfile, bits: int = 8,
+                         act_bytes: int = 2) -> CompressionDecision:
+    """Compress iff (tx saved) > (quantize+dequantize compute overhead)."""
+    raw_t = link.tx_time(boundary_bytes)
+    ratio = act_bytes * 8 / bits
+    comp_bytes = boundary_bytes / ratio + boundary_bytes / (act_bytes * 128)  # + scales
+    comp_t = link.tx_time(comp_bytes)
+    # quantization is ~3 flops/element + a row reduce
+    n_el = boundary_bytes / act_bytes
+    overhead = compute_time(6.0 * n_el, device)
+    total_comp = comp_t + overhead
+    return CompressionDecision(total_comp < raw_t, bits, raw_t, total_comp,
+                               overhead, raw_t / max(total_comp, 1e-12))

@@ -1,0 +1,185 @@
+"""The four collaborative DNN inference paradigms (survey §2.3, Fig. 2).
+
+Each paradigm binds the survey's key technologies (partition, early exit,
+hierarchy, compression, resilience) into one `CollaborationPlan` for a given
+workload + hardware scenario:
+
+  1. cloud-device     — Neurosurgeon/DADS split over a WAN link; objective
+                        emphasis: total latency (survey §3).
+  2. edge-device      — Edgent joint exit+partition over WiFi; objective:
+                        accuracy under a deadline (survey §4).
+  3. cloud-edge-device — DDNN 3-tier placement with per-tier exits;
+                        objective: total cost + resilience (survey §5).
+  4. device-device    — CoEdge/MoDNN data partition across a local cluster;
+                        objective: latency + energy (survey §6).
+
+These are the host-side planners; `core.hierarchy.staged_forward` executes
+a chosen plan across the TPU pod axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import (TABLE2, LINKS, CostGraph, DeviceProfile,
+                                   LinkProfile, build_cost_graph,
+                                   compute_energy, compute_time)
+from repro.core.early_exit import (EdgentPlan, ExitProfile, SpinnEstimate,
+                                   edgent_plan, spinn_estimate)
+from repro.core.hierarchy import DDNNPlacement, Tier, ddnn_placement
+from repro.core.offload import CompressionDecision, compression_decision
+from repro.core.partition import (CoEdgePlan, DadsPlan, SplitPlan,
+                                  coedge_plan, dads_plan, modnn_plan,
+                                  neurosurgeon_plan)
+from repro.core.resilience import ResilienceReport, resilience_report
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A hardware scenario the paradigms plan against."""
+    device: DeviceProfile
+    edge: DeviceProfile
+    cloud: DeviceProfile
+    dev_edge: LinkProfile
+    dev_cloud: LinkProfile
+    edge_cloud: LinkProfile
+    d2d: LinkProfile
+    peers: Tuple[DeviceProfile, ...] = ()
+
+    @staticmethod
+    def default() -> "Scenario":
+        return Scenario(
+            device=TABLE2["jetson-tx2"],
+            edge=TABLE2["jetson-agx-xavier"],
+            cloud=TABLE2["v100"],
+            dev_edge=LINKS["wifi"],
+            dev_cloud=LINKS["wan"],
+            edge_cloud=LINKS["lan"],
+            d2d=LINKS["d2d"],
+            peers=(TABLE2["jetson-tx2"], TABLE2["jetson-nano"],
+                   TABLE2["raspberry-pi-4b"], TABLE2["jetson-tx2"]),
+        )
+
+    @staticmethod
+    def neurosurgeon_era() -> "Scenario":
+        """Hardware matching the cloud-device papers' testbeds (Jetson-TK1
+        class device, V100-class cloud, WiFi uplink) — used to validate the
+        survey's Table-3 effectiveness bands."""
+        sc = Scenario.default()
+        return dataclasses.replace(sc, device=TABLE2["jetson-tk1"],
+                                   dev_cloud=LINKS["wifi"])
+
+
+@dataclass
+class CollaborationPlan:
+    paradigm: str
+    latency: float
+    energy: float
+    accuracy: float
+    comm_bytes: float
+    details: Dict[str, object] = field(default_factory=dict)
+
+    # baselines for the survey's effectiveness comparisons
+    cloud_only_latency: float = 0.0
+    device_only_latency: float = 0.0
+    cloud_only_energy: float = 0.0
+    device_only_energy: float = 0.0
+
+    @property
+    def latency_reduction(self) -> float:
+        return self.cloud_only_latency / max(self.latency, 1e-12)
+
+    @property
+    def energy_reduction(self) -> float:
+        return 1.0 - self.energy / max(self.cloud_only_energy, 1e-12)
+
+
+def _baselines(graph: CostGraph, sc: Scenario, link: LinkProfile):
+    """(cloud-only latency/energy, device-only latency/energy)."""
+    f = graph.total_flops
+    cl = (link.tx_time(graph.input_bytes) + compute_time(f, sc.cloud)
+          + link.tx_time(graph.result_bytes))
+    ce = link.tx_energy(graph.input_bytes)
+    dl = compute_time(f, sc.device)
+    de = compute_energy(f, sc.device)
+    return cl, ce, dl, de
+
+
+# ---------------------------------------------------------------------------
+# Paradigm planners
+# ---------------------------------------------------------------------------
+
+def plan_cloud_device(graph: CostGraph, sc: Scenario,
+                      objective: str = "latency") -> CollaborationPlan:
+    ns = neurosurgeon_plan(graph, sc.device, sc.cloud, sc.dev_cloud, objective)
+    dd = dads_plan(graph, sc.device, sc.cloud, sc.dev_cloud, "light")
+    comp = compression_decision(
+        graph.segments[max(ns.cut - 1, 0)].out_bytes, sc.device, sc.dev_cloud)
+    lat = ns.latency
+    if comp.compress and 0 < ns.cut < len(graph.segments):
+        lat = lat - comp.tx_time_raw + comp.tx_time_compressed
+    cl, ce, dl, de = _baselines(graph, sc, sc.dev_cloud)
+    return CollaborationPlan(
+        "cloud-device", lat, ns.device_energy, 0.92,
+        graph.segments[max(ns.cut - 1, 0)].out_bytes if ns.cut else graph.input_bytes,
+        {"neurosurgeon": ns, "dads": dd, "compression": comp},
+        cl, dl, ce, de)
+
+
+def plan_edge_device(graph: CostGraph, sc: Scenario, deadline: float,
+                     threshold: float = 0.5) -> CollaborationPlan:
+    prof = ExitProfile.default(
+        len(graph.segments),
+        [i for i, s in enumerate(graph.segments) if s.has_exit_after],
+        threshold=threshold)
+    eg = edgent_plan(graph, prof, sc.device, sc.edge, sc.dev_edge, deadline)
+    sp = spinn_estimate(graph, prof, eg.cut, sc.device, sc.edge, sc.dev_edge)
+    cl, ce, dl, de = _baselines(graph, sc, sc.dev_edge)
+    return CollaborationPlan(
+        "edge-device", sp.expected_latency, sp.expected_device_energy,
+        sp.expected_accuracy, sp.expected_tx_bytes,
+        {"edgent": eg, "spinn": sp, "profile": prof},
+        cl, dl, ce, de)
+
+
+def plan_cloud_edge_device(graph: CostGraph, sc: Scenario,
+                           stage_fail_prob: float = 0.05) -> CollaborationPlan:
+    tiers = (Tier("device", sc.device, sc.dev_edge),
+             Tier("edge", sc.edge, sc.edge_cloud),
+             Tier("cloud", sc.cloud, None))
+    prof = ExitProfile.default(
+        len(graph.segments),
+        [i for i, s in enumerate(graph.segments) if s.has_exit_after])
+    dd = ddnn_placement(graph, tiers, prof.exit_probs)
+    res = resilience_report(3, stage_fail_prob)
+    cl, ce, dl, de = _baselines(graph, sc, sc.dev_cloud)
+    energy = compute_energy(
+        sum(s.flops for i, s in enumerate(graph.segments)
+            if dd.tier_of_segment[i] == "device"), sc.device)
+    return CollaborationPlan(
+        "cloud-edge-device", dd.latency, energy, prof.expected_accuracy(),
+        dd.comm_bytes, {"ddnn": dd, "resilience": res},
+        cl, dl, ce, de)
+
+
+def plan_device_device(graph: CostGraph, sc: Scenario) -> CollaborationPlan:
+    peers = sc.peers or (sc.device,) * 4
+    ce_plan = coedge_plan(graph, peers, sc.d2d)
+    mo = modnn_plan(graph, peers, sc.d2d)
+    cl, cel, dl, de = _baselines(graph, sc, sc.dev_cloud)
+    return CollaborationPlan(
+        "device-device", ce_plan.makespan, ce_plan.energy, 0.92,
+        mo.data_delivery_bytes, {"coedge": ce_plan, "modnn": mo},
+        cl, dl, cel, de)
+
+
+def plan_all(graph: CostGraph, sc: Optional[Scenario] = None,
+             deadline: float = 0.1) -> Dict[str, CollaborationPlan]:
+    sc = sc or Scenario.default()
+    return {
+        "cloud-device": plan_cloud_device(graph, sc),
+        "edge-device": plan_edge_device(graph, sc, deadline),
+        "cloud-edge-device": plan_cloud_edge_device(graph, sc),
+        "device-device": plan_device_device(graph, sc),
+    }

@@ -1,0 +1,115 @@
+"""Failure-resilient distributed inference — deepFogGuard [68] / ResiliNet [69].
+
+Skip hyperconnections: in a physically partitioned DNN, each stage's input
+can bypass a failed stage and arrive from the nearest alive predecessor.
+In the residual-transformer setting the natural TPU realization is an
+identity bypass: a failed segment contributes nothing and its input flows
+through unchanged (our segments are residual stacks, so the identity is the
+correct hyperconnection — DESIGN.md §2).
+
+Two pieces:
+- `resilient_forward`: run the plan with a per-block `alive` mask (bool
+  [n_blocks]); failed blocks are bypassed.  Differentiable, jit-able.
+- `failout`: ResiliNet's training-time stage dropout — sample alive masks
+  so the network learns to tolerate missing stages.
+- `resilience_report`: planner-side accuracy/latency under node-failure
+  probabilities for the paradigm benchmarks (Table 5 reproduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.common import apply_norm, unembed
+
+
+def n_scan_blocks(model) -> int:
+    return sum(1 for s in model.plan if s[0] == "scan")
+
+
+def resilient_forward(model, params, batch, alive, *, long_mode: bool = False):
+    """Forward with per-block alive mask.  alive: bool/float [n_blocks].
+
+    Failed block => identity bypass (skip hyperconnection).  Exit heads and
+    shared-attn blocks attached to a failed block are bypassed with it.
+    Returns (logits, exit_logits) like Model.forward (without aux).
+    """
+    cfg = model.cfg
+    x = model.embed_inputs(params, batch)
+    bsz, seq = batch["tokens"].shape
+    tf = (batch["patch_embeds"].shape[1]
+          if (cfg.frontend == "vision_patches" and "patch_embeds" in batch) else 0)
+    positions = model.positions_for(bsz, seq, tf)
+    window = model._window(long_mode)
+    enc_out = model.encode(params, batch["frames"]) if cfg.family == "encdec" else None
+
+    alive = jnp.asarray(alive)
+    exit_logits = []
+    bi = 0
+    for step in model.plan:
+        if step[0] == "scan":
+            _, kind, n, _ = step
+            y, _ = B.run_scan_block(cfg, kind, params["blocks"][bi], x,
+                                    positions, window, model.ctx, enc_out=enc_out)
+            a = alive[bi].astype(y.dtype)
+            x = a * y + (1.0 - a) * x           # skip hyperconnection
+            bi += 1
+        elif step[0] == "shared_attn":
+            y = B.run_shared_attn(cfg, params["shared_attn"], x, positions, window)
+            a = alive[bi - 1].astype(y.dtype) if bi else jnp.asarray(1.0, y.dtype)
+            x = a * y + (1.0 - a) * x
+        elif step[0] == "exit":
+            _, ei, _ = step
+            exit_logits.append(B.exit_head_logits(cfg, params["exit_heads"][ei], x))
+    h = apply_norm(cfg.norm, x, params["final_norm"])
+    return unembed(h, params.get("lm_head", params["embed"])), exit_logits
+
+
+def failout(key, n_blocks: int, survive_prob: float = 0.9):
+    """ResiliNet failout: iid Bernoulli alive mask (never all-dead)."""
+    alive = jax.random.bernoulli(key, survive_prob, (n_blocks,))
+    # guarantee at least one alive block
+    any_alive = jnp.any(alive)
+    alive = jnp.where(any_alive, alive, jnp.ones_like(alive))
+    return alive.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Planner-side resilience report
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ResilienceReport:
+    survive_prob: float
+    expected_accuracy_with_skip: float
+    expected_accuracy_without_skip: float
+
+    @property
+    def gain(self) -> float:
+        return (self.expected_accuracy_with_skip
+                - self.expected_accuracy_without_skip)
+
+
+def resilience_report(n_stages: int, stage_fail_prob: float,
+                      acc_full: float = 0.92, acc_per_missing: float = 0.06,
+                      ) -> ResilienceReport:
+    """Expected accuracy under independent stage failures.
+
+    Without skip hyperconnections any stage failure kills the pipeline
+    (accuracy falls to chance ~ 0).  With them, each missing stage degrades
+    accuracy by `acc_per_missing` (deepFogGuard's measured behaviour:
+    graceful degradation instead of collapse)."""
+    import math
+    p = stage_fail_prob
+    # with skip: expected missing stages = n*p
+    exp_missing = n_stages * p
+    acc_with = max(0.0, acc_full - acc_per_missing * exp_missing)
+    # without: pipeline works only if ALL stages alive
+    p_all = (1 - p) ** n_stages
+    acc_without = acc_full * p_all
+    return ResilienceReport(1 - p, acc_with, acc_without)

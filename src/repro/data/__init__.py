@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, lm_batch, batch_for_model, data_iterator
+
+__all__ = ["DataConfig", "lm_batch", "batch_for_model", "data_iterator"]

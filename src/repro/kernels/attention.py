@@ -1,0 +1,106 @@
+"""Block flash attention kernel (Pallas, TPU target).
+
+Compute hot spot of every dense/vlm arch's prefill and of zamba2's shared
+attention block.  Online-softmax block attention with causal and
+sliding-window masking: q tiles stay VMEM-resident while kv tiles stream;
+MXU-shaped [bq, hd] @ [hd, bk] score tiles; running (m, l, acc) rescaled
+per kv tile.  Sliding-window support is what makes the dense archs'
+long_500k variant sub-quadratic (DESIGN.md §3).
+
+Layout: inputs are [B*N, S, H] (head-major flattening done in ops.py so the
+grid is (BN, Sq/bq, Skv/bk)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  window: int, kv_len: int):
+    kj = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                       # [bq, H]
+    k = k_ref[0].astype(jnp.float32)                       # [bk, H]
+    v = v_ref[0].astype(jnp.float32)                       # [bk, H]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                    # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q [BN, Sq, H], k/v [BN, Skv, H] -> o [BN, Sq, H].
+
+    Sq % block_q == 0; Skv padded to block_k multiple internally (padded
+    keys masked off via kv_len).
+    """
+    bn, sq, h = q.shape
+    _, skv, _ = k.shape
+    assert sq % block_q == 0
+    pad = (-skv) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    skv_p = skv + pad
+    scale = 1.0 / (h ** 0.5)
+    grid = (bn, sq // block_q, skv_p // block_k)
+    kern = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, kv_len=skv)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, h), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, h), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, h), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, h), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bn, sq, h), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,83 @@
+"""Fused early-exit head kernel (Pallas, TPU target).
+
+The BranchyNet/Edgent hot spot: at every exit point, every token runs
+hidden -> logits -> softmax entropy -> exit decision.  Materializing the
+[T, V] logits in HBM just to reduce them to one entropy scalar per token is
+pure memory waste (V up to 202k in our zoo); this kernel streams vocab tiles
+through VMEM and keeps only online softmax statistics per token:
+
+    m   running max
+    s   running sum exp(l - m)
+    t   running sum l * exp(l - m)
+    entropy = m + log(s) - t/s            (derivation in ref.py)
+
+Grid: (T/bt, V/bv), vocab minor; per-tile matmul [bt, D] @ [D, bv] on the
+MXU (D, bt, bv all 128-aligned), accumulators live in VMEM out-refs and are
+updated online with the standard rescaling trick.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _exit_head_kernel(x_ref, w_ref, m_ref, s_ref, t_ref):
+    vj = pl.program_id(1)
+
+    @pl.when(vj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    x = x_ref[...].astype(jnp.float32)                 # [bt, D]
+    w = w_ref[...].astype(jnp.float32)                 # [D, bv]
+    logits = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [bt, bv]
+
+    m_prev = m_ref[...]                                # [bt, 1]
+    m_tile = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_tile)
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    s_ref[...] = s_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    t_ref[...] = t_ref[...] * corr + jnp.sum(logits * p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v", "interpret"))
+def exit_head_entropy(x, w, *, block_t: int = 128, block_v: int = 512,
+                      interpret: bool = True):
+    """x [T, D] (any float dtype), w [D, V] -> entropy [T] fp32.
+
+    T, V padded to block multiples by the wrapper in ops.py; this function
+    requires exact tiling.
+    """
+    tsz, d = x.shape
+    d2, v = w.shape
+    assert d == d2 and tsz % block_t == 0 and v % block_v == 0
+    grid = (tsz // block_t, v // block_v)
+    m, s, t = pl.pallas_call(
+        _exit_head_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_v), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tsz, 1), jnp.float32),
+            jax.ShapeDtypeStruct((tsz, 1), jnp.float32),
+            jax.ShapeDtypeStruct((tsz, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w)
+    return (m[:, 0] + jnp.log(s[:, 0]) - t[:, 0] / s[:, 0])

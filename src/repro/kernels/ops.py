@@ -1,0 +1,107 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding to tile multiples, head-major reshapes, GQA head expansion,
+and CPU-vs-TPU dispatch (interpret=True executes the kernel body in Python
+on CPU; on a real TPU backend the same call compiles to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attention as _attn
+from repro.kernels import exit_head as _exit
+from repro.kernels import feature_compress as _fc
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def exit_head_entropy(x, w, *, block_t: int = 128, block_v: int = 512,
+                      interpret: bool | None = None):
+    """x [..., D], w [D, V] -> entropy [...] fp32 (pads T and V)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    t = x2.shape[0]
+    v = w.shape[1]
+    bt = min(block_t, max(8, t))
+    pt = (-t) % bt
+    pv = (-v) % block_v
+    if pt:
+        x2 = jnp.pad(x2, ((0, pt), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, pv))) if pv else w
+    if pv:
+        # padded vocab columns would distort the softmax; push them to -inf
+        # by padding W with zeros and masking via a huge negative bias row?
+        # Simplest correct approach: pad with a column of -1e30 * onehot is
+        # not expressible in W alone — instead fall back to extending x with
+        # a zero feature and W with a bias row: logits_pad = -1e30.
+        bias = jnp.zeros((1, v + pv), w.dtype).at[0, v:].set(-1e30)
+        x2 = jnp.concatenate([x2, jnp.ones((x2.shape[0], 1), x2.dtype)], axis=1)
+        wp = jnp.concatenate([wp, bias.astype(wp.dtype)], axis=0)
+    ent = _exit.exit_head_entropy(x2, wp, block_t=bt, block_v=block_v,
+                                  interpret=interpret)
+    return ent[:t].reshape(lead)
+
+
+def compress_rows(x, *, interpret: bool | None = None):
+    """x [..., D] -> (q int8 [..., D], scale fp32 [..., 1])."""
+    interpret = _on_cpu() if interpret is None else interpret
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    t = x2.shape[0]
+    bt = min(256, max(8, t))
+    pad = (-t) % bt
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    q, s = _fc.quantize_rows(x2, block_t=bt, interpret=interpret)
+    return q[:t].reshape(*lead, d), s[:t].reshape(*lead, 1)
+
+
+def decompress_rows(q, scale, *, dtype=jnp.bfloat16,
+                    interpret: bool | None = None):
+    interpret = _on_cpu() if interpret is None else interpret
+    lead = q.shape[:-1]
+    d = q.shape[-1]
+    q2 = q.reshape(-1, d)
+    s2 = scale.reshape(-1, 1)
+    t = q2.shape[0]
+    bt = min(256, max(8, t))
+    pad = (-t) % bt
+    if pad:
+        q2 = jnp.pad(q2, ((0, pad), (0, 0)))
+        s2 = jnp.pad(s2, ((0, pad), (0, 0)))
+    x = _fc.dequantize_rows(q2, s2, block_t=bt, dtype=dtype,
+                            interpret=interpret)
+    return x[:t].reshape(*lead, d)
+
+
+def flash_attention_bshd(q, k, v, *, causal: bool = True, window: int = 0,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool | None = None):
+    """q [B, Sq, Nq, H], k/v [B, Skv, Nkv, H] (GQA expanded here)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    b, sq, nq, h = q.shape
+    nkv = k.shape[2]
+    if nkv != nq:
+        rep = nq // nkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * nq, sq, h)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * nq, k.shape[1], h)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * nq, v.shape[1], h)
+    bq = min(block_q, sq)
+    pad = (-sq) % bq
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0)))
+    o = _attn.flash_attention(qf, kf, vf, causal=causal, window=window,
+                              block_q=bq, block_k=block_k,
+                              interpret=interpret)
+    o = o[:, :sq]
+    return o.reshape(b, nq, sq, h).transpose(0, 2, 1, 3)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose).
+
+Entropy derivation used by exit_head:  with logZ = m + log s,
+  H = -sum_i p_i log p_i = logZ - sum_i p_i l_i = m + log(s) - t/s
+where s = sum exp(l-m), t = sum l*exp(l-m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def exit_head_entropy_ref(x, w):
+    """x [T, D], w [D, V] -> entropy [T] fp32."""
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def quantize_rows_ref(x):
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_rows_ref(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [BN, Sq, H], k/v [BN, Skv, H] -> [BN, Sq, H]."""
+    sq, skv = q.shape[1], k.shape[1]
+    h = q.shape[-1]
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (h ** 0.5)
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kj <= qi
+    if window:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,343 @@
+"""HLO-text cost analysis with while-loop trip-count scaling.
+
+XLA's HloCostAnalysis (what `compiled.cost_analysis()` reports) counts a
+while-loop body ONCE, so lax.scan-stacked layers — the backbone of every
+arch here — are undercounted by a factor of n_layers.  This module re-derives
+flops / bytes-accessed / collective bytes from the post-optimization
+per-device HLO text, multiplying loop bodies by their trip counts (parsed
+from the loop-condition constant, which is exact for scan-generated loops).
+
+Counting rules (mirrors HloCostAnalysis to first order):
+- dot: flops = 2 * prod(output dims) * prod(lhs contracting dims);
+  bytes = operands + output.
+- fusion: bytes = operands + output (internal ops fused, no HBM traffic);
+  flops = recursed dots inside the fused computation (kOutput fusions).
+- while: (body + cond) * trip_count.
+- conditional: max over branches (one branch executes).
+- collectives (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute): collective bytes += output bytes (all-reduce x2 when
+  converted to time); async -start/-done pairs counted once.
+- parameter/constant/tuple/get-tuple-element/bitcast: free.
+- every other top-level op: bytes = operands + output.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)"
+    r"\[([0-9,]*)\]")
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "rng-get-and-update-state",
+    "domain", "opt-barrier",
+}
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        d = [int(x) for x in dims.split(",") if x] if dims else []
+        out.append((dt, d))
+    return out
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    line: str
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+"
+    r"([\w\-]+)\((.*)$")
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.*\{\s*$")
+
+
+ROOTS: Dict[str, str] = {}   # computation -> root instruction name (per parse)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Dict[str, Instr]], Optional[str]]:
+    """Returns ({computation: {instr_name: Instr}}, entry_name).
+    Also fills ROOTS[computation] = root instr name."""
+    comps: Dict[str, Dict[str, Instr]] = {}
+    ROOTS.clear()
+    entry = None
+    cur: Optional[Dict[str, Instr]] = None
+    cur_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur_name = m.group(1)
+                cur = {}
+                if line.startswith("ENTRY"):
+                    entry = cur_name
+            continue
+        if line.startswith("}"):
+            comps[cur_name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, tstr, op, rest = m.groups()
+        if line.lstrip().startswith("ROOT"):
+            ROOTS[cur_name] = name
+        # operand names: up to the closing paren of the op call
+        depth = 1
+        i = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        opstr = rest[:i]
+        operands = _OPERAND_RE.findall(opstr)
+        cur[name] = Instr(name, tstr, op, operands, line)
+    return comps, entry
+
+
+_CALL_ATTR = re.compile(r"(?:calls|body|condition|to_apply)=%([\w.\-]+)")
+_BRANCHES_ATTR = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_DOT_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVE_KINDS})
+    # top contributors: label -> (bytes, coll_bytes) aggregated by op_name
+    top: Dict[str, Tuple[float, float]] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        for k in self.collective:
+            self.collective[k] += other.collective[k] * scale
+        for label, (b, cb) in other.top.items():
+            ob, ocb = self.top.get(label, (0.0, 0.0))
+            self.top[label] = (ob + b * scale, ocb + cb * scale)
+        self._trim()
+
+    def note(self, instr_line: str, op: str, nbytes: float, cbytes: float = 0.0):
+        m = _META_RE.search(instr_line)
+        if m:
+            label = f"{op}:{m.group(1)}"
+        else:
+            # no metadata: label by output type so big anonymous ops are
+            # still attributable
+            mt = re.search(r"=\s*((?:\([^)]*\)|[\w\[\],{}]+))", instr_line)
+            label = f"{op}:{(mt.group(1)[:60] if mt else '?')}"
+        b, cb = self.top.get(label, (0.0, 0.0))
+        self.top[label] = (b + nbytes, cb + cbytes)
+        self._trim()
+
+    def _trim(self, k: int = 60):
+        if len(self.top) > 2 * k:
+            keep = sorted(self.top.items(), key=lambda kv: -max(kv[1]))[:k]
+            self.top = dict(keep)
+
+    def top_bytes(self, k: int = 15):
+        return sorted(self.top.items(), key=lambda kv: -kv[1][0])[:k]
+
+    def top_collective(self, k: int = 15):
+        return [t for t in sorted(self.top.items(), key=lambda kv: -kv[1][1])[:k]
+                if t[1][1] > 0]
+
+
+def _operand_bytes(instr: Instr, comp: Dict[str, Instr]) -> float:
+    total = 0.0
+    for o in instr.operands:
+        d = comp.get(o)
+        if d is not None and d.op not in ("constant",):
+            total += _shape_bytes(d.type_str)
+    return total
+
+
+def _dot_flops(instr: Instr, comp: Dict[str, Instr]) -> float:
+    out_el = 0.0
+    for dt, dims in _shape_dims(instr.type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        out_el += n
+    m = _DOT_LHS_C.search(instr.line)
+    contract = 1
+    if m and instr.operands:
+        lhs = comp.get(instr.operands[0])
+        if lhs is not None:
+            sd = _shape_dims(lhs.type_str)
+            if sd:
+                _, dims = sd[0]
+                for idx in (int(x) for x in m.group(1).split(",") if x):
+                    if idx < len(dims):
+                        contract *= dims[idx]
+    return 2.0 * out_el * contract
+
+
+def _trip_count(cond_comp: Dict[str, Instr]) -> int:
+    best = 1
+    for instr in cond_comp.values():
+        for m in _CONST_INT.finditer(instr.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze(text: str) -> Cost:
+    comps, entry = parse_hlo(text)
+    memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def comp_cost(name: str, fusion_ctx: bool = False) -> Cost:
+        key = (name, fusion_ctx)
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()          # break cycles defensively
+        comp = comps.get(name, {})
+        c = Cost()
+        for instr in comp.values():
+            op = instr.op
+            if op in _FREE_OPS:
+                continue
+            if op == "while":
+                body = cond = None
+                for m in _CALL_ATTR.finditer(instr.line):
+                    pass
+                mb = re.search(r"body=%([\w.\-]+)", instr.line)
+                mc = re.search(r"condition=%([\w.\-]+)", instr.line)
+                trips = _trip_count(comps.get(mc.group(1), {})) if mc else 1
+                if mb:
+                    c.add(comp_cost(mb.group(1)), trips)
+                if mc:
+                    c.add(comp_cost(mc.group(1)), trips)
+                continue
+            if op == "conditional":
+                mbr = _BRANCHES_ATTR.search(instr.line)
+                branches = (_OPERAND_RE.findall(mbr.group(1)) if mbr else [])
+                if not branches:
+                    branches = [m for m in _CALL_ATTR.findall(instr.line)]
+                if branches:
+                    sub = [comp_cost(b) for b in branches]
+                    worst = max(sub, key=lambda s: (s.flops, s.bytes))
+                    c.add(worst)
+                c.bytes += _operand_bytes(instr, comp) + _shape_bytes(instr.type_str)
+                continue
+            if op == "fusion":
+                m = re.search(r"calls=%([\w.\-]+)", instr.line)
+                inplace_bytes = None
+                if m:
+                    called = m.group(1)
+                    inner = comp_cost(called, fusion_ctx=True)
+                    c.flops += inner.flops
+                    for k in c.collective:
+                        c.collective[k] += inner.collective[k]
+                    # in-place update fusions: XLA updates the buffer in
+                    # place, so traffic is ~2x the UPDATED SLICE, not the
+                    # whole buffer (critical for scan residuals / kv caches)
+                    root_name = ROOTS.get(called)
+                    root = comps.get(called, {}).get(root_name) if root_name else None
+                    if root is not None and root.op == "dynamic-update-slice":
+                        upd = comps[called].get(root.operands[1]) if len(root.operands) > 1 else None
+                        upd_b = _shape_bytes(upd.type_str) if upd is not None else 0.0
+                        inplace_bytes = 2.0 * upd_b
+                    elif root is not None and (
+                            root.op == "dynamic-slice"
+                            or (root.op == "bitcast" and any(
+                                i.op == "dynamic-slice"
+                                for i in comps.get(called, {}).values()))):
+                        inplace_bytes = 2.0 * _shape_bytes(instr.type_str)
+                nb = (inplace_bytes if inplace_bytes is not None
+                      else _operand_bytes(instr, comp) + _shape_bytes(instr.type_str))
+                c.bytes += nb
+                c.note(instr.line, op, nb)
+                continue
+            if op == "dynamic-update-slice":
+                upd = comp.get(instr.operands[1]) if len(instr.operands) > 1 else None
+                nb = 2.0 * (_shape_bytes(upd.type_str) if upd is not None else
+                            _shape_bytes(instr.type_str))
+                c.bytes += nb
+                c.note(instr.line, op, nb)
+                continue
+            if op == "dynamic-slice":
+                nb = 2.0 * _shape_bytes(instr.type_str)
+                c.bytes += nb
+                c.note(instr.line, op, nb)
+                continue
+            if op in ("call", "async-start"):
+                m = _CALL_ATTR.search(instr.line)
+                if m:
+                    c.add(comp_cost(m.group(1)))
+                continue
+            is_coll = False
+            for kind in _COLLECTIVE_KINDS:
+                if op == kind or op == kind + "-start":
+                    cb = _shape_bytes(instr.type_str)
+                    c.collective[kind] += cb
+                    nb = _operand_bytes(instr, comp) + cb
+                    c.bytes += nb
+                    c.note(instr.line, op, nb, cb)
+                    is_coll = True
+                    break
+                if op == kind + "-done":
+                    is_coll = True
+                    break
+            if is_coll:
+                continue
+            if op == "dot":
+                c.flops += _dot_flops(instr, comp)
+                if not fusion_ctx:
+                    nb = (_operand_bytes(instr, comp)
+                          + _shape_bytes(instr.type_str))
+                    c.bytes += nb
+                    c.note(instr.line, op, nb)
+                continue
+            # generic op
+            if not fusion_ctx:
+                nb = (_operand_bytes(instr, comp)
+                      + _shape_bytes(instr.type_str))
+                c.bytes += nb
+                if nb > 0:
+                    c.note(instr.line, op, nb)
+            # elementwise transcendental flops ignored (dot-dominated models)
+        memo[key] = c
+        return c
+
+    return comp_cost(entry) if entry else Cost()

@@ -1,0 +1,143 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute   = HLO_FLOPs / (chips * peak)
+    memory    = HLO_bytes / (chips * hbm_bw)
+    collective= collective_bytes / link_bw  (per-chip bytes from the SPMD
+                per-device HLO module, so no further division by chips)
+
+collective_bytes is parsed from the post-optimization HLO text: we sum the
+OUTPUT buffer sizes of all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute ops (all-reduce counted twice: reduce-scatter +
+all-gather phases of a ring).  This is the standard first-order estimate;
+ring-factor (n-1)/n refinements are ignored.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (brief's constants).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*\)|[^ ]+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind output bytes (per device), from HLO text."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:80]:
+            # async pairs: count the -start only (done repeats the buffer)
+            continue
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective: Dict[str, float]          # per-device bytes by kind
+    model_flops: float                    # 6*N*D (train) or 2*N_active*tok (serve)
+    peak_bytes_per_device: Optional[float] = None
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v * _COLLECTIVES[k] for k, v in self.collective.items())
+
+    # NOTE: compiled.cost_analysis() runs on the post-SPMD per-device module,
+    # so hlo_flops / hlo_bytes / collective_bytes are already PER-CHIP —
+    # divide by per-chip peak only.  (The brief's "/ chips" formulation
+    # assumes whole-program numbers; per-device numbers / per-chip peaks is
+    # the same quantity.)
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops * self.chips, 1.0)
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective": self.collective,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "peak_bytes_per_device": self.peak_bytes_per_device,
+        }
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """Reference useful FLOPs: 6*N_active*tokens (train) / 2*N_active*tokens
+    (one decode step) — the §Roofline MODEL_FLOPS term."""
+    n = cfg.active_param_count() - cfg.vocab_size * cfg.d_model
+    if kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # one token per request

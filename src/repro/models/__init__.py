@@ -1,0 +1,4 @@
+from repro.models.model import Model, ModelOutputs
+from repro.models.ffn import ShardCtx, SINGLE
+
+__all__ = ["Model", "ModelOutputs", "ShardCtx", "SINGLE"]

@@ -1,0 +1,311 @@
+"""Attention: GQA (full / sliding-window), MLA (DeepSeek-V3), cross-attention.
+
+Pure-jnp reference implementations used by the model builder.  The Pallas
+block-attention kernel in ``repro.kernels.attention`` is a drop-in for the
+prefill path (enabled via ``use_kernel``; validated against this code in
+tests).
+
+Conventions:  x [B, S, D];  q/k/v [B, S, N, H];  caches [B, S_max, Nkv, H].
+MLA latent cache: c_kv [B, S_max, R], k_rope [B, S_max, Hr].
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_norm, apply_norm, scaled_init
+from repro.models.rope import apply_positional, apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg):
+    d, nq, nkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": scaled_init(ks[0], (d, nq, hd), d),
+        "wk": scaled_init(ks[1], (d, nkv, hd), d),
+        "wv": scaled_init(ks[2], (d, nkv, hd), d),
+        "wo": scaled_init(ks[3], (nq, hd, d), nq * hd),
+    }
+
+
+def init_mla(key, cfg):
+    d = cfg.d_model
+    nq = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rph, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": scaled_init(ks[0], (d, qr), d),
+        "q_norm": init_norm("rmsnorm", ks[1], qr),
+        "wq_b": scaled_init(ks[1], (qr, nq, nope + rph), qr),
+        "wkv_a": scaled_init(ks[2], (d, kvr + rph), d),
+        "kv_norm": init_norm("rmsnorm", ks[3], kvr),
+        "wk_b": scaled_init(ks[3], (kvr, nq, nope), kvr),
+        "wv_b": scaled_init(ks[4], (kvr, nq, vh), kvr),
+        "wo": scaled_init(ks[5], (nq, vh, d), nq * vh),
+    }
+
+
+def init_attention(key, cfg):
+    return init_mla(key, cfg) if cfg.attention == "mla" else init_gqa(key, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+def make_mask(q_len: int, kv_len: int, *, causal: bool, window: int = 0,
+              q_offset: int = 0):
+    """Boolean [q_len, kv_len] mask.  window>0 = sliding window."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        mask &= kj <= qi
+    if window:
+        mask &= kj > qi - window
+    return mask
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q [B,Sq,Nq,H], k/v [B,Skv,Nkv,H] with Nq = G*Nkv."""
+    b, sq, nq, h = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    qg = q.reshape(b, sq, nkv, g, h)
+    scores = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnh->bsngh", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, nq, h).astype(q.dtype)
+
+
+# Chunked (flash-style) attention in pure lax: q chunks in a static Python
+# loop (so each chunk sees only its causal kv prefix — exact flops), kv
+# chunks in a lax.scan carrying online-softmax stats.  The [Sq, Skv] score
+# tensor never materializes in HBM — this is what moves the memory roofline
+# term down for long-sequence prefill/train (EXPERIMENTS.md §Perf it. 2/5).
+#
+# Toggle: REPRO_ATTN=chunked enables it (beyond-paper optimized profile);
+# default "dense" keeps the baseline implementation the §Roofline table
+# measures.
+import os as _os
+ATTN_IMPL = _os.environ.get("REPRO_ATTN", "dense")
+CHUNKED_THRESHOLD = 2048   # use chunked path when Sq*Skv exceeds threshold^2
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: int, scale: float,
+                  q_chunk: int = 1024, kv_chunk: int = 1024):
+    b, sq, nq, h = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    assert sq % qc == 0 and skv % kc == 0
+    # block inputs stay bf16 (MXU-native); softmax stats fp32 (flash-style)
+    kf = k.astype(jnp.bfloat16)
+    vf = v.astype(jnp.bfloat16)
+    outs = []
+    for qi in range(sq // qc):
+        q0 = qi * qc
+        qg = q[:, q0:q0 + qc].reshape(b, qc, nkv, g, h).astype(jnp.bfloat16)
+        # static kv range for this q chunk (causal/window pruning)
+        hi = min(skv, (q0 + qc)) if causal else skv
+        lo = max(0, q0 - window - kc + 1) if window else 0
+        lo = (lo // kc) * kc
+        hi = ((hi + kc - 1) // kc) * kc
+        nkc = (hi - lo) // kc
+        kv_slice_k = kf[:, lo:hi].reshape(b, nkc, kc, nkv, h)
+        kv_slice_v = vf[:, lo:hi].reshape(b, nkc, kc, nkv, h)
+        q_pos = q0 + jnp.arange(qc)
+
+        def body(carry, inp):
+            m_run, l_run, acc = carry
+            kb, vb, k0 = inp                      # [B,kc,nkv,h], [], k0 scalar
+            s = jnp.einsum("bsngh,btnh->bngst", qg, kb,
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = k0 + jnp.arange(kc)
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bngst,btnh->bngsh", p.astype(jnp.bfloat16), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, nkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, nkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, nkv, g, qc, h), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.moveaxis(kv_slice_k, 1, 0), jnp.moveaxis(kv_slice_v, 1, 0),
+             lo + kc * jnp.arange(nkc)))
+        o = acc / jnp.maximum(l_f, 1e-30)[..., None]       # [B,nkv,g,qc,h]
+        outs.append(jnp.moveaxis(o, 3, 1).reshape(b, qc, nq, h))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def gqa_forward(cfg, params, x, positions, *, causal: bool = True,
+                window: int = 0, kv_x: Optional[jnp.ndarray] = None,
+                rope_on: bool = True):
+    """Full-sequence attention.  kv_x != None -> cross attention (no mask)."""
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dnh->bsnh", src, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", src, params["wv"].astype(x.dtype))
+    if rope_on and kv_x is None:
+        q = apply_positional(q, positions, cfg.rope, cfg.rope_theta)
+        k = apply_positional(k, positions, cfg.rope, cfg.rope_theta)
+    sq, skv = q.shape[1], k.shape[1]
+    if ATTN_IMPL == "chunked" and kv_x is None \
+            and sq * skv > CHUNKED_THRESHOLD ** 2 and sq % 1024 == 0 \
+            and skv % 1024 == 0:
+        out = _sdpa_chunked(q, k, v, causal=causal, window=window,
+                            scale=1.0 / math.sqrt(hd))
+    else:
+        if kv_x is None:
+            mask = make_mask(sq, skv, causal=causal, window=window)
+        else:
+            mask = jnp.ones((sq, skv), bool)
+        out = _sdpa(q, k, v, mask, 1.0 / math.sqrt(hd))
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype)), (k, v)
+
+
+def gqa_decode(cfg, params, x, cache_k, cache_v, position, *, window: int = 0):
+    """One-token decode.  x [B,1,D]; caches [B,Smax,Nkv,H]; position [] int.
+
+    window>0: the cache is a RING BUFFER of size window (sub-linear memory
+    for long_500k); slot = position % window and scores use gathered
+    absolute positions for RoPE + masking.
+    """
+    hd = cfg.resolved_head_dim
+    smax = cache_k.shape[1]
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"].astype(x.dtype))
+    pos = jnp.asarray(position)[None]                     # [1]
+    q = apply_positional(q, pos[None].astype(jnp.int32), cfg.rope, cfg.rope_theta)
+    k = apply_positional(k, pos[None].astype(jnp.int32), cfg.rope, cfg.rope_theta)
+    slot = (position % smax) if window else jnp.minimum(position, smax - 1)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    # validity of each cache slot
+    idx = jnp.arange(smax)
+    if window:
+        # slot i holds absolute position: the most recent occupant
+        age = (slot - idx) % smax                          # 0..smax-1, 0 = newest
+        valid = age < jnp.minimum(position + 1, smax)
+    else:
+        valid = idx <= position
+    b, _, nq, _ = q.shape
+    nkv = cache_k.shape[2]
+    g = nq // nkv
+    qg = q.reshape(b, 1, nkv, g, hd)
+    scores = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32),
+                        cache_k.astype(jnp.float32)) / math.sqrt(hd)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnh->bsngh", probs, cache_v.astype(jnp.float32))
+    out = out.reshape(b, 1, nq, hd).astype(x.dtype)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+    return y, (cache_k, cache_v)
+
+
+def cross_decode(cfg, params, x, enc_k, enc_v):
+    """Cross-attention decode step against precomputed encoder k/v."""
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
+    mask = jnp.ones((1, enc_k.shape[1]), bool)
+    out = _sdpa(q, enc_k, enc_v, mask, 1.0 / math.sqrt(hd))
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3) — latent-compressed attention with matrix absorption
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(cfg, params, x, positions):
+    nope, rph = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(x.dtype))
+    cq = apply_norm("rmsnorm", cq, params["q_norm"])
+    q = jnp.einsum("bsr,rnh->bsnh", cq, params["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(x.dtype))
+    c_kv, k_rope = ckv[..., : cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c_kv = apply_norm("rmsnorm", c_kv, params["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_scores_ctx(cfg, params, q_nope, q_rope, c_kv, k_rope, mask):
+    """Absorbed-matrix attention: scores & context from the latent cache."""
+    nope, rph = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    scale = 1.0 / math.sqrt(nope + rph)
+    # absorb wk_b into q:  q_lat [B,Sq,N,R]
+    q_lat = jnp.einsum("bsnh,rnh->bsnr", q_nope, params["wk_b"].astype(q_nope.dtype))
+    scores = jnp.einsum("bsnr,btr->bnst", q_lat.astype(jnp.float32),
+                        c_kv.astype(jnp.float32))
+    scores += jnp.einsum("bsnh,bth->bnst", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+    scores = jnp.where(mask[None, None], scores * scale, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bnst,btr->bsnr", probs, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bsnr,rnv->bsnv", ctx_lat.astype(q_nope.dtype),
+                     params["wv_b"].astype(q_nope.dtype))
+    return out
+
+
+def mla_forward(cfg, params, x, positions, *, causal: bool = True, window: int = 0):
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, params, x, positions)
+    mask = make_mask(x.shape[1], x.shape[1], causal=causal, window=window)
+    out = mla_scores_ctx(cfg, params, q_nope, q_rope, c_kv, k_rope, mask)
+    y = jnp.einsum("bsnv,nvd->bsd", out, params["wo"].astype(x.dtype))
+    return y, (c_kv, k_rope)
+
+
+def mla_decode(cfg, params, x, cache_ckv, cache_krope, position, *, window: int = 0):
+    """One-token MLA decode against the latent cache (ring buffer if window)."""
+    smax = cache_ckv.shape[1]
+    pos = jnp.asarray(position)[None][None].astype(jnp.int32)  # [1,1]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, params, x, pos)
+    slot = (position % smax) if window else jnp.minimum(position, smax - 1)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv.astype(cache_ckv.dtype), slot, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, k_rope.astype(cache_krope.dtype), slot, axis=1)
+    idx = jnp.arange(smax)
+    if window:
+        age = (slot - idx) % smax
+        valid = age < jnp.minimum(position + 1, smax)
+    else:
+        valid = idx <= position
+    mask = valid[None, :]                                  # [Sq=1, Skv]
+    out = mla_scores_ctx(cfg, params, q_nope, q_rope, cache_ckv, cache_krope, mask)
+    y = jnp.einsum("bsnv,nvd->bsd", out, params["wo"].astype(x.dtype))
+    return y, (cache_ckv, cache_krope)

@@ -1,0 +1,430 @@
+"""Execution plan + block (layer-group) implementations.
+
+Every architecture compiles to a PLAN: an ordered list of steps
+
+    ("scan",  kind, n_units, layer0)   — lax.scan over n_units stacked layers
+    ("shared_attn", site_idx)          — zamba2 weight-shared attention block
+    ("exit", exit_idx, layer)          — early-exit head / partition boundary
+
+Scan kinds: dense | moe | pair | mamba | mlstm | slstm | decx | enc.
+Plan boundaries are exactly the survey's partition points: tier placement,
+early exits and failure bypasses all operate on plan steps (core/*).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import apply_norm, init_norm, scaled_init
+from repro.models.ffn import ShardCtx, SINGLE
+
+
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+
+def layer_kind(cfg, i: int) -> str:
+    if cfg.family in ("dense", "vlm"):
+        return "dense"
+    if cfg.family == "moe":
+        m = cfg.moe
+        if i < m.first_dense_layers:
+            return "dense"
+        if m.layer_period > 1:
+            return "pair"              # grouped (dense, moe) unit
+        return "moe"
+    if cfg.family == "hybrid":
+        return "mamba"
+    if cfg.family == "ssm":
+        return "slstm" if i in cfg.ssm.slstm_layers else "mlstm"
+    if cfg.family == "encdec":
+        return "decx"
+    raise ValueError(cfg.family)
+
+
+def shared_attn_sites(cfg) -> Tuple[int, ...]:
+    if not cfg.shared_attn_period:
+        return ()
+    p = cfg.shared_attn_period
+    return tuple(i for i in range(cfg.num_layers) if i % p == p - 1)
+
+
+def build_plan(cfg) -> List[Tuple]:
+    """Returns the ordered plan (see module docstring)."""
+    L = cfg.num_layers
+    exits = set(cfg.exits.exit_layers)
+    sa = set(i + 1 for i in shared_attn_sites(cfg))        # boundary AFTER site
+    # boundaries where a scan must break
+    bounds = {0, L} | exits | sa
+    for i in range(1, L):
+        if layer_kind(cfg, i) != layer_kind(cfg, i - 1):
+            bounds.add(i)
+    if cfg.family == "moe" and cfg.moe.layer_period > 1:
+        # pair units must not be split mid-unit
+        period = cfg.moe.layer_period
+        bounds = {b for b in bounds
+                  if b <= cfg.moe.first_dense_layers or (b - cfg.moe.first_dense_layers) % period == 0
+                  or b == L}
+    bl = sorted(bounds)
+    plan: List[Tuple] = []
+    exit_idx = 0
+    sa_idx = 0
+    for a, b in zip(bl[:-1], bl[1:]):
+        kind = layer_kind(cfg, a)
+        n = b - a
+        if kind == "pair":
+            n = n // cfg.moe.layer_period
+        plan.append(("scan", kind, n, a))
+        if b in sa:
+            plan.append(("shared_attn", sa_idx))
+            sa_idx += 1
+        if b in exits:
+            plan.append(("exit", exit_idx, b))
+            exit_idx += 1
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init by kind
+# ---------------------------------------------------------------------------
+
+def _init_dense_layer(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": init_norm(cfg.norm, ks[0], cfg.d_model),
+        "attn": attn.init_attention(ks[1], cfg),
+        "ln2": init_norm(cfg.norm, ks[2], cfg.d_model),
+        "ffn": ffn_mod.init_ffn(ks[3], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _init_moe_layer(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": init_norm(cfg.norm, ks[0], cfg.d_model),
+        "attn": attn.init_attention(ks[1], cfg),
+        "ln2": init_norm(cfg.norm, ks[2], cfg.d_model),
+        "moe": ffn_mod.init_moe(ks[3], cfg),
+    }
+
+
+def _init_pair_unit(key, cfg):
+    ka, kb = jax.random.split(key)
+    return {"a": _init_dense_layer(ka, cfg), "b": _init_moe_layer(kb, cfg)}
+
+
+def _init_mamba_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln": init_norm(cfg.norm, k1, cfg.d_model),
+            "mamba": ssm_mod.init_mamba2(k2, cfg)}
+
+
+def _init_mlstm_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln": init_norm(cfg.norm, k1, cfg.d_model),
+            "mlstm": xlstm_mod.init_mlstm(k2, cfg)}
+
+
+def _init_slstm_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln": init_norm(cfg.norm, k1, cfg.d_model),
+            "slstm": xlstm_mod.init_slstm(k2, cfg)}
+
+
+def _init_decx_layer(key, cfg):
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": init_norm(cfg.norm, ks[0], cfg.d_model),
+        "self_attn": attn.init_gqa(ks[1], cfg),
+        "ln2": init_norm(cfg.norm, ks[2], cfg.d_model),
+        "cross_attn": attn.init_gqa(ks[3], cfg),
+        "ln3": init_norm(cfg.norm, ks[4], cfg.d_model),
+        "ffn": ffn_mod.init_ffn(ks[5], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+_INIT = {
+    "dense": _init_dense_layer, "moe": _init_moe_layer, "pair": _init_pair_unit,
+    "mamba": _init_mamba_layer, "mlstm": _init_mlstm_layer,
+    "slstm": _init_slstm_layer, "decx": _init_decx_layer,
+    "enc": _init_dense_layer,
+}
+
+
+def init_scan_block(key, cfg, kind: str, n_units: int):
+    """Stacked params [n_units, ...] for a scanned block."""
+    keys = jax.random.split(key, n_units)
+    layers = [_INIT[kind](k, cfg) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_shared_attn(key, cfg):
+    """zamba2 shared block: attention + FFN with own norms (ONE set of weights)."""
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": init_norm(cfg.norm, ks[0], cfg.d_model),
+        "attn": attn.init_gqa(ks[1], cfg),
+        "ln2": init_norm(cfg.norm, ks[2], cfg.d_model),
+        "ffn": ffn_mod.init_ffn(ks[3], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def init_exit_head(key, cfg):
+    k1, k2 = jax.random.split(key)
+    hid = cfg.exits.head_hidden
+    p = {"norm": init_norm(cfg.norm, k1, cfg.d_model)}
+    if hid:
+        p["w_h"] = scaled_init(k1, (cfg.d_model, hid), cfg.d_model)
+        p["w"] = scaled_init(k2, (hid, cfg.vocab_size), hid)
+    else:
+        p["w"] = scaled_init(k2, (cfg.d_model, cfg.vocab_size), cfg.d_model)
+    return p
+
+
+def exit_head_logits(cfg, p, x):
+    h = apply_norm(cfg.norm, x, p["norm"])
+    if "w_h" in p:
+        h = jax.nn.gelu(h @ p["w_h"].astype(h.dtype))
+    return jnp.einsum("...d,dv->...v", h, p["w"].astype(h.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Forward (full sequence) per kind
+# ---------------------------------------------------------------------------
+
+def _dense_fwd(cfg, lp, x, positions, window, ctx, causal=True):
+    h = apply_norm(cfg.norm, x, lp["ln1"])
+    if cfg.attention == "mla":
+        y, _ = attn.mla_forward(cfg, lp["attn"], h, positions, causal=causal,
+                                window=window)
+    else:
+        y, _ = attn.gqa_forward(cfg, lp["attn"], h, positions, causal=causal,
+                                window=window)
+    x = x + y
+    h = apply_norm(cfg.norm, x, lp["ln2"])
+    return x + ffn_mod.ffn_forward(lp["ffn"], h, cfg.act), jnp.float32(0.0)
+
+
+def _moe_fwd(cfg, lp, x, positions, window, ctx):
+    h = apply_norm(cfg.norm, x, lp["ln1"])
+    if cfg.attention == "mla":
+        y, _ = attn.mla_forward(cfg, lp["attn"], h, positions, window=window)
+    else:
+        y, _ = attn.gqa_forward(cfg, lp["attn"], h, positions, window=window)
+    x = x + y
+    h = apply_norm(cfg.norm, x, lp["ln2"])
+    y, aux = ffn_mod.moe_ffn(lp["moe"], h, cfg, ctx)
+    return x + y, aux
+
+
+def _pair_fwd(cfg, lp, x, positions, window, ctx):
+    x, _ = _dense_fwd(cfg, lp["a"], x, positions, window, ctx)
+    return _moe_fwd(cfg, lp["b"], x, positions, window, ctx)
+
+
+def _mamba_fwd(cfg, lp, x, positions, window, ctx):
+    h = apply_norm(cfg.norm, x, lp["ln"])
+    y, _ = ssm_mod.mamba2_forward(cfg, lp["mamba"], h)
+    return x + y, jnp.float32(0.0)
+
+
+def _mlstm_fwd(cfg, lp, x, positions, window, ctx):
+    h = apply_norm(cfg.norm, x, lp["ln"])
+    y, _ = xlstm_mod.mlstm_forward(cfg, lp["mlstm"], h)
+    return x + y, jnp.float32(0.0)
+
+
+def _slstm_fwd(cfg, lp, x, positions, window, ctx):
+    h = apply_norm(cfg.norm, x, lp["ln"])
+    y, _ = xlstm_mod.slstm_forward(cfg, lp["slstm"], h)
+    return x + y, jnp.float32(0.0)
+
+
+def _make_decx_fwd(enc_out):
+    def f(cfg, lp, x, positions, window, ctx):
+        h = apply_norm(cfg.norm, x, lp["ln1"])
+        y, _ = attn.gqa_forward(cfg, lp["self_attn"], h, positions, causal=True,
+                                window=window)
+        x = x + y
+        h = apply_norm(cfg.norm, x, lp["ln2"])
+        y, _ = attn.gqa_forward(cfg, lp["cross_attn"], h, positions, kv_x=enc_out)
+        x = x + y
+        h = apply_norm(cfg.norm, x, lp["ln3"])
+        return x + ffn_mod.ffn_forward(lp["ffn"], h, cfg.act), jnp.float32(0.0)
+    return f
+
+
+def _enc_fwd(cfg, lp, x, positions, window, ctx):
+    return _dense_fwd(cfg, lp, x, positions, window, ctx, causal=False)
+
+
+def run_scan_block(cfg, kind: str, bparams, x, positions, window, ctx,
+                   enc_out=None, remat: bool = False):
+    """Scan a stacked block over its layers.  Returns (x, aux_sum).
+
+    remat=True wraps the per-layer body in jax.checkpoint (activation
+    rematerialization) — used by the training path so the backward pass
+    re-computes layer internals instead of saving them.
+    """
+    fwd = {
+        "dense": _dense_fwd, "moe": _moe_fwd, "pair": _pair_fwd,
+        "mamba": _mamba_fwd, "mlstm": _mlstm_fwd, "slstm": _slstm_fwd,
+        "decx": _make_decx_fwd(enc_out), "enc": _enc_fwd,
+    }[kind]
+
+    def layer(lp, xx):
+        return fwd(cfg, lp, xx, positions, window, ctx)
+
+    if remat:
+        layer = jax.checkpoint(layer)
+
+    def body(carry, lp):
+        xx, aux = layer(lp, carry)
+        return xx, aux
+
+    n = jax.tree.leaves(bparams)[0].shape[0]
+    if n == 1:
+        lp = jax.tree.map(lambda a: a[0], bparams)
+        x, aux = layer(lp, x)
+        return x, aux
+    x, auxs = jax.lax.scan(body, x, bparams)
+    return x, jnp.sum(auxs)
+
+
+def run_shared_attn(cfg, sp, x, positions, window):
+    h = apply_norm(cfg.norm, x, sp["ln1"])
+    y, _ = attn.gqa_forward(cfg, sp["attn"], h, positions, causal=True,
+                            window=window)
+    x = x + y
+    h = apply_norm(cfg.norm, x, sp["ln2"])
+    return x + ffn_mod.ffn_forward(sp["ffn"], h, cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, cache-carrying) per kind
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(cfg, kind: str, batch: int, cache_len: int):
+    """Decode cache for ONE layer of the given kind."""
+    hd = cfg.resolved_head_dim
+    nkv = cfg.num_kv_heads
+    kv = lambda: (jnp.zeros((batch, cache_len, nkv, hd), jnp.bfloat16),
+                  jnp.zeros((batch, cache_len, nkv, hd), jnp.bfloat16))
+    if kind in ("dense", "enc"):
+        if cfg.attention == "mla":
+            return (jnp.zeros((batch, cache_len, cfg.kv_lora_rank), jnp.bfloat16),
+                    jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), jnp.bfloat16))
+        return kv()
+    if kind == "moe":
+        if cfg.attention == "mla":
+            return (jnp.zeros((batch, cache_len, cfg.kv_lora_rank), jnp.bfloat16),
+                    jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), jnp.bfloat16))
+        return kv()
+    if kind == "pair":
+        return {"a": init_layer_cache(cfg, "dense", batch, cache_len),
+                "b": init_layer_cache(cfg, "moe", batch, cache_len)}
+    if kind == "mamba":
+        return ssm_mod.init_mamba2_state(cfg, batch)
+    if kind == "mlstm":
+        return xlstm_mod.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm_mod.init_slstm_state(cfg, batch)
+    if kind == "decx":
+        enc_len = cfg.encdec.encoder_seq_len
+        return {"self": kv(),
+                "cross": (jnp.zeros((batch, enc_len, nkv, hd), jnp.bfloat16),
+                          jnp.zeros((batch, enc_len, nkv, hd), jnp.bfloat16))}
+    raise ValueError(kind)
+
+
+def _attn_decode_dispatch(cfg, lp_attn, h, cache, position, window):
+    if cfg.attention == "mla":
+        y, new = attn.mla_decode(cfg, lp_attn, h, cache[0], cache[1], position,
+                                 window=window)
+    else:
+        y, new = attn.gqa_decode(cfg, lp_attn, h, cache[0], cache[1], position,
+                                 window=window)
+    return y, new
+
+
+def decode_layer(cfg, kind: str, lp, x, cache, position, window, ctx):
+    """One-token decode through one layer.  Returns (x, new_cache, aux)."""
+    zero = jnp.float32(0.0)
+    if kind in ("dense", "enc"):
+        h = apply_norm(cfg.norm, x, lp["ln1"])
+        y, new = _attn_decode_dispatch(cfg, lp["attn"], h, cache, position, window)
+        x = x + y
+        h = apply_norm(cfg.norm, x, lp["ln2"])
+        return x + ffn_mod.ffn_forward(lp["ffn"], h, cfg.act), new, zero
+    if kind == "moe":
+        h = apply_norm(cfg.norm, x, lp["ln1"])
+        y, new = _attn_decode_dispatch(cfg, lp["attn"], h, cache, position, window)
+        x = x + y
+        h = apply_norm(cfg.norm, x, lp["ln2"])
+        y, aux = ffn_mod.moe_ffn(lp["moe"], h, cfg, ctx)
+        return x + y, new, aux
+    if kind == "pair":
+        x, new_a, _ = decode_layer(cfg, "dense", lp["a"], x, cache["a"], position,
+                                   window, ctx)
+        x, new_b, aux = decode_layer(cfg, "moe", lp["b"], x, cache["b"], position,
+                                     window, ctx)
+        return x, {"a": new_a, "b": new_b}, aux
+    if kind == "mamba":
+        h = apply_norm(cfg.norm, x, lp["ln"])
+        y, st, cv = ssm_mod.mamba2_decode(cfg, lp["mamba"], h, cache[0], cache[1])
+        return x + y, (st, cv), zero
+    if kind == "mlstm":
+        h = apply_norm(cfg.norm, x, lp["ln"])
+        y, new = xlstm_mod.mlstm_decode(cfg, lp["mlstm"], h, cache)
+        return x + y, new, zero
+    if kind == "slstm":
+        h = apply_norm(cfg.norm, x, lp["ln"])
+        y, new = xlstm_mod.slstm_decode(cfg, lp["slstm"], h, cache)
+        return x + y, new, zero
+    if kind == "decx":
+        h = apply_norm(cfg.norm, x, lp["ln1"])
+        y, new_self = attn.gqa_decode(cfg, lp["self_attn"], h, cache["self"][0],
+                                      cache["self"][1], position, window=window)
+        x = x + y
+        h = apply_norm(cfg.norm, x, lp["ln2"])
+        y = attn.cross_decode(cfg, lp["cross_attn"], h, cache["cross"][0],
+                              cache["cross"][1])
+        x = x + y
+        h = apply_norm(cfg.norm, x, lp["ln3"])
+        return (x + ffn_mod.ffn_forward(lp["ffn"], h, cfg.act),
+                {"self": new_self, "cross": cache["cross"]}, zero)
+    raise ValueError(kind)
+
+
+def decode_scan_block(cfg, kind: str, bparams, x, caches, position, window, ctx):
+    """Decode through a stacked block, scanning layers with per-layer caches."""
+    n = jax.tree.leaves(bparams)[0].shape[0]
+    if n == 1:
+        lp = jax.tree.map(lambda a: a[0], bparams)
+        cc = jax.tree.map(lambda a: a[0], caches)
+        x, new, aux = decode_layer(cfg, kind, lp, x, cc, position, window, ctx)
+        return x, jax.tree.map(lambda a: a[None], new), aux
+
+    def body(carry, inp):
+        xx = carry
+        lp, cc = inp
+        xx, new, aux = decode_layer(cfg, kind, lp, xx, cc, position, window, ctx)
+        return xx, (new, aux)
+
+    x, (new_caches, auxs) = jax.lax.scan(body, x, (bparams, caches))
+    return x, new_caches, jnp.sum(auxs)
+
+
+def run_shared_attn_decode(cfg, sp, x, cache, position, window):
+    h = apply_norm(cfg.norm, x, sp["ln1"])
+    y, new = attn.gqa_decode(cfg, sp["attn"], h, cache[0], cache[1], position,
+                             window=window)
+    x = x + y
+    h = apply_norm(cfg.norm, x, sp["ln2"])
+    return x + ffn_mod.ffn_forward(sp["ffn"], h, cfg.act), new

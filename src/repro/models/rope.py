@@ -1,0 +1,79 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the rotary half-dim into (temporal, height, width) sections and
+rotates each section by its own position component [arXiv:2409.12191].  For
+text-only positions all three components are equal, which reduces M-RoPE to
+RoPE exactly — the property our tests assert.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# fraction of the rotary half-dim given to (t, h, w) sections
+MROPE_SECTIONS = (0.25, 0.375, 0.375)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _angles(positions, head_dim: int, theta: float):
+    """positions [..., S] -> angles [..., S, half]."""
+    inv = rope_freqs(head_dim, theta)
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x [B, S, N, H], positions [B, S] (or [S]) -> rotated x."""
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = _angles(positions, x.shape[-1], theta)          # [B, S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[:, :, None, :]                               # [B, S, 1, half]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_angles(positions3, head_dim: int, theta: float):
+    """positions3 [3, B, S] (t, h, w) -> angles [B, S, half] with sections."""
+    half = head_dim // 2
+    n_t = int(half * MROPE_SECTIONS[0])
+    n_h = int(half * MROPE_SECTIONS[1])
+    n_w = half - n_t - n_h
+    inv = rope_freqs(head_dim, theta)
+    ang_all = positions3[..., None].astype(jnp.float32) * inv  # [3, B, S, half]
+    return jnp.concatenate(
+        [ang_all[0, ..., :n_t], ang_all[1, ..., n_t:n_t + n_h], ang_all[2, ..., n_t + n_h:]],
+        axis=-1,
+    )
+
+
+def apply_mrope(x, positions3, theta: float = 1_000_000.0):
+    """x [B, S, N, H], positions3 [3, B, S]."""
+    ang = mrope_angles(positions3, x.shape[-1], theta)     # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_positional(x, positions, kind: str, theta: float):
+    """Dispatch: kind in {rope, mrope, none}.
+
+    For mrope, `positions` may be [B, S] (text-only: broadcast to 3 equal
+    components) or [3, B, S].
+    """
+    if kind == "none":
+        return x
+    if kind == "mrope":
+        if positions.ndim != 3:
+            if positions.ndim == 1:
+                positions = positions[None, :]
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return apply_mrope(x, positions, theta)
+    return apply_rope(x, positions, theta)

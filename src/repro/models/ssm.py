@@ -1,0 +1,175 @@
+"""Mamba2 (SSD — state-space duality) layer, TPU-adapted.
+
+Chunked-scan formulation [arXiv:2405.21060, adapted]: the sequence is split
+into chunks of Q tokens.  Within a chunk the recurrence is evaluated in its
+quadratic "attention" dual (MXU-friendly matmuls, decays via masked segment
+sums); across chunks a `lax.scan` carries the [H, P, N] state.  This is the
+TPU-native adaptation of the CUDA selective-scan: no warp shuffles, just
+matmuls shaped for the MXU and a short sequential scan over n_chunks.
+
+Decode: O(1) recurrent state update per token (serve_step path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import scaled_init, rmsnorm
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    n_heads = max(1, d_in // s.head_dim)
+    ks = jax.random.split(key, 6)
+    conv_ch = d_in + 2 * s.state_size
+    return {
+        # order: [z | x | B | C | dt]
+        "in_proj": scaled_init(ks[0], (d, 2 * d_in + 2 * s.state_size + n_heads), d),
+        "conv_w": scaled_init(ks[1], (s.conv_width, conv_ch), s.conv_width),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),       # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": scaled_init(ks[5], (d_in, d), d_in),
+    }
+
+
+def _split_in_proj(cfg, proj):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = max(1, d_in // s.head_dim)
+    z, xin, b, c, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + s.state_size,
+               2 * d_in + 2 * s.state_size], axis=-1)
+    return z, xin, b, c, dt, d_in, n_heads
+
+
+def _causal_conv(u, w, bias):
+    """Depthwise causal conv.  u [B,S,C], w [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i: i + u.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + bias.astype(jnp.float32)).astype(u.dtype)
+
+
+def _segsum(log_a):
+    """log_a [..., Q] -> decay matrix [..., Q, Q], L[i,j]=sum_{j<k<=i} log_a."""
+    q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    dif = cs[..., :, None] - cs[..., None, :]              # [..., i, j]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, dif, -jnp.inf)
+
+
+def mamba2_forward(cfg, params, x, state=None):
+    """Full-sequence SSD.  x [B,S,D] -> (y [B,S,D], final_state [B,H,P,N])."""
+    s = cfg.ssm
+    b_sz, seq, d = x.shape
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    z, xin, bb, cc, dt, d_in, n_heads = _split_in_proj(cfg, proj)
+    conv_in = jnp.concatenate([xin, bb, cc], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    xin, bb, cc = jnp.split(conv_out, [d_in, d_in + s.state_size], axis=-1)
+
+    p = s.head_dim
+    h = n_heads
+    xh = xin.reshape(b_sz, seq, h, p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(params["a_log"])                                      # [H]
+    log_a = dt * a                                                     # [B,S,H]
+    bbf = bb.astype(jnp.float32)
+    ccf = cc.astype(jnp.float32)
+
+    q = min(s.chunk_size, seq)
+    nc = max(1, seq // q)
+    assert nc * q == seq, f"seq {seq} not divisible by chunk {q}"
+    xc = xh.reshape(b_sz, nc, q, h, p)
+    dtc = dt.reshape(b_sz, nc, q, h)
+    lac = log_a.reshape(b_sz, nc, q, h)
+    bc = bbf.reshape(b_sz, nc, q, s.state_size)
+    ccg = ccf.reshape(b_sz, nc, q, s.state_size)
+
+    # ---- intra-chunk (quadratic dual) --------------------------------
+    lmat = jnp.exp(_segsum(jnp.moveaxis(lac, -1, -2)))     # [B,nc,H,Q,Q]
+    scores = jnp.einsum("bcin,bcjn->bcij", ccg, bc)        # [B,nc,Q,Q]
+    dtx = xc * dtc[..., None]                              # [B,nc,Q,H,P]
+    y_intra = jnp.einsum("bcij,bchij,bcjhp->bcihp",
+                         scores, lmat, dtx)
+
+    # ---- chunk states + inter-chunk scan -----------------------------
+    cum = jnp.cumsum(lac, axis=2)                          # [B,nc,Q,H]
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # [B,nc,Q,H]
+    chunk_state = jnp.einsum("bcjh,bcjhp,bcjn->bchpn",
+                             decay_to_end, dtx, bc)        # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [B,nc,H]
+
+    if state is None:
+        state = jnp.zeros((b_sz, h, p, s.state_size), jnp.float32)
+
+    def step(carry, inp):
+        st = carry
+        c_state, c_decay = inp
+        out_state = st                                      # state BEFORE chunk
+        st = st * c_decay[:, :, None, None] + c_state
+        return st, out_state
+
+    final_state, init_states = jax.lax.scan(
+        step, state,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    init_states = jnp.moveaxis(init_states, 0, 1)          # [B,nc,H,P,N]
+
+    decay_from_start = jnp.exp(cum)                         # [B,nc,Q,H]
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         ccg, init_states, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(b_sz, seq, h, p)
+    y = y + xh * params["d_skip"][None, None, :, None]
+    y = y.reshape(b_sz, seq, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), params["norm"])
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype)), final_state
+
+
+def mamba2_decode(cfg, params, x, state, conv_state):
+    """One-token decode.  x [B,1,D]; state [B,H,P,N]; conv_state [B,K-1,C]."""
+    s = cfg.ssm
+    b_sz, _, d = x.shape
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    z, xin, bb, cc, dt, d_in, n_heads = _split_in_proj(cfg, proj)
+    conv_in = jnp.concatenate([xin, bb, cc], axis=-1)      # [B,1,C]
+    window = jnp.concatenate([conv_state, conv_in], axis=1)  # [B,K,C]
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          w.astype(jnp.float32)) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    new_conv_state = window[:, 1:]
+    xin, bb, cc = jnp.split(conv_out, [d_in, d_in + s.state_size], axis=-1)
+
+    p = s.head_dim
+    xh = xin.reshape(b_sz, n_heads, p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a)                                # [B,H]
+    bbf = bb[:, 0].astype(jnp.float32)                     # [B,N]
+    ccf = cc[:, 0].astype(jnp.float32)
+    state = state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, bbf)
+    y = jnp.einsum("bn,bhpn->bhp", ccf, state)
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(b_sz, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), params["norm"])
+    return (jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype)),
+            state, new_conv_state)
+
+
+def init_mamba2_state(cfg, batch: int):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = max(1, d_in // s.head_dim)
+    conv_ch = d_in + 2 * s.state_size
+    return (jnp.zeros((batch, n_heads, s.head_dim, s.state_size), jnp.float32),
+            jnp.zeros((batch, s.conv_width - 1, conv_ch), jnp.bfloat16))

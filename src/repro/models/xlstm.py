@@ -1,0 +1,252 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, sequential recurrence) [arXiv:2405.04517].
+
+TPU adaptation: the mLSTM parallel dual is evaluated chunk-wise exactly like
+the Mamba2 SSD path (MXU matmuls within chunks, a short lax.scan across
+chunks carrying the [H, Dk, Dv] matrix memory and [H, Dk] normalizer).  The
+sLSTM recurrence is inherently sequential (recurrent weights R on h_{t-1});
+it runs as a lax.scan over time — length-independent HLO, the TPU-idiomatic
+form of what CUDA implementations fuse into a persistent kernel.
+
+Gates follow the stabilized formulation: sigmoid forget gate, exponential
+input gate with max-stabilizer m (sLSTM); the mLSTM chunked path uses
+sigmoid f / sigmoid-scaled i (a standard stabilized reimplementation choice;
+noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rmsnorm, scaled_init
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    d_in = int(cfg.ssm.proj_factor * d)
+    h = cfg.num_heads
+    p = d_in // h
+    return d, d_in, h, p
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    d, d_in, h, p = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": scaled_init(ks[0], (d, 2 * d_in), d),        # x, z(gate)
+        "wq": scaled_init(ks[1], (d_in, d_in), d_in),
+        "wk": scaled_init(ks[2], (d_in, d_in), d_in),
+        "wv": scaled_init(ks[3], (d_in, d_in), d_in),
+        "wi": scaled_init(ks[4], (d_in, h), d_in),
+        "wf": scaled_init(ks[5], (d_in, h), d_in),
+        "fb": jnp.full((h,), 3.0, jnp.float32),            # forget-gate bias
+        "norm": jnp.ones((d_in,), jnp.float32),
+        "down": scaled_init(ks[6], (d_in, d), d_in),
+    }
+
+
+def _mlstm_qkvif(cfg, params, xs):
+    d, d_in, h, p = _dims(cfg)
+    b, s, _ = xs.shape
+    q = (xs @ params["wq"].astype(xs.dtype)).reshape(b, s, h, p)
+    k = (xs @ params["wk"].astype(xs.dtype)).reshape(b, s, h, p) / jnp.sqrt(float(p))
+    v = (xs @ params["wv"].astype(xs.dtype)).reshape(b, s, h, p)
+    i = jax.nn.sigmoid((xs @ params["wi"].astype(xs.dtype)).astype(jnp.float32))
+    f = jax.nn.sigmoid(
+        (xs @ params["wf"].astype(xs.dtype)).astype(jnp.float32) + params["fb"])
+    return q, k, v, i, f
+
+
+def mlstm_forward(cfg, params, x, state=None):
+    """x [B,S,D] -> (y [B,S,D], (C [B,H,Dk,Dv], n [B,H,Dk]))."""
+    d, d_in, h, p = _dims(cfg)
+    b, s, _ = x.shape
+    up = x @ params["up"].astype(x.dtype)
+    xs, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i, f = _mlstm_qkvif(cfg, params, xs)
+
+    qf = min(cfg.ssm.chunk_size, s)
+    nc = max(1, s // qf)
+    assert nc * qf == s, f"seq {s} not divisible by chunk {qf}"
+    qc = q.reshape(b, nc, qf, h, p).astype(jnp.float32)
+    kc = k.reshape(b, nc, qf, h, p).astype(jnp.float32)
+    vc = v.reshape(b, nc, qf, h, p).astype(jnp.float32)
+    ic = i.reshape(b, nc, qf, h)
+    log_f = jnp.log(f + 1e-9).reshape(b, nc, qf, h)
+
+    # intra-chunk: D[i,j] = prod_{j<t<=i} f_t * i_j
+    cum = jnp.cumsum(log_f, axis=2)
+    dif = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [B,nc,Qi,Qj,H]
+    mask = jnp.tril(jnp.ones((qf, qf), bool))
+    dec = jnp.where(mask[None, None, :, :, None], jnp.exp(dif), 0.0)
+    scores = jnp.einsum("bcihp,bcjhp->bcijh", qc, kc)
+    w = scores * dec * ic[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, vc)
+    # intra normalizer: q_i . (sum_j dec_ij i_j k_j) == sum_j w_ij
+    nq_intra = jnp.sum(w, axis=3)                          # [B,nc,Q,H]
+
+    # chunk state contributions
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # [B,nc,Q,H]
+    c_state = jnp.einsum("bcjh,bcjhk,bcjhv->bchkv",
+                         decay_to_end * ic, kc, vc)        # [B,nc,H,P,P]
+    n_state = jnp.einsum("bcjh,bcjhk->bchk", decay_to_end * ic, kc)
+    c_decay = jnp.exp(cum[:, :, -1, :])                    # [B,nc,H]
+
+    if state is None:
+        cmem = jnp.zeros((b, h, p, p), jnp.float32)
+        nmem = jnp.zeros((b, h, p), jnp.float32)
+    else:
+        cmem, nmem = state
+
+    def step(carry, inp):
+        cm, nm = carry
+        cs, ns, dc = inp
+        out = (cm, nm)
+        cm = cm * dc[:, :, None, None] + cs
+        nm = nm * dc[:, :, None] + ns
+        return (cm, nm), out
+
+    (cmem, nmem), (c_init, n_init) = jax.lax.scan(
+        step, (cmem, nmem),
+        (jnp.moveaxis(c_state, 1, 0), jnp.moveaxis(n_state, 1, 0),
+         jnp.moveaxis(c_decay, 1, 0)))
+    c_init = jnp.moveaxis(c_init, 0, 1)                    # [B,nc,H,P,P]
+    n_init = jnp.moveaxis(n_init, 0, 1)
+
+    decay_from_start = jnp.exp(cum)
+    y_inter = jnp.einsum("bcihk,bchkv,bcih->bcihv", qc, c_init, decay_from_start)
+    n_inter = jnp.einsum("bcihk,bchk,bcih->bcih", qc, n_init, decay_from_start)
+
+    y_all = (y_intra + y_inter)                            # [B,nc,Q,H,P]
+    # |n·q| normalizer: running n vector dotted with q
+    nq = nq_intra + n_inter
+    denom = jnp.maximum(jnp.abs(nq), 1.0)[..., None]
+    yv = (y_all / denom).reshape(b, s, h, p).reshape(b, s, d_in)
+    yv = yv.astype(x.dtype)
+    yv = rmsnorm(yv * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), params["norm"])
+    return yv @ params["down"].astype(x.dtype), (cmem, nmem)
+
+
+def mlstm_decode(cfg, params, x, state):
+    """One-token mLSTM decode.  state = (C [B,H,P,P], n [B,H,P])."""
+    d, d_in, h, p = _dims(cfg)
+    b = x.shape[0]
+    up = x @ params["up"].astype(x.dtype)
+    xs, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i, f = _mlstm_qkvif(cfg, params, xs)
+    qf = q[:, 0].astype(jnp.float32)                       # [B,H,P]
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    i0, f0 = i[:, 0], f[:, 0]                              # [B,H]
+    cmem, nmem = state
+    cmem = cmem * f0[:, :, None, None] + i0[:, :, None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", kf, vf)
+    nmem = nmem * f0[:, :, None] + i0[:, :, None] * kf
+    y = jnp.einsum("bhk,bhkv->bhv", qf, cmem)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, nmem)), 1.0)
+    y = (y / denom[:, :, None]).reshape(b, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), params["norm"])
+    return y @ params["down"].astype(x.dtype), (cmem, nmem)
+
+
+def init_mlstm_state(cfg, batch: int):
+    _, _, h, p = _dims(cfg)
+    return (jnp.zeros((batch, h, p, p), jnp.float32),
+            jnp.zeros((batch, h, p), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d, d_in, h, p = _dims(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        "up": scaled_init(ks[0], (d, 2 * d_in), d),
+        "wz": scaled_init(ks[1], (d_in, d_in), d_in),
+        "wi": scaled_init(ks[2], (d_in, d_in), d_in),
+        "wf": scaled_init(ks[3], (d_in, d_in), d_in),
+        "wo": scaled_init(ks[4], (d_in, d_in), d_in),
+        # block-diagonal recurrent weights, per head [H, P, P]
+        "rz": scaled_init(ks[5], (h, p, p), p),
+        "ri": scaled_init(ks[6], (h, p, p), p),
+        "rf": scaled_init(ks[7], (h, p, p), p),
+        "ro": scaled_init(ks[8], (h, p, p), p),
+        "fb": jnp.full((d_in,), 3.0, jnp.float32),
+        "norm": jnp.ones((d_in,), jnp.float32),
+        "down": scaled_init(ks[9], (d_in, d), d_in),
+    }
+
+
+def _slstm_step(params, h_shape, carry, inp):
+    """One sLSTM time step.  carry=(c,n,h,m) each [B,H,P] fp32."""
+    hh, pp = h_shape
+    c, n, hprev, m = carry
+    xz, xi, xf, xo = inp                                   # [B,H,P] fp32 each
+
+    def rec(r, hv):
+        return jnp.einsum("bhp,hpq->bhq", hv, r.astype(jnp.float32))
+
+    zt = jnp.tanh(xz + rec(params["rz"], hprev))
+    it = xi + rec(params["ri"], hprev)
+    ft = xf + rec(params["rf"], hprev)
+    ot = jax.nn.sigmoid(xo + rec(params["ro"], hprev))
+    m_new = jnp.maximum(ft + m, it)                        # stabilizer
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    c = f_p * c + i_p * zt
+    n = f_p * n + i_p
+    hv = ot * c / jnp.maximum(n, 1.0)
+    return (c, n, hv, m_new), hv
+
+
+def slstm_forward(cfg, params, x, state=None):
+    d, d_in, h, p = _dims(cfg)
+    b, s, _ = x.shape
+    up = x @ params["up"].astype(x.dtype)
+    xs, z = jnp.split(up, 2, axis=-1)
+    xz = (xs @ params["wz"].astype(x.dtype)).astype(jnp.float32)
+    xi = (xs @ params["wi"].astype(x.dtype)).astype(jnp.float32)
+    xf = ((xs @ params["wf"].astype(x.dtype)).astype(jnp.float32)
+          + params["fb"])
+    xo = (xs @ params["wo"].astype(x.dtype)).astype(jnp.float32)
+
+    def rs(a):  # [B,S,Din] -> [S,B,H,P]
+        return jnp.moveaxis(a.reshape(b, s, h, p), 1, 0)
+
+    if state is None:
+        state = init_slstm_state(cfg, b)
+    (c, n, hv, m), ys = jax.lax.scan(
+        lambda carry, inp: _slstm_step(params, (h, p), carry, inp),
+        state, (rs(xz), rs(xi), rs(xf), rs(xo)))
+    ys = jnp.moveaxis(ys, 0, 1).reshape(b, s, d_in).astype(x.dtype)
+    ys = rmsnorm(ys * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), params["norm"])
+    return ys @ params["down"].astype(x.dtype), (c, n, hv, m)
+
+
+def slstm_decode(cfg, params, x, state):
+    d, d_in, h, p = _dims(cfg)
+    b = x.shape[0]
+    up = x @ params["up"].astype(x.dtype)
+    xs, z = jnp.split(up, 2, axis=-1)
+    xs0 = xs[:, 0]
+    xz = ((xs0 @ params["wz"].astype(x.dtype)).astype(jnp.float32)).reshape(b, h, p)
+    xi = ((xs0 @ params["wi"].astype(x.dtype)).astype(jnp.float32)).reshape(b, h, p)
+    xf = (((xs0 @ params["wf"].astype(x.dtype)).astype(jnp.float32)
+           + params["fb"])).reshape(b, h, p)
+    xo = ((xs0 @ params["wo"].astype(x.dtype)).astype(jnp.float32)).reshape(b, h, p)
+    state, hv = _slstm_step(params, (h, p), state, (xz, xi, xf, xo))
+    ys = hv.reshape(b, 1, d_in).astype(x.dtype)
+    ys = rmsnorm(ys * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), params["norm"])
+    return ys @ params["down"].astype(x.dtype), state
+
+
+def init_slstm_state(cfg, batch: int):
+    _, _, h, p = _dims(cfg)
+    zero = jnp.zeros((batch, h, p), jnp.float32)
+    return (zero, zero, zero, zero)

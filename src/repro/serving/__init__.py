@@ -1,0 +1,5 @@
+from repro.serving.engine import (ServeConfig, ServingEngine, make_serve_step,
+                                  prime_whisper_cross_cache)
+
+__all__ = ["ServeConfig", "ServingEngine", "make_serve_step",
+           "prime_whisper_cross_cache"]

@@ -1,0 +1,167 @@
+"""Serving engine: batched decode with early-exit accounting.
+
+`make_serve_step(model)` builds the pure function the dry-run lowers for
+decode shapes: (params, cache, tokens [B,1], position []) ->
+(logits [B,V], exit_entropies [n_exits,B], cache).
+
+`ServingEngine` is the host-side loop: request batching, greedy/temperature
+sampling, SPINN-style exit statistics (which fraction of tokens would have
+exited at each head under the configured entropy threshold — the number the
+edge-device paradigm planner consumes), and whisper cross-cache priming.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.early_exit import first_exit_index
+from repro.models import blocks as B
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    temperature: float = 0.0          # 0 = greedy
+    exit_threshold: float = 0.5
+    long_mode: bool = False
+
+
+def make_serve_step(model, *, long_mode: bool = False):
+    """The decode-shape step function (what dryrun lowers)."""
+
+    def serve_step(params, cache, tokens, position):
+        return model.decode_step(params, cache, tokens, position,
+                                 long_mode=long_mode)
+
+    return serve_step
+
+
+def prime_whisper_cross_cache(model, params, cache, frames):
+    """Fill each decoder layer's cross-attention k/v from the encoder output.
+
+    cache["blocks"][bi] for decx blocks holds {"self": (k,v), "cross": (k,v)}
+    stacked over layers; we recompute k/v per layer from enc_out.
+    """
+    cfg = model.cfg
+    enc_out = model.encode(params, frames)
+    bi = 0
+    new_blocks = list(cache["blocks"])
+    for step in model.plan:
+        if step[0] != "scan":
+            continue
+        _, kind, n, _ = step
+        if kind == "decx":
+            bp = params["blocks"][bi]
+
+            def per_layer(lp):
+                k = jnp.einsum("bsd,dnh->bsnh", enc_out,
+                               lp["cross_attn"]["wk"].astype(enc_out.dtype))
+                v = jnp.einsum("bsd,dnh->bsnh", enc_out,
+                               lp["cross_attn"]["wv"].astype(enc_out.dtype))
+                return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+            ks, vs = jax.vmap(per_layer)(bp)
+            blk = dict(new_blocks[bi]) if isinstance(new_blocks[bi], dict) else new_blocks[bi]
+            blk = dict(blk)
+            blk["cross"] = (ks, vs)
+            new_blocks[bi] = blk
+        bi += 1
+    out = dict(cache)
+    out["blocks"] = new_blocks
+    return out
+
+
+class ServingEngine:
+    """Host loop over a jitted serve_step with exit-statistics accounting
+    and optional adaptive threshold control (survey §7.3)."""
+
+    def __init__(self, model, params, scfg: ServeConfig = ServeConfig()):
+        self.model = model
+        self.params = params
+        self.scfg = scfg
+        self._step = jax.jit(make_serve_step(model, long_mode=scfg.long_mode))
+        self.exit_counts = np.zeros(model.n_exits + 1, np.int64)
+        self.tokens_served = 0
+        self.controller = None
+
+    def enable_adaptive(self, target_depth_fraction: float,
+                        update_every: int = 64):
+        """Steer the exit threshold so E[depth]/full <= target."""
+        from repro.serving.adaptive import AdaptiveExitController
+        self.controller = AdaptiveExitController(
+            target_depth_fraction, self.scfg.exit_threshold)
+        self._adaptive_every = update_every
+        self._since_update = 0
+        # depth fraction of each exit boundary within the plan
+        bounds = [s[2] for s in self.model.plan if s[0] == "exit"]
+        self._exit_depths = [b / self.model.cfg.num_layers for b in bounds]
+
+    def generate(self, prompt_tokens, *, max_new: int = 32,
+                 frames=None, rng=None):
+        """prompt_tokens [B, S0] -> generated [B, max_new]."""
+        cfg = self.model.cfg
+        b, s0 = prompt_tokens.shape
+        cache_len = s0 + max_new
+        cache = self.model.init_decode_cache(b, cache_len,
+                                             long_mode=self.scfg.long_mode)
+        if cfg.family == "encdec":
+            assert frames is not None, "whisper needs encoder frames"
+            cache = prime_whisper_cross_cache(self.model, self.params, cache,
+                                              frames)
+        # consume the prompt
+        logits = None
+        for t in range(s0):
+            logits, ee, cache = self._step(
+                self.params, cache, prompt_tokens[:, t:t + 1], jnp.int32(t))
+        out = []
+        tok = self._sample(logits, rng, 0)
+        for i in range(max_new):
+            out.append(tok)
+            logits, ee, cache = self._step(self.params, cache, tok,
+                                           jnp.int32(s0 + i))
+            self._account_exits(ee)
+            tok = self._sample(logits, rng, i + 1)
+        return jnp.concatenate(out, axis=1)
+
+    def _sample(self, logits, rng, i):
+        if logits is None:
+            return jnp.zeros((1, 1), jnp.int32)
+        if self.scfg.temperature <= 0.0 or rng is None:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        k = jax.random.fold_in(rng, i)
+        return jax.random.categorical(
+            k, logits / self.scfg.temperature)[:, None].astype(jnp.int32)
+
+    def _account_exits(self, exit_entropies):
+        if exit_entropies.shape[0] == 0:
+            self.tokens_served += exit_entropies.shape[-1]
+            return
+        thr = (self.controller.threshold if self.controller
+               else self.scfg.exit_threshold)
+        idx = np.asarray(first_exit_index(
+            exit_entropies, thr, self.model.cfg.vocab_size))
+        for i in idx:
+            self.exit_counts[int(i)] += 1
+        self.tokens_served += len(idx)
+        if self.controller is not None:
+            self._since_update += len(idx)
+            if self._since_update >= self._adaptive_every:
+                total = max(1, int(self.exit_counts.sum()))
+                fracs = [c / total for c in self.exit_counts[:-1]]
+                self.controller.update(fracs, self._exit_depths)
+                self._since_update = 0
+
+    def exit_stats(self) -> Dict[str, float]:
+        total = max(1, int(self.exit_counts.sum()))
+        st = {f"exit{i}_frac": float(c) / total
+              for i, c in enumerate(self.exit_counts[:-1])}
+        st["full_depth_frac"] = float(self.exit_counts[-1]) / total
+        # expected depth saving (segment granularity)
+        n = self.model.n_exits
+        st["tokens"] = float(self.tokens_served)
+        return st

@@ -1,0 +1,214 @@
+"""Partition specs for params / optimizer state / batches / decode caches.
+
+Rule-based: every leaf gets a PartitionSpec from its tree path + shape.
+The baseline scheme (hillclimbed in EXPERIMENTS.md §Perf):
+
+- "model" axis: tensor parallel — attention heads, FFN width, MoE experts,
+  vocab.  When a head count is not divisible by the axis (GQA kv-heads), we
+  fall back to sharding the contraction (d_model) dim, which the SPMD
+  partitioner turns into a reduce-scatter/psum pair.
+- ("pod","data") axes: batch for activations; ZeRO-1 for optimizer moments
+  (m/v additionally sharded over data on the first free divisible dim).
+- decode caches: batch over "data"; the sequence dim over "model" when the
+  kv-head dim cannot shard (context-parallel cache).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import tree_map_with_path, DictKey, SequenceKey
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0 and n >= size
+
+
+class ShardingRules:
+    """strategy:
+    - "tp" (baseline): model axis = tensor parallel (heads/ffn/experts/vocab)
+    - "dp_zero": weights replicated over the model axis, batch sharded over
+      (pod, data, model), optimizer moments ZeRO-sharded over ALL axes.
+      Beyond-paper profile for small dense models where TP's per-layer
+      activation collectives dominate (EXPERIMENTS.md §Perf).
+    """
+
+    def __init__(self, mesh, strategy: str = "tp"):
+        self.mesh = mesh
+        self.strategy = strategy
+        self.axes = mesh.axis_names
+        self.model = ("model" if "model" in self.axes and strategy == "tp"
+                      else None)
+        self.msize = mesh.shape["model"] if self.model else 1
+        if strategy == "dp_zero":
+            self.data_axes = tuple(a for a in ("pod", "data", "model")
+                                   if a in self.axes)
+        else:
+            self.data_axes = tuple(a for a in ("pod", "data") if a in self.axes)
+        self.dsize = math.prod(mesh.shape[a] for a in self.data_axes) or 1
+
+    # ------------------------------------------------------------------
+    def _spec(self, ndim: int, **placed) -> P:
+        parts = [None] * ndim
+        for dim, axis in placed.items():
+            parts[int(dim)] = axis
+        return P(*parts)
+
+    def param_spec(self, path: Tuple[str, ...], shape: Tuple[int, ...]) -> P:
+        name = path[-1] if path else ""
+        nd = len(shape)
+        m, ms = self.model, self.msize
+        if m is None or nd == 0:
+            return P()
+        in_exit = "exit_heads" in path
+        stack = 1 if (path and path[0] == "blocks") or "layer" in path else 0
+
+        def last_if_div(*dims):
+            for d in dims:
+                d = d % nd
+                if _div(shape[d], ms):
+                    return self._spec(nd, **{str(d): m})
+            return P(*([None] * nd))
+
+        if name in ("embed", "lm_head"):
+            return last_if_div(0, 1)
+        if in_exit and name == "w":
+            return last_if_div(nd - 1, 0)
+        if name in ("w_gate", "w_up", "w_in", "w_h"):
+            return last_if_div(nd - 1)
+        if name == "w_down":
+            return last_if_div(nd - 2)
+        if name in ("wg", "wu", "wd",                   # MoE experts [*,E,.,.]
+                    "wg_q", "wu_q", "wd_q", "wg_s", "wu_s", "wd_s"):
+            return last_if_div(nd - 3)
+        if name == "router":
+            return P(*([None] * nd))
+        if name == "wq" and nd - stack == 3:            # attn q [*,D,Nq,H]
+            return last_if_div(nd - 2, nd - 3)
+        if name in ("wk", "wv") and nd - stack == 3:    # GQA kv: heads or D
+            return last_if_div(nd - 2, nd - 3)
+        if name == "wo" and nd - stack == 3:            # [*,Nq,H,D]
+            return last_if_div(nd - 3, nd - 1)
+        if name in ("wq_b", "wk_b", "wv_b"):            # MLA [*,R,Nq,h]
+            return last_if_div(nd - 2)
+        if name in ("wq_a", "wkv_a"):
+            return last_if_div(nd - 1)
+        if name == "in_proj":                           # mamba [*,D,X]
+            return last_if_div(nd - 1)
+        if name == "out_proj":
+            return last_if_div(nd - 2)
+        if name == "up":                                # xlstm [*,D,2Din]
+            return last_if_div(nd - 1)
+        if name == "down":
+            return last_if_div(nd - 2)
+        if name in ("wq", "wk", "wv", "wz", "wi", "wf", "wo") and nd - stack == 2:
+            return last_if_div(nd - 1)                  # xlstm projections
+        if name == "combine":
+            return last_if_div(nd - 1)
+        return P(*([None] * nd))
+
+    def opt_moment_spec(self, pspec: P, shape: Tuple[int, ...]) -> P:
+        """ZeRO-1: add the data axes on the first free divisible dim."""
+        if not self.data_axes:
+            return pspec
+        parts = list(pspec) + [None] * (len(shape) - len(pspec))
+        for i, (p, n) in enumerate(zip(parts, shape)):
+            if p is None and _div(n, self.dsize):
+                parts[i] = self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+                return P(*parts)
+        return pspec
+
+    # ------------------------------------------------------------------
+    def params_specs(self, params_shapes):
+        return tree_map_with_path(
+            lambda path, leaf: self.param_spec(_path_names(path), leaf.shape),
+            params_shapes)
+
+    def opt_specs(self, opt_shapes, params_shapes):
+        pspecs = self.params_specs(params_shapes)
+        mspec = jax.tree.map(
+            lambda sp, leaf: self.opt_moment_spec(sp, leaf.shape),
+            pspecs, params_shapes)
+        return {"m": mspec, "v": jax.tree.map(lambda s: s, mspec),
+                "step": P()}
+
+    def batch_specs(self, batch_shapes):
+        """Shard batch over as many data axes as divisibility allows
+        (dp_zero on 512 chips with batch 256 falls back to 32-way)."""
+        candidates = []
+        axes = list(self.data_axes)
+        while axes:
+            candidates.append(tuple(axes))
+            axes = axes[:-1]
+
+        def spec(path, leaf):
+            b = leaf.shape[0] if leaf.ndim else 1
+            for cand in candidates:
+                size = math.prod(self.mesh.shape[a] for a in cand)
+                if _div(b, size):
+                    ax = cand if len(cand) > 1 else cand[0]
+                    return P(ax, *([None] * (leaf.ndim - 1)))
+            return P(*([None] * leaf.ndim))
+
+        return tree_map_with_path(spec, batch_shapes)
+
+    def cache_specs(self, cache_shapes):
+        """Decode caches: dim0 = stacked layers, dim1 = batch, then per-kind.
+
+        5D [n, B, S, nkv, hd]: shard kv-heads over model when divisible,
+        else the SEQUENCE dim (context-parallel cache).
+        4D [n, B, S, R] (MLA latent / k_rope): shard the SEQUENCE dim over
+        model — sharding R would force a per-layer cache all-gather for the
+        q·c contraction (EXPERIMENTS.md §Perf deepseek iteration).
+        3D/recurrent states: shard the widest trailing dim if divisible.
+        """
+        data = "data" if "data" in self.axes else None
+        m, ms = self.model, self.msize
+
+        def spec(path, leaf):
+            nd = leaf.ndim
+            names = _path_names(path)
+            parts = [None] * nd
+            if "shared_attn" in names:
+                # unstacked [B, S, nkv, hd] (zamba2 weight-shared block)
+                if data and _div(leaf.shape[0], self.mesh.shape["data"]):
+                    parts[0] = data
+                if m is not None and nd == 4:
+                    if _div(leaf.shape[2], ms):
+                        parts[2] = m
+                    elif _div(leaf.shape[1], ms) and leaf.shape[1] >= 1024:
+                        parts[1] = m
+                return P(*parts)
+            if nd >= 2 and data and _div(leaf.shape[1], self.mesh.shape["data"]):
+                parts[1] = data
+            if m is None:
+                return P(*parts)
+            if nd == 5:
+                if _div(leaf.shape[3], ms):
+                    parts[3] = m
+                elif _div(leaf.shape[2], ms) and leaf.shape[2] >= 1024:
+                    parts[2] = m
+            elif nd == 4:
+                if _div(leaf.shape[2], ms) and leaf.shape[2] >= 1024:
+                    parts[2] = m        # sequence (context-parallel)
+                elif _div(leaf.shape[3], ms) and leaf.shape[3] >= 128:
+                    parts[3] = m
+            elif nd == 3 and _div(leaf.shape[2], ms) and leaf.shape[2] >= 128:
+                parts[2] = m
+            return P(*parts)
+
+        return tree_map_with_path(spec, cache_shapes)

@@ -1,0 +1,10 @@
+from repro.training.optimizer import OptimizerConfig, init_optimizer, apply_updates, lr_at
+from repro.training.train_loop import TrainConfig, compute_loss, make_train_step
+from repro.training.checkpoint import (save_checkpoint, restore_checkpoint,
+                                       latest_checkpoint)
+
+__all__ = [
+    "OptimizerConfig", "init_optimizer", "apply_updates", "lr_at",
+    "TrainConfig", "compute_loss", "make_train_step",
+    "save_checkpoint", "restore_checkpoint", "latest_checkpoint",
+]

@@ -1,0 +1,90 @@
+"""Checkpointing: flat-path npz save/restore of arbitrary pytrees.
+
+No orbax dependency; multi-host-safe pattern (each host writes only with
+`should_write=True` — the launcher passes process_index()==0).
+"""
+from __future__ import annotations
+
+import os
+import json
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def _treedef_blueprint(tree):
+    if isinstance(tree, dict):
+        return {k: _treedef_blueprint(v) for k, v in tree.items()}
+    if isinstance(tree, tuple):
+        return tuple(_treedef_blueprint(v) for v in tree)
+    if isinstance(tree, list):
+        return [_treedef_blueprint(v) for v in tree]
+    return None
+
+
+def save_checkpoint(path: str, tree, step: int, should_write: bool = True) -> str:
+    """Writes <path>/ckpt_<step>.npz.  Returns the file path."""
+    fn = os.path.join(path, f"ckpt_{step:08d}.npz")
+    if should_write:
+        os.makedirs(path, exist_ok=True)
+        flat = _flatten(tree)
+        # dtype sidecar (npz keeps dtypes; bf16 is stored via view to uint16)
+        store = {}
+        meta = {}
+        for k, v in flat.items():
+            if v.dtype == jnp.bfloat16:
+                store[k] = v.view(np.uint16)
+                meta[k] = "bfloat16"
+            else:
+                store[k] = v
+                meta[k] = str(v.dtype)
+        np.savez(fn, __meta__=json.dumps(meta), **store)
+    return fn
+
+
+def latest_checkpoint(path: str) -> str | None:
+    if not os.path.isdir(path):
+        return None
+    cks = sorted(f for f in os.listdir(path)
+                 if f.startswith("ckpt_") and f.endswith(".npz"))
+    return os.path.join(path, cks[-1]) if cks else None
+
+
+def restore_checkpoint(fn: str, example_tree):
+    """Restore into the structure of `example_tree`."""
+    with np.load(fn, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        flat = {}
+        for k in z.files:
+            if k == "__meta__":
+                continue
+            v = z[k]
+            if meta.get(k) == "bfloat16":
+                v = v.view(jnp.bfloat16)
+            flat[k] = v
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, tuple):
+            return tuple(rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree))
+        if isinstance(tree, list):
+            return [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+        return jnp.asarray(flat[prefix.rstrip("/")])
+
+    return rebuild(example_tree)

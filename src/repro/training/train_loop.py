@@ -1,0 +1,113 @@
+"""Training step factory: BranchyNet joint exit loss + MoE aux + MTP +
+optional ResiliNet failout, with microbatched gradient accumulation.
+
+`make_train_step(model, opt_cfg, ...)` returns a pure `(params, opt_state,
+batch, step) -> (params, opt_state, metrics)` suitable for jax.jit/pjit —
+this is exactly what launch/dryrun.py lowers for the train_4k shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.early_exit import branchynet_loss_weights
+from repro.core.resilience import failout, n_scan_blocks, resilient_forward
+from repro.models.common import softmax_cross_entropy
+from repro.training.optimizer import OptimizerConfig, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    exit_loss_weight: float = 0.3      # BranchyNet joint training
+    aux_loss_coef: float = 0.01        # MoE load balance
+    mtp_loss_weight: float = 0.3       # DeepSeek-V3 MTP
+    failout_prob: float = 0.0          # ResiliNet stage dropout (0 = off)
+    microbatches: int = 1              # gradient accumulation
+
+
+def compute_loss(model, params, batch, *, tcfg: TrainConfig,
+                 rng: Optional[jax.Array] = None,
+                 long_mode: bool = False):
+    """Scalar loss + metrics dict."""
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if tcfg.failout_prob > 0.0 and rng is not None:
+        alive = failout(rng, n_scan_blocks(model), 1.0 - tcfg.failout_prob)
+        logits, exit_logits = resilient_forward(model, params, batch,
+                                                alive, long_mode=long_mode)
+        aux = jnp.float32(0.0)
+        mtp_logits = None
+    else:
+        out = model.forward(params, batch, long_mode=long_mode)
+        logits, exit_logits, aux = out.logits, out.exit_logits, out.aux_loss
+        mtp_logits = out.mtp_logits
+
+    loss = softmax_cross_entropy(logits, labels, mask)
+    metrics = {"ce": loss}
+    for i, el in enumerate(exit_logits):
+        l = softmax_cross_entropy(el, labels, mask)
+        metrics[f"exit{i}_ce"] = l
+        loss = loss + tcfg.exit_loss_weight * l
+    if aux is not None:
+        loss = loss + tcfg.aux_loss_coef * aux
+        metrics["aux"] = aux
+    if mtp_logits is not None:
+        mtp_labels = jnp.roll(labels, -1, axis=1)
+        mtp_mask = mask
+        if mask is not None:
+            mtp_mask = mask * jnp.roll(mask, -1, axis=1)
+        l = softmax_cross_entropy(mtp_logits, mtp_labels, mtp_mask)
+        metrics["mtp_ce"] = l
+        loss = loss + tcfg.mtp_loss_weight * l
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(model, opt_cfg: OptimizerConfig,
+                    tcfg: TrainConfig = TrainConfig(),
+                    long_mode: bool = False):
+    """Returns train_step(params, opt_state, batch, rng) -> (params, state, metrics)."""
+
+    def loss_fn(params, mb, rng):
+        return compute_loss(model, params, mb, tcfg=tcfg, rng=rng,
+                            long_mode=long_mode)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, rng):
+        nmb = tcfg.microbatches
+        if nmb <= 1:
+            (loss, metrics), grads = grad_fn(params, batch, rng)
+        else:
+            b = batch["tokens"].shape[0]
+            assert b % nmb == 0
+
+            def mb_slice(i):
+                return jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(
+                        a, i * (b // nmb), b // nmb, 0), batch)
+
+            def acc_fn(carry, i):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mb_slice(i),
+                                    jax.random.fold_in(rng, i))
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32) / nmb, g_acc, g)
+                return (g_acc, l_acc + l / nmb), m
+
+            zeros = jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), params)
+            (grads, loss), ms = jax.lax.scan(
+                acc_fn, (zeros, jnp.float32(0.0)), jnp.arange(nmb))
+            metrics = jax.tree.map(lambda a: a[-1], ms)
+            metrics["loss"] = loss
+        params, opt_state, opt_metrics = apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,10 @@
+import os
+
+# Smoke tests and benches must see ONE device — never set
+# xla_force_host_platform_device_count here (the dry-run sets it itself,
+# in its own process).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "tests must run with a single device; unset XLA_FLAGS"
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,79 @@
+"""Adaptive exit-threshold controller (survey §7.3) behaviour."""
+import numpy as np
+
+from repro.serving.adaptive import AdaptiveExitController
+
+
+def _simulate(controller, rounds=60, sensitivity=1.0):
+    """Toy plant: exit fraction at the single head grows with threshold."""
+    boundaries = [0.4]
+    hist = []
+    for _ in range(rounds):
+        exit_frac = min(0.95, sensitivity * controller.threshold)
+        depth = controller.expected_depth_fraction([exit_frac], boundaries)
+        controller.update([exit_frac], boundaries)
+        hist.append((controller.threshold, depth))
+    return hist
+
+
+def test_controller_converges_to_target():
+    c = AdaptiveExitController(target_depth_fraction=0.7, threshold=0.1)
+    hist = _simulate(c)
+    depths = [d for _, d in hist[-10:]]
+    assert abs(np.mean(depths) - 0.7) < 0.1
+
+
+def test_controller_loosens_when_over_budget():
+    c = AdaptiveExitController(target_depth_fraction=0.5, threshold=0.1)
+    t0 = c.threshold
+    # nothing exits -> depth 1.0 > target -> threshold must rise
+    c.update([0.0], [0.4])
+    assert c.threshold > t0
+
+
+def test_controller_tightens_when_under_budget():
+    c = AdaptiveExitController(target_depth_fraction=0.9, threshold=0.9)
+    t0 = c.threshold
+    # everything exits at 40% depth -> depth 0.4 < 0.9 -> tighten
+    c.update([1.0], [0.4])
+    assert c.threshold < t0
+
+
+def test_threshold_bounded():
+    c = AdaptiveExitController(target_depth_fraction=0.01, threshold=0.5)
+    for _ in range(100):
+        c.update([0.0], [0.4])
+    assert c.threshold <= c.hi
+    c2 = AdaptiveExitController(target_depth_fraction=1.0, threshold=0.5)
+    for _ in range(100):
+        c2.update([1.0], [0.4])
+    assert c2.threshold >= c2.lo
+
+
+def test_depth_fraction_math():
+    c = AdaptiveExitController(target_depth_fraction=0.5)
+    # half exit at 0.4 depth, half run full -> 0.5*0.4 + 0.5*1.0 = 0.7
+    assert abs(c.expected_depth_fraction([0.5], [0.4]) - 0.7) < 1e-9
+    # two heads
+    assert abs(c.expected_depth_fraction([0.3, 0.3], [0.25, 0.5])
+               - (0.3 * 0.25 + 0.3 * 0.5 + 0.4 * 1.0)) < 1e-9
+
+
+def test_engine_adaptive_integration():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serving import ServeConfig, ServingEngine
+
+    cfg = get_config("granite-3-2b-smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, ServeConfig(exit_threshold=0.5))
+    eng.enable_adaptive(target_depth_fraction=0.8, update_every=4)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                 cfg.vocab_size)
+    eng.generate(prompts, max_new=12)
+    assert eng.controller is not None
+    assert 0.02 <= eng.controller.threshold <= 0.98
+    assert eng.tokens_served == 24

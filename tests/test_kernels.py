@@ -1,0 +1,105 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
+interpret=True on CPU (required deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("t,d,v", [(64, 128, 512), (128, 256, 2048),
+                                   (100, 96, 777), (8, 64, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_exit_head_entropy(t, d, v, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (t, d), dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (d, v), jnp.float32)
+         * 0.05).astype(dtype)
+    got = ops.exit_head_entropy(x, w)
+    want = ref.exit_head_entropy_ref(x, w)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_exit_head_multidim():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 7, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 300), jnp.float32) * 0.1
+    got = ops.exit_head_entropy(x, w)
+    want = ref.exit_head_entropy_ref(x.reshape(-1, 64), w).reshape(2, 7)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("t,d", [(32, 64), (256, 512), (37, 300), (5, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_feature_compress_roundtrip(t, d, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (t, d), dtype)
+    q, s = ops.compress_rows(x)
+    qr, sr = ref.quantize_rows_ref(x)
+    assert bool(jnp.all(q == qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    xd = ops.decompress_rows(q, s, dtype=jnp.float32)
+    xref = ref.dequantize_rows_ref(qr, sr, jnp.float32)
+    np.testing.assert_allclose(np.asarray(xd), np.asarray(xref), rtol=1e-6)
+    # quantization error bounded by scale/2 per element
+    err = np.abs(np.asarray(xd) - np.asarray(x, np.float32))
+    assert np.all(err <= np.asarray(s) * 0.51 + 1e-6)
+
+
+@pytest.mark.parametrize("b,sq,skv,nq,nkv,h", [
+    (2, 64, 64, 4, 2, 32), (1, 128, 200, 2, 2, 64),
+    (2, 60, 60, 4, 4, 16), (1, 32, 512, 8, 1, 64),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 48), (False, 0)])
+def test_flash_attention(b, sq, skv, nq, nkv, h, causal, window):
+    if not causal and skv != sq:
+        pytest.skip("non-causal cross shapes covered elsewhere")
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, sq, nq, h), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, skv, nkv, h), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, skv, nkv, h), jnp.float32)
+    got = ops.flash_attention_bshd(q, k, v, causal=causal, window=window,
+                                   block_q=32, block_k=32)
+    kr = jnp.repeat(k, nq // nkv, 2)
+    vr = jnp.repeat(v, nq // nkv, 2)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b * nq, sq, h),
+        kr.transpose(0, 2, 1, 3).reshape(b * nq, skv, h),
+        vr.transpose(0, 2, 1, 3).reshape(b * nq, skv, h),
+        causal=causal, window=window,
+    ).reshape(b, nq, sq, h).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    b, s, n, h = 1, 64, 2, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, n, h), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, n, h), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, n, h), dtype)
+    got = ops.flash_attention_bshd(q, k, v, block_q=32, block_k=32)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b * n, s, h),
+        k.transpose(0, 2, 1, 3).reshape(b * n, s, h),
+        v.transpose(0, 2, 1, 3).reshape(b * n, s, h))
+    want = want.reshape(b, n, s, h).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_matches_model_attention():
+    """Kernel agrees with the model's _sdpa path (the integration oracle)."""
+    from repro.models.attention import _sdpa, make_mask
+    b, s, nq, nkv, h = 2, 64, 4, 2, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, nq, h), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, h), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, h), jnp.float32)
+    mask = make_mask(s, s, causal=True, window=16)
+    want = _sdpa(q, k, v, mask, 1.0 / h ** 0.5)
+    got = ops.flash_attention_bshd(q, k, v, causal=True, window=16,
+                                   block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

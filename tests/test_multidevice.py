@@ -1,0 +1,99 @@
+"""Multi-device behaviours that need placeholder devices: staged pod
+execution (the survey's partitioned inference on the mesh), expert-parallel
+MoE on a real multi-shard mesh, and a dry-run smoke — each in a subprocess
+so the main test process keeps a single device."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(py_src: str, devices: int = 8, timeout: int = 480):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(py_src)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env, cwd=ROOT)
+    assert p.returncode == 0, p.stdout + "\n" + p.stderr
+    return p.stdout
+
+
+def test_staged_pod_execution_matches_unpartitioned():
+    """cloud-device staged execution across the pod axis == plain forward
+    (the executable form of the survey's Fig. 3)."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.models import Model
+        from repro.core.hierarchy import staged_forward
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        cfg = get_config("granite-3-2b-smoke")
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                  cfg.vocab_size)
+        batch = {"tokens": toks}
+        want = np.asarray(m.forward(params, batch).logits)
+        n_blocks = sum(1 for s in m.plan if s[0] == "scan")
+        stages = [0] * (n_blocks // 2) + [1] * (n_blocks - n_blocks // 2)
+        got = np.asarray(staged_forward(m, params, batch, stages, mesh))
+        err = np.max(np.abs(got - want))
+        print("ERR", err)
+        assert err < 0.05, err
+        # with int8 boundary compression: close but not identical
+        got_c = np.asarray(staged_forward(m, params, batch, stages, mesh,
+                                          compress_boundary=True))
+        err_c = np.max(np.abs(got_c - want))
+        print("ERR_COMPRESSED", err_c)
+        assert err_c < 1.0 and err_c > 0.0
+    """)
+    assert "ERR" in out
+
+
+def test_moe_expert_parallel_multi_shard_matches_reference():
+    out = _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.models import ffn as f
+        cfg = get_config("llama4-maverick-400b-a17b-smoke")  # 4 experts
+        # high capacity => dropless, so global vs per-shard dropping order
+        # cannot diverge and the comparison is exact
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+        params = f.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model),
+                              jnp.float32)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))   # E=4 over 4 shards
+        y_ref, aux_ref = f.moe_ffn_reference(params, x, cfg,
+                                             tokens_for_capacity=2 * 8)
+        with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
+            y, aux = jax.jit(lambda p, x: f.moe_ffn(p, x, cfg,
+                                                    f.ShardCtx(mesh)))(params, x)
+        err = float(jnp.max(jnp.abs(jnp.asarray(y, jnp.float32)
+                                     - jnp.asarray(y_ref, jnp.float32))))
+        print("MOE_ERR", err)
+        assert err < 0.05, err
+    """)
+    assert "MOE_ERR" in out
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_single_combo():
+    """One real dry-run combo (lower + compile on 512 placeholder devices)."""
+    out = _run("""
+        from repro.launch.dryrun import dryrun_one
+        res = dryrun_one("granite-3-2b", "decode_32k", "single", save=False)
+        assert res["status"] == "ok", res
+        rl = res["roofline"]
+        assert rl["hlo_flops"] > 0 and rl["hlo_bytes"] > 0
+        assert res["chips"] == 256
+        print("DRYRUN_OK", rl["bottleneck"])
+    """, devices=512, timeout=560)
+    assert "DRYRUN_OK" in out

@@ -1,0 +1,49 @@
+"""Validation against the survey's own effectiveness tables (DESIGN.md §6).
+
+Each benchmarks/tableN module reproduces a survey table's frameworks and
+asserts the survey's reported bands internally; these wrappers make that
+validation part of the test suite.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_table3_cloud_device_bands():
+    from benchmarks import table3_cloud_device
+    geo, best, en = table3_cloud_device.run()
+    assert geo > 1.3 and best > 3.0          # survey: 3.1x latency
+    assert 0.3 < en < 0.95                   # survey: 59.5% energy reduction
+
+
+def test_table4_edge_device_bands():
+    from benchmarks import table4_edge_device
+    geo, tput = table4_edge_device.run()
+    assert geo > 2.0                         # survey DINA band 2.6-4.2x
+    assert tput > 1.2                        # survey SPINN ~2x
+
+
+def test_table5_cloud_edge_device_bands():
+    from benchmarks import table5_cloud_edge_device
+    reds, res = table5_cloud_edge_device.run()
+    assert min(reds) > 10.0                  # survey DDNN ~20x comm reduction
+    assert res.gain > 0.05                   # resilience gain
+
+
+def test_table6_device_device_bands():
+    from benchmarks import table6_device_device
+    en_reds, speedups = table6_device_device.run()
+    assert 0.25 < min(en_reds)               # survey CoEdge 25.5-66.9%
+    assert max(speedups) > 2.0               # survey MoDNN 2.17-4.28x
+
+
+def test_table1_moe_active_vs_total():
+    from benchmarks import table1_models
+    rows = table1_models.run()
+    d = {r[0]: r for r in rows}
+    # survey Table-1 property: our MoE entries expose active << total
+    assert d["deepseek-v3-671b"][3] < 0.1 * d["deepseek-v3-671b"][2]
+    assert d["llama4-maverick-400b-a17b"][3] < 0.1 * d["llama4-maverick-400b-a17b"][2]

@@ -1,0 +1,213 @@
+"""Property-based tests (hypothesis) on the collaborative-inference planners
+— the system's invariants (required deliverable c)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import (CostGraph, DeviceProfile, LinkProfile,
+                                   SegmentCost, TABLE2, LINKS, compute_time)
+from repro.core.early_exit import ExitProfile, edgent_plan, spinn_estimate
+from repro.core.hierarchy import Tier, ddnn_placement
+from repro.core.offload import compression_decision
+from repro.core.partition import (_split_metrics, coedge_plan, dads_plan,
+                                  ionn_plan, modnn_plan, neurosurgeon_plan)
+from repro.core.cnn_zoo import CNN_ZOO
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+@st.composite
+def cost_graphs(draw):
+    n = draw(st.integers(2, 8))
+    segs = []
+    for i in range(n):
+        flops = draw(st.floats(1e6, 1e12))
+        out_b = draw(st.floats(1e3, 1e8))
+        segs.append(SegmentCost(i, 1, flops, flops * 0.01, out_b,
+                                has_exit_after=draw(st.booleans())))
+    inp = draw(st.floats(1e3, 1e7))
+    return CostGraph("h", 1, 1, inp, tuple(segs), 4.0)
+
+
+@st.composite
+def devices(draw):
+    peak = draw(st.floats(1e10, 1e14))
+    return DeviceProfile("d", "device", peak, 4e9, 1e10,
+                         draw(st.floats(1.0, 100.0)))
+
+
+@st.composite
+def links(draw):
+    return LinkProfile("l", draw(st.floats(1e5, 1e9)),
+                       draw(st.floats(0.0, 0.2)))
+
+
+CLOUD = TABLE2["v100"]
+DEV = TABLE2["jetson-tx2"]
+WAN = LINKS["wan"]
+
+
+# ---------------------------------------------------------------------------
+# Neurosurgeon
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(cost_graphs(), devices(), devices(), links())
+def test_neurosurgeon_is_optimal_single_split(g, dev, cloud, link):
+    plan = neurosurgeon_plan(g, dev, cloud, link, "latency")
+    lats = [
+        _split_metrics(g, c, dev, cloud, link)[0] for c in g.cut_points()]
+    assert plan.latency == min(lats)
+    # never worse than the two trivial strategies
+    assert plan.latency <= lats[0] + 1e-12        # cloud-only
+    assert plan.latency <= lats[-1] + 1e-12       # device-only
+
+
+@settings(max_examples=30, deadline=None)
+@given(cost_graphs(), devices(), devices(), links())
+def test_neurosurgeon_energy_objective(g, dev, cloud, link):
+    plan = neurosurgeon_plan(g, dev, cloud, link, "energy")
+    ens = [_split_metrics(g, c, dev, cloud, link)[1] for c in g.cut_points()]
+    assert plan.device_energy == min(ens)
+
+
+# ---------------------------------------------------------------------------
+# DADS min-cut
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(cost_graphs(), devices(), devices(), links())
+def test_dads_beats_or_ties_every_chain_cut(g, dev, cloud, link):
+    """The min-cut latency is <= any single contiguous split's compute+tx
+    total (chain cuts are a subset of graph cuts)."""
+    plan = dads_plan(g, dev, cloud, link)
+    for cut in g.cut_points():
+        chain_lat = (sum(compute_time(s.flops, dev) for s in g.segments[:cut])
+                     + sum(compute_time(s.flops, cloud) for s in g.segments[cut:]))
+        if 0 < cut < len(g.segments):
+            chain_lat += link.tx_time(g.segments[cut - 1].out_bytes)
+        assert plan.latency <= chain_lat + 1e-9
+
+
+def test_dads_assignment_on_alexnet_is_valid():
+    g = CNN_ZOO["alexnet"]()
+    plan = dads_plan(g, DEV, CLOUD, WAN)
+    assert len(plan.assignment) == len(g.segments)
+    assert set(plan.assignment) <= {"device", "cloud"}
+
+
+# ---------------------------------------------------------------------------
+# IONN
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(cost_graphs())
+def test_ionn_latency_timeline_monotone_nonincreasing(g):
+    plan = ionn_plan(g, DEV, CLOUD, WAN)
+    tl = plan.latency_timeline
+    assert sorted(plan.upload_order) == list(range(len(g.segments)))
+    for a, b in zip(tl[:-1], tl[1:]):
+        assert b <= a + 1e-9          # more uploaded => never slower
+
+
+# ---------------------------------------------------------------------------
+# CoEdge / MoDNN
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(cost_graphs(), st.lists(devices(), min_size=2, max_size=6))
+def test_coedge_shares_sum_to_one_and_balance(g, devs):
+    plan = coedge_plan(g, devs, LINKS["d2d"])
+    assert abs(sum(plan.shares) - 1.0) < 1e-9
+    assert all(s > 0 for s in plan.shares)
+    # proportional split equalizes compute time across devices
+    times = [g.total_flops * s / d.eff_flops for s, d in zip(plan.shares, devs)]
+    assert max(times) - min(times) < 1e-6 * max(times) + 1e-12
+
+
+def test_modnn_speedup_grows_with_devices():
+    g = CNN_ZOO["vgg16"]()
+    devs2 = [TABLE2["jetson-tx2"]] * 2
+    devs4 = [TABLE2["jetson-tx2"]] * 4
+    s2 = modnn_plan(g, devs2, LINKS["d2d"]).speedup
+    s4 = modnn_plan(g, devs4, LINKS["d2d"]).speedup
+    assert 1.0 < s2 < 2.0 + 1e-9
+    assert s2 < s4 <= 4.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Edgent / SPINN
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(cost_graphs(), st.floats(1e-4, 10.0))
+def test_edgent_respects_deadline_when_feasible(g, deadline):
+    prof = ExitProfile.default(
+        len(g.segments), [i for i, s in enumerate(g.segments) if s.has_exit_after])
+    plan = edgent_plan(g, prof, DEV, TABLE2["jetson-agx-xavier"],
+                       LINKS["wifi"], deadline)
+    if plan.feasible:
+        assert plan.latency <= deadline + 1e-9
+
+
+def test_edgent_accuracy_monotone_in_deadline():
+    g = CNN_ZOO["alexnet"]()
+    prof = ExitProfile.default(
+        len(g.segments), [i for i, s in enumerate(g.segments) if s.has_exit_after])
+    accs = []
+    for dl in (1e-4, 3e-3, 3e-2, 0.3, 3.0):
+        p = edgent_plan(g, prof, DEV, TABLE2["jetson-agx-xavier"],
+                        LINKS["wifi"], dl)
+        accs.append(p.accuracy if p.feasible else 0.0)
+    assert accs == sorted(accs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 10))
+def test_exit_profile_probabilities(n):
+    prof = ExitProfile.default(n, list(range(0, n - 1, 2)))
+    reach = prof.reach_probs()
+    assert abs(reach[0] - 1.0) < 1e-9
+    for a, b in zip(reach[:-1], reach[1:]):
+        assert b <= a + 1e-12
+    acc = prof.expected_accuracy()
+    assert 0.0 < acc <= max(prof.accuracies) + 1e-9
+
+
+def test_spinn_exits_reduce_latency_and_tx():
+    g = CNN_ZOO["alexnet"]()
+    exits = [i for i, s in enumerate(g.segments) if s.has_exit_after]
+    prof_hi = ExitProfile.default(len(g.segments), exits, threshold=0.9)
+    prof_no = ExitProfile(tuple(exits), prof_hi.accuracies,
+                          tuple(0.0 for _ in exits))
+    cut = 4
+    hi = spinn_estimate(g, prof_hi, cut, DEV, CLOUD, WAN)
+    no = spinn_estimate(g, prof_no, cut, DEV, CLOUD, WAN)
+    assert hi.expected_latency < no.expected_latency
+    assert hi.expected_tx_bytes < no.expected_tx_bytes
+
+
+# ---------------------------------------------------------------------------
+# DDNN / compression
+# ---------------------------------------------------------------------------
+
+def test_ddnn_aggregation_buys_comm_reduction():
+    g = CNN_ZOO["alexnet"]()
+    tiers = (Tier("device", DEV, LINKS["wifi"]),
+             Tier("edge", TABLE2["jetson-agx-xavier"], LINKS["lan"]),
+             Tier("cloud", CLOUD, None))
+    dd = ddnn_placement(g, tiers, (0.5, 0.5))
+    assert dd.comm_reduction > 20.0       # the survey's Table-5 band
+    dd_raw = ddnn_placement(g, tiers, (0.5, 0.5), aggregate_factor=1.0)
+    assert dd.comm_bytes < dd_raw.comm_bytes
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(1e3, 1e9), devices(), links())
+def test_compression_decision_consistent(nbytes, dev, link):
+    d = compression_decision(nbytes, dev, link)
+    assert d.compress == (d.tx_time_compressed < d.tx_time_raw)
+    assert d.quant_overhead >= 0.0

@@ -1,0 +1,60 @@
+"""Skip-hyperconnection resilience (deepFogGuard/ResiliNet reproduction)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.resilience import (failout, n_scan_blocks, resilience_report,
+                                   resilient_forward)
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("granite-3-2b-smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    return m, params, {"tokens": toks}
+
+
+def test_all_alive_matches_forward(setup):
+    m, params, batch = setup
+    alive = jnp.ones((n_scan_blocks(m),), jnp.float32)
+    logits, _ = resilient_forward(m, params, batch, alive)
+    want = m.forward(params, batch).logits
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_dead_block_is_identity_bypass(setup):
+    m, params, batch = setup
+    n = n_scan_blocks(m)
+    alive = jnp.ones((n,), jnp.float32).at[0].set(0.0)
+    logits, _ = resilient_forward(m, params, batch, alive)
+    # still finite and different from full forward
+    assert not bool(jnp.isnan(logits).any())
+    full = m.forward(params, batch).logits
+    assert float(jnp.max(jnp.abs(logits - full))) > 1e-4
+
+
+def test_all_dead_reduces_to_head_on_embeddings(setup):
+    m, params, batch = setup
+    alive = jnp.zeros((n_scan_blocks(m),), jnp.float32)
+    logits, _ = resilient_forward(m, params, batch, alive)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_failout_never_all_dead():
+    for i in range(20):
+        alive = failout(jax.random.PRNGKey(i), 4, survive_prob=0.05)
+        assert float(alive.sum()) >= 1.0
+
+
+def test_resilience_report_gain_positive():
+    r = resilience_report(n_stages=3, stage_fail_prob=0.1)
+    assert r.expected_accuracy_with_skip > r.expected_accuracy_without_skip
+    r2 = resilience_report(n_stages=3, stage_fail_prob=0.0)
+    assert abs(r2.expected_accuracy_with_skip
+               - r2.expected_accuracy_without_skip) < 1e-9

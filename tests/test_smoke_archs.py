@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests (required deliverable f).
+
+For every assigned architecture: instantiate the REDUCED variant (2 layers,
+d_model <= 512, <= 4 experts), run one forward and one train step on CPU,
+assert output shapes and no NaNs.  Decode smoke included for every arch
+(all assigned archs have a decode step).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.data import batch_for_model
+from repro.configs.base import InputShape
+from repro.models import Model
+from repro.training import (OptimizerConfig, TrainConfig, init_optimizer,
+                            make_train_step)
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _smoke_batch(cfg, batch=2, seq=32):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (batch, seq), 0,
+                              cfg.vocab_size)
+    b = {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+         "loss_mask": jnp.ones((batch, seq), jnp.float32)}
+    if cfg.family == "encdec":
+        b["frames"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(2), (batch, cfg.encdec.encoder_seq_len,
+                                    cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        b["patch_embeds"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(2), (batch, cfg.frontend_tokens, cfg.d_model),
+            jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_limits(arch):
+    cfg = get_config(arch + "-smoke")
+    assert cfg.num_layers == 2
+    assert cfg.d_model <= 512
+    if cfg.moe.num_experts:
+        assert cfg.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch + "-smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg)
+    out = m.forward(params, batch)
+    assert out.logits.shape == (2, 32, cfg.vocab_size)
+    assert out.logits.dtype == jnp.float32
+    assert not bool(jnp.isnan(out.logits).any())
+    for el in out.exit_logits:
+        assert el.shape == (2, 32, cfg.vocab_size)
+        assert not bool(jnp.isnan(el).any())
+    if cfg.mtp_depth:
+        assert out.mtp_logits is not None
+        assert not bool(jnp.isnan(out.mtp_logits).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = get_config(arch + "-smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = init_optimizer(params)
+    step = jax.jit(make_train_step(m, OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                                      total_steps=10)))
+    batch = _smoke_batch(cfg)
+    params2, opt2, metrics = step(params, opt, batch, jax.random.PRNGKey(3))
+    assert float(metrics["loss"]) > 0
+    assert not bool(jnp.isnan(metrics["loss"]))
+    assert not bool(jnp.isnan(metrics["grad_norm"]))
+    # params actually changed
+    changed = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert changed
+    assert int(opt2["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_config(arch + "-smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    cache = m.init_decode_cache(2, 16)
+    logits, ee, cache2 = m.decode_step(params, cache,
+                                       jnp.ones((2, 1), jnp.int32),
+                                       jnp.int32(3))
+    assert logits.shape == (2, cfg.vocab_size)
+    assert ee.shape[0] == m.n_exits
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_config(a).supports_long_context])
+def test_decode_step_long_mode(arch):
+    cfg = get_config(arch + "-smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    cache = m.init_decode_cache(1, 32, long_mode=True)
+    logits, ee, cache2 = m.decode_step(params, cache,
+                                       jnp.ones((1, 1), jnp.int32),
+                                       jnp.int32(100), long_mode=True)
+    assert not bool(jnp.isnan(logits).any())

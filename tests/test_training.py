@@ -1,0 +1,92 @@
+"""Training substrate: loss decreases, microbatching, failout, checkpoints."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.data import DataConfig, batch_for_model, lm_batch
+from repro.models import Model
+from repro.training import (OptimizerConfig, TrainConfig, init_optimizer,
+                            make_train_step, save_checkpoint,
+                            restore_checkpoint, latest_checkpoint)
+from repro.training.optimizer import lr_at
+
+
+def _train(arch="granite-3-2b-smoke", steps=25, tcfg=TrainConfig(), seed=0):
+    cfg = get_config(arch)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(seed))
+    opt = init_optimizer(params)
+    step = jax.jit(make_train_step(
+        m, OptimizerConfig(lr=1e-3, warmup_steps=3, total_steps=steps), tcfg))
+    shape = InputShape("t", 64, 4, "train")
+    losses = []
+    for i in range(steps):
+        b = batch_for_model(cfg, shape, i)
+        params, opt, metrics = step(params, opt, b,
+                                    jax.random.fold_in(jax.random.PRNGKey(1), i))
+        losses.append(float(metrics["loss"]))
+    return losses
+
+
+def test_loss_decreases():
+    losses = _train(steps=25)
+    assert losses[-1] < losses[0] * 0.8
+    assert not any(np.isnan(l) for l in losses)
+
+
+def test_microbatching_trains():
+    losses = _train(steps=15, tcfg=TrainConfig(microbatches=2))
+    assert losses[-1] < losses[0]
+
+
+def test_failout_trains():
+    losses = _train(steps=15, tcfg=TrainConfig(failout_prob=0.2))
+    assert losses[-1] < losses[0]
+    assert not any(np.isnan(l) for l in losses)
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    assert float(lr_at(cfg, 0)) == 0.0
+    assert abs(float(lr_at(cfg, 10)) - 1e-3) < 1e-9
+    assert float(lr_at(cfg, 100)) == pytest.approx(1e-4, rel=1e-3)
+    assert float(lr_at(cfg, 5)) < float(lr_at(cfg, 10))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("xlstm-350m-smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = init_optimizer(params)
+    state = {"params": params, "opt": opt}
+    fn = save_checkpoint(str(tmp_path), state, 7)
+    assert latest_checkpoint(str(tmp_path)) == fn
+    restored = restore_checkpoint(fn, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_data_pipeline_determinism_and_structure():
+    dcfg = DataConfig(vocab_size=100, seq_len=64, global_batch=4)
+    b1 = lm_batch(dcfg, 3)
+    b2 = lm_batch(dcfg, 3)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = lm_batch(dcfg, 4)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    # copy structure exists: some positions repeat at the lag
+    t = np.asarray(b1["tokens"])
+    lag = dcfg.copy_lag
+    frac = (t[:, lag:] == t[:, :-lag]).mean()
+    assert frac > 0.3
+    # labels are next tokens
+    np.testing.assert_array_equal(np.asarray(b1["labels"])[:, :-1],
+                                  t[:, 1:])
