@@ -1,0 +1,12 @@
+# Tier-1 verify (ROADMAP.md): the whole suite, fail-fast.
+.PHONY: test test-fast serve-bench
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+# skip the slow dry-run compile test for quick iteration
+test-fast:
+	PYTHONPATH=src python -m pytest -x -q -m "not slow"
+
+serve-bench:
+	python benchmarks/serving_bench.py

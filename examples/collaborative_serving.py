@@ -14,7 +14,8 @@ from repro.core.offload import (compress_boundary, compression_decision,
                                 decompress_boundary)
 from repro.kernels import ops as kops
 from repro.models import Model
-from repro.serving import ServeConfig, ServingEngine
+from repro.serving import (ContinuousBatchScheduler, Request, SchedulerConfig,
+                           ServeConfig, ServingEngine)
 
 
 def main():
@@ -34,15 +35,33 @@ def main():
     for name, p in plan_all(g2, sc, deadline=0.5).items():
         print(f"  {name:18s} latency={p.latency*1e3:8.2f}ms acc={p.accuracy:.3f}")
 
-    # ---- 2. run the edge-device paradigm's runtime pieces
+    # ---- 2. run the edge-device paradigm's runtime pieces: requests with
+    # mixed prompt lengths flow through the continuous-batching scheduler
+    # (slot pool + batched prefill + device-side exit counters)
     cfg = get_config("yi-6b-smoke")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    sched = ContinuousBatchScheduler(
+        model, params, SchedulerConfig(n_slots=2, max_len=32,
+                                       exit_threshold=0.9, prefill_chunk=8))
+    import numpy as np
+    rs = np.random.RandomState(1)
+    for length in (5, 8, 12, 7, 3, 10):
+        sched.submit(Request(tokens=rs.randint(0, cfg.vocab_size, length),
+                             max_new=12))
+    sched.run()
+    print(f"\ncontinuous batching (yi-6b-smoke): {sched.n_admitted} requests "
+          f"through {sched.cfg.n_slots} slots, "
+          f"jit caches {sched.jit_cache_sizes()}")
+    print("early-exit serving stats:",
+          {k: round(v, 3) for k, v in sched.exit_stats().items()})
+
+    # ...the batch front-end (ServingEngine) rides on the same scheduler
     engine = ServingEngine(model, params, ServeConfig(exit_threshold=0.9))
     prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
                                  cfg.vocab_size)
     engine.generate(prompts, max_new=12)
-    print("\nearly-exit serving stats (yi-6b-smoke):",
+    print("engine batch stats:",
           {k: round(v, 3) for k, v in engine.exit_stats().items()})
 
     # ---- 3. boundary feature compression (the partition-crossing tensor)

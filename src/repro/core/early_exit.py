@@ -54,6 +54,20 @@ def first_exit_index(exit_entropies, threshold: float, vocab: int):
     return jnp.where(any_hit, idx, n)
 
 
+def exit_stats_dict(exit_counts, tokens_served) -> dict:
+    """Serving-side exit statistics from a first-exit histogram.
+
+    exit_counts [n_exits + 1]: tokens first-exiting at each head, last entry
+    = ran full depth.  Shared by the scheduler and the batch engine so both
+    report the same schema."""
+    total = max(1, int(sum(int(c) for c in exit_counts)))
+    st = {f"exit{i}_frac": float(c) / total
+          for i, c in enumerate(exit_counts[:-1])}
+    st["full_depth_frac"] = float(exit_counts[-1]) / total
+    st["tokens"] = float(tokens_served)
+    return st
+
+
 def branchynet_loss_weights(n_exits: int, final_weight: float = 1.0,
                             exit_weight: float = 0.3) -> Tuple[float, ...]:
     """Joint training weights (BranchyNet trains all exits jointly)."""

@@ -167,6 +167,9 @@ def dryrun_one(arch: str, shape_name: str, mesh_name: str,
         t_compile = time.time() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
+    # older JAX returns one dict; newer returns a list of per-program dicts
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_d = {

@@ -1,7 +1,38 @@
-"""Serving driver: batched decode with early-exit statistics.
+"""Serving driver: batch generation and open-loop Poisson-arrival serving.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b-smoke \
-        --batch 4 --prompt-len 16 --max-new 32 --threshold 0.6
+Two modes:
+
+* ``--mode batch`` (default): one batch of identical-shape requests through
+  ``ServingEngine`` (continuous-batching scheduler under the hood), printing
+  tok/s and early-exit statistics.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch yi-6b-smoke \\
+          --batch 4 --prompt-len 16 --max-new 32 --threshold 0.6
+
+* ``--mode poisson``: open-loop load test.  ``--requests`` requests arrive as
+  a Poisson process at ``--rate`` req/s (exponential inter-arrival gaps),
+  with prompt lengths drawn uniformly from [max(1, prompt_len//4),
+  prompt_len]; the continuous-batching scheduler admits them into
+  ``--slots`` decode slots as slots free up.  Reports p50/p95 end-to-end
+  request latency and sustained decode tok/s.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch yi-6b-smoke \\
+          --mode poisson --rate 4 --requests 32 --slots 8 \\
+          --prompt-len 16 --max-new 32
+
+Flags:
+    --arch        architecture name (configs registry; "-smoke" for reduced)
+    --mode        batch | poisson
+    --batch       [batch] requests per batch
+    --prompt-len  max prompt length (poisson draws lengths up to this)
+    --max-new     tokens generated per request
+    --threshold   early-exit entropy threshold (normalized, 0..1)
+    --slots       [poisson] decode slot-pool size (concurrent requests)
+    --rate        [poisson] mean arrival rate, requests/second
+    --requests    [poisson] total requests in the trace
+    --prefill-chunk  tokens per jitted prefill dispatch
+    --seed        RNG seed for prompts/arrivals
+    --long        long-context (ring-buffer KV) mode
 """
 from __future__ import annotations
 
@@ -10,15 +41,18 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import Model, ShardCtx
-from repro.serving import ServeConfig, ServingEngine
+from repro.serving import (ContinuousBatchScheduler, Request, ServeConfig,
+                           ServingEngine, SchedulerConfig)
 
 
 def serve(arch: str, batch: int, prompt_len: int, max_new: int, *,
           threshold: float = 0.5, long_mode: bool = False, seed: int = 0,
           params=None):
+    """Closed one-batch generation (the quickstart path)."""
     cfg = get_config(arch)
     model = Model(cfg, ShardCtx(None))
     rng = jax.random.PRNGKey(seed)
@@ -42,17 +76,106 @@ def serve(arch: str, batch: int, prompt_len: int, max_new: int, *,
     return out, stats
 
 
+def serve_poisson(arch: str, *, rate: float = 4.0, n_requests: int = 32,
+                  slots: int = 8, prompt_len: int = 16, max_new: int = 32,
+                  threshold: float = 0.5, prefill_chunk: int = 16,
+                  long_mode: bool = False, seed: int = 0, params=None,
+                  quiet: bool = False):
+    """Open-loop Poisson-arrival serving through the continuous-batching
+    scheduler.  Returns a stats dict (p50/p95 latency, sustained tok/s,
+    jit cache sizes — the no-recompile invariant)."""
+    cfg = get_config(arch)
+    model = Model(cfg, ShardCtx(None))
+    if params is None:
+        params = model.init(jax.random.PRNGKey(seed))
+    sched = ContinuousBatchScheduler(
+        model, params,
+        SchedulerConfig(n_slots=slots, max_len=prompt_len + max_new,
+                        prefill_chunk=min(prefill_chunk, max(1, prompt_len)),
+                        exit_threshold=threshold, long_mode=long_mode))
+
+    rs = np.random.RandomState(seed)
+    arrivals = np.cumsum(rs.exponential(1.0 / rate, n_requests))
+    lengths = rs.randint(max(1, prompt_len // 4), prompt_len + 1, n_requests)
+    reqs = [Request(tokens=rs.randint(0, cfg.vocab_size, int(l)),
+                    max_new=max_new) for l in lengths]
+    if cfg.family == "encdec":
+        for r in reqs:
+            r.frames = 0.02 * rs.randn(cfg.encdec.encoder_seq_len,
+                                       cfg.d_model).astype(np.float32)
+
+    # warm up compiles outside the timed trace (one admit + one step)
+    warm = Request(tokens=rs.randint(0, cfg.vocab_size, int(lengths[0])),
+                   max_new=1)
+    if cfg.family == "encdec":
+        warm.frames = reqs[0].frames
+    sched.submit(warm)
+    sched.run()
+    sched.reset_stats()               # warmup must not skew the report
+
+    t0 = time.time()
+    i = 0
+    while len(sched.completed) < n_requests:
+        now = time.time() - t0
+        while i < n_requests and arrivals[i] <= now:
+            sched.submit(reqs[i])
+            i += 1
+        if sched.has_work:
+            sched.tick()
+        elif i < n_requests:
+            time.sleep(min(0.002, max(0.0, arrivals[i] - now)))
+    makespan = time.time() - t0
+
+    lat = np.asarray([r.t_done - (t0 + arrivals[j])
+                      for j, r in enumerate(reqs)])
+    total_tokens = sum(len(r.out_tokens) for r in reqs)
+    stats = {
+        "requests": n_requests,
+        "slots": slots,
+        "rate_req_s": rate,
+        "makespan_s": makespan,
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p95_latency_s": float(np.percentile(lat, 95)),
+        "sustained_tok_s": total_tokens / makespan,
+        "tokens": total_tokens,
+        "jit_cache_sizes": sched.jit_cache_sizes(),
+        "exit_stats": sched.exit_stats(),
+    }
+    if not quiet:
+        print(f"arch={cfg.name} poisson rate={rate}/s requests={n_requests} "
+              f"slots={slots}")
+        print(f"  p50={stats['p50_latency_s']*1e3:.0f}ms "
+              f"p95={stats['p95_latency_s']*1e3:.0f}ms "
+              f"sustained={stats['sustained_tok_s']:.1f} tok/s "
+              f"makespan={makespan:.2f}s")
+        print(f"  jit cache sizes (must stay 1): {stats['jit_cache_sizes']}")
+    return stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", default="batch", choices=["batch", "poisson"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--threshold", type=float, default=0.5)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=4.0)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--long", action="store_true")
     args = ap.parse_args()
-    serve(args.arch, args.batch, args.prompt_len, args.max_new,
-          threshold=args.threshold, long_mode=args.long)
+    if args.mode == "poisson":
+        serve_poisson(args.arch, rate=args.rate, n_requests=args.requests,
+                      slots=args.slots, prompt_len=args.prompt_len,
+                      max_new=args.max_new, threshold=args.threshold,
+                      prefill_chunk=args.prefill_chunk, long_mode=args.long,
+                      seed=args.seed)
+    else:
+        serve(args.arch, args.batch, args.prompt_len, args.max_new,
+              threshold=args.threshold, long_mode=args.long, seed=args.seed)
 
 
 if __name__ == "__main__":

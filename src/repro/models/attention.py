@@ -193,41 +193,48 @@ def gqa_forward(cfg, params, x, positions, *, causal: bool = True,
     return jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype)), (k, v)
 
 
+def _decode_positions(position, batch: int):
+    """Normalize a decode position ([] scalar or [B] per-slot vector) to [B]."""
+    pos = jnp.asarray(position, jnp.int32).reshape(-1)
+    return jnp.broadcast_to(pos, (batch,))
+
+
 def gqa_decode(cfg, params, x, cache_k, cache_v, position, *, window: int = 0):
-    """One-token decode.  x [B,1,D]; caches [B,Smax,Nkv,H]; position [] int.
+    """One-token decode.  x [B,1,D]; caches [B,Smax,Nkv,H]; position []
+    int or [B] int (per-slot positions for continuous batching).
 
     window>0: the cache is a RING BUFFER of size window (sub-linear memory
     for long_500k); slot = position % window and scores use gathered
     absolute positions for RoPE + masking.
     """
     hd = cfg.resolved_head_dim
+    b = x.shape[0]
     smax = cache_k.shape[1]
     q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
     k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(x.dtype))
     v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"].astype(x.dtype))
-    pos = jnp.asarray(position)[None]                     # [1]
-    q = apply_positional(q, pos[None].astype(jnp.int32), cfg.rope, cfg.rope_theta)
-    k = apply_positional(k, pos[None].astype(jnp.int32), cfg.rope, cfg.rope_theta)
-    slot = (position % smax) if window else jnp.minimum(position, smax - 1)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(
-        cache_k, k.astype(cache_k.dtype), slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(
-        cache_v, v.astype(cache_v.dtype), slot, axis=1)
-    # validity of each cache slot
+    pos_b = _decode_positions(position, b)                # [B]
+    q = apply_positional(q, pos_b[:, None], cfg.rope, cfg.rope_theta)
+    k = apply_positional(k, pos_b[:, None], cfg.rope, cfg.rope_theta)
+    slot = (pos_b % smax) if window else jnp.minimum(pos_b, smax - 1)
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0].astype(cache_v.dtype))
+    # validity of each cache slot, per batch row
     idx = jnp.arange(smax)
     if window:
         # slot i holds absolute position: the most recent occupant
-        age = (slot - idx) % smax                          # 0..smax-1, 0 = newest
-        valid = age < jnp.minimum(position + 1, smax)
+        age = (slot[:, None] - idx[None, :]) % smax        # 0..smax-1, 0 = newest
+        valid = age < jnp.minimum(pos_b + 1, smax)[:, None]
     else:
-        valid = idx <= position
-    b, _, nq, _ = q.shape
+        valid = idx[None, :] <= pos_b[:, None]             # [B, Smax]
+    nq = q.shape[2]
     nkv = cache_k.shape[2]
     g = nq // nkv
     qg = q.reshape(b, 1, nkv, g, hd)
     scores = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32),
                         cache_k.astype(jnp.float32)) / math.sqrt(hd)
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bngst,btnh->bsngh", probs, cache_v.astype(jnp.float32))
     out = out.reshape(b, 1, nq, hd).astype(x.dtype)
@@ -273,7 +280,8 @@ def mla_scores_ctx(cfg, params, q_nope, q_rope, c_kv, k_rope, mask):
                         c_kv.astype(jnp.float32))
     scores += jnp.einsum("bsnh,bth->bnst", q_rope.astype(jnp.float32),
                          k_rope.astype(jnp.float32))
-    scores = jnp.where(mask[None, None], scores * scale, NEG_INF)
+    m = mask if mask.ndim == 3 else mask[None]             # [B|1, Sq, Skv]
+    scores = jnp.where(m[:, None], scores * scale, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     ctx_lat = jnp.einsum("bnst,btr->bsnr", probs, c_kv.astype(jnp.float32))
     out = jnp.einsum("bsnr,rnv->bsnv", ctx_lat.astype(q_nope.dtype),
@@ -290,22 +298,26 @@ def mla_forward(cfg, params, x, positions, *, causal: bool = True, window: int =
 
 
 def mla_decode(cfg, params, x, cache_ckv, cache_krope, position, *, window: int = 0):
-    """One-token MLA decode against the latent cache (ring buffer if window)."""
+    """One-token MLA decode against the latent cache (ring buffer if window).
+
+    `position` is a [] scalar or a [B] per-slot vector (continuous batching).
+    """
+    b = x.shape[0]
     smax = cache_ckv.shape[1]
-    pos = jnp.asarray(position)[None][None].astype(jnp.int32)  # [1,1]
-    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, params, x, pos)
-    slot = (position % smax) if window else jnp.minimum(position, smax - 1)
-    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache_ckv, c_kv.astype(cache_ckv.dtype), slot, axis=1)
-    cache_krope = jax.lax.dynamic_update_slice_in_dim(
-        cache_krope, k_rope.astype(cache_krope.dtype), slot, axis=1)
+    pos_b = _decode_positions(position, b)                 # [B]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, params, x, pos_b[:, None])
+    slot = (pos_b % smax) if window else jnp.minimum(pos_b, smax - 1)
+    bidx = jnp.arange(b)
+    cache_ckv = cache_ckv.at[bidx, slot].set(c_kv[:, 0].astype(cache_ckv.dtype))
+    cache_krope = cache_krope.at[bidx, slot].set(
+        k_rope[:, 0].astype(cache_krope.dtype))
     idx = jnp.arange(smax)
     if window:
-        age = (slot - idx) % smax
-        valid = age < jnp.minimum(position + 1, smax)
+        age = (slot[:, None] - idx[None, :]) % smax
+        valid = age < jnp.minimum(pos_b + 1, smax)[:, None]
     else:
-        valid = idx <= position
-    mask = valid[None, :]                                  # [Sq=1, Skv]
+        valid = idx[None, :] <= pos_b[:, None]             # [B, Smax]
+    mask = valid[:, None, :]                               # [B, Sq=1, Skv]
     out = mla_scores_ctx(cfg, params, q_nope, q_rope, cache_ckv, cache_krope, mask)
     y = jnp.einsum("bsnv,nvd->bsd", out, params["wo"].astype(x.dtype))
     return y, (cache_ckv, cache_krope)

@@ -238,9 +238,35 @@ class Model:
                 for _ in range(n_sites)]
         return cache
 
+    def merge_decode_cache(self, take_new, new_cache, old_cache):
+        """Row-wise cache merge: slot b takes `new_cache` where take_new[b].
+
+        Used by the continuous-batching scheduler to admit freshly prefilled
+        requests into freed slots without touching in-flight slots.  Block
+        caches are stacked [n_layers, B, ...] (batch axis 1); shared-attn
+        caches are [B, ...] (batch axis 0).
+        """
+        def row_where(axis):
+            def f(n, o):
+                shape = [1] * n.ndim
+                shape[axis] = -1
+                return jnp.where(take_new.reshape(shape), n, o)
+            return f
+
+        out = {"blocks": [jax.tree.map(row_where(1), n, o)
+                          for n, o in zip(new_cache["blocks"],
+                                          old_cache["blocks"])]}
+        if "shared_attn" in old_cache:
+            out["shared_attn"] = [jax.tree.map(row_where(0), n, o)
+                                  for n, o in zip(new_cache["shared_attn"],
+                                                  old_cache["shared_attn"])]
+        return out
+
     def decode_step(self, params, cache, tokens, position, *,
                     long_mode: bool = False):
-        """tokens [B,1] int32; position [] int32.
+        """tokens [B,1] int32; position [] int32 or [B] int32 (per-slot
+        positions — continuous batching serves requests at different depths
+        in one fixed-shape step).
 
         Returns (logits [B,V] fp32, exit_entropies [n_exits,B] fp32, cache).
         Exit entropies feed the early-exit policy in serving/engine.py.

@@ -1,5 +1,8 @@
 from repro.serving.engine import (ServeConfig, ServingEngine, make_serve_step,
                                   prime_whisper_cross_cache)
+from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
+                                     SchedulerConfig)
 
 __all__ = ["ServeConfig", "ServingEngine", "make_serve_step",
-           "prime_whisper_cross_cache"]
+           "prime_whisper_cross_cache", "ContinuousBatchScheduler",
+           "Request", "SchedulerConfig"]

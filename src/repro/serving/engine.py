@@ -1,10 +1,11 @@
 """Serving engine: batched decode with early-exit accounting.
 
 `make_serve_step(model)` builds the pure function the dry-run lowers for
-decode shapes: (params, cache, tokens [B,1], position []) ->
+decode shapes: (params, cache, tokens [B,1], position [] or [B]) ->
 (logits [B,V], exit_entropies [n_exits,B], cache).
 
-`ServingEngine` is the host-side loop: request batching, greedy/temperature
+`ServingEngine` is the batch front-end over the continuous-batching
+scheduler (repro.serving.scheduler): batched prefill, greedy/temperature
 sampling, SPINN-style exit statistics (which fraction of tokens would have
 exited at each head under the configured entropy threshold — the number the
 edge-device paradigm planner consumes), and whisper cross-cache priming.
@@ -12,15 +13,15 @@ edge-device paradigm planner consumes), and whisper cross-cache priming.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.early_exit import first_exit_index
-from repro.models import blocks as B
+from repro.core.early_exit import exit_stats_dict
+from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
+                                     SchedulerConfig)
 
 
 @dataclasses.dataclass
@@ -77,17 +78,26 @@ def prime_whisper_cross_cache(model, params, cache, frames):
 
 
 class ServingEngine:
-    """Host loop over a jitted serve_step with exit-statistics accounting
-    and optional adaptive threshold control (survey §7.3)."""
+    """Batch-generation front-end over the continuous-batching scheduler.
+
+    ``generate`` submits each prompt row as a request to a
+    ``ContinuousBatchScheduler`` sized to the batch: the prompt runs through
+    the scheduler's chunked batched prefill (a jitted scan — no host-side
+    token-at-a-time loop), decode runs as fixed-shape pool steps, and
+    SPINN-style exit statistics accumulate in device-side counters that the
+    scheduler flushes periodically.  Optional adaptive threshold control
+    (survey §7.3) is driven from those flushed counters.
+    """
 
     def __init__(self, model, params, scfg: ServeConfig = ServeConfig()):
         self.model = model
         self.params = params
         self.scfg = scfg
-        self._step = jax.jit(make_serve_step(model, long_mode=scfg.long_mode))
         self.exit_counts = np.zeros(model.n_exits + 1, np.int64)
         self.tokens_served = 0
         self.controller = None
+        self._adaptive_every = 64
+        self._scheds: Dict[Tuple[int, int], Any] = {}
 
     def enable_adaptive(self, target_depth_fraction: float,
                         update_every: int = 64):
@@ -96,72 +106,54 @@ class ServingEngine:
         self.controller = AdaptiveExitController(
             target_depth_fraction, self.scfg.exit_threshold)
         self._adaptive_every = update_every
-        self._since_update = 0
-        # depth fraction of each exit boundary within the plan
-        bounds = [s[2] for s in self.model.plan if s[0] == "exit"]
-        self._exit_depths = [b / self.model.cfg.num_layers for b in bounds]
+
+    # schedulers cached per pool shape; evict oldest beyond this many so a
+    # long-lived engine serving many shapes doesn't pin device caches
+    _MAX_CACHED_SCHEDS = 4
+
+    def _scheduler(self, n_slots: int, max_len: int):
+        """Schedulers are cached by pool shape so repeated generate() calls
+        with the same (batch, seq) reuse the compiled step functions."""
+        key = (n_slots, max_len)
+        if key in self._scheds:
+            self._scheds[key] = self._scheds.pop(key)   # LRU: refresh on hit
+        else:
+            while len(self._scheds) >= self._MAX_CACHED_SCHEDS:
+                self._scheds.pop(next(iter(self._scheds)))
+            self._scheds[key] = ContinuousBatchScheduler(
+                self.model, self.params,
+                SchedulerConfig(n_slots=n_slots, max_len=max_len,
+                                exit_threshold=self.scfg.exit_threshold,
+                                temperature=self.scfg.temperature,
+                                long_mode=self.scfg.long_mode))
+        sched = self._scheds[key]
+        sched.params = self.params     # pick up any engine params update
+        return sched
 
     def generate(self, prompt_tokens, *, max_new: int = 32,
                  frames=None, rng=None):
         """prompt_tokens [B, S0] -> generated [B, max_new]."""
         cfg = self.model.cfg
         b, s0 = prompt_tokens.shape
-        cache_len = s0 + max_new
-        cache = self.model.init_decode_cache(b, cache_len,
-                                             long_mode=self.scfg.long_mode)
         if cfg.family == "encdec":
             assert frames is not None, "whisper needs encoder frames"
-            cache = prime_whisper_cross_cache(self.model, self.params, cache,
-                                              frames)
-        # consume the prompt
-        logits = None
-        for t in range(s0):
-            logits, ee, cache = self._step(
-                self.params, cache, prompt_tokens[:, t:t + 1], jnp.int32(t))
-        out = []
-        tok = self._sample(logits, rng, 0)
-        for i in range(max_new):
-            out.append(tok)
-            logits, ee, cache = self._step(self.params, cache, tok,
-                                           jnp.int32(s0 + i))
-            self._account_exits(ee)
-            tok = self._sample(logits, rng, i + 1)
-        return jnp.concatenate(out, axis=1)
-
-    def _sample(self, logits, rng, i):
-        if logits is None:
-            return jnp.zeros((1, 1), jnp.int32)
-        if self.scfg.temperature <= 0.0 or rng is None:
-            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        k = jax.random.fold_in(rng, i)
-        return jax.random.categorical(
-            k, logits / self.scfg.temperature)[:, None].astype(jnp.int32)
-
-    def _account_exits(self, exit_entropies):
-        if exit_entropies.shape[0] == 0:
-            self.tokens_served += exit_entropies.shape[-1]
-            return
-        thr = (self.controller.threshold if self.controller
-               else self.scfg.exit_threshold)
-        idx = np.asarray(first_exit_index(
-            exit_entropies, thr, self.model.cfg.vocab_size))
-        for i in idx:
-            self.exit_counts[int(i)] += 1
-        self.tokens_served += len(idx)
-        if self.controller is not None:
-            self._since_update += len(idx)
-            if self._since_update >= self._adaptive_every:
-                total = max(1, int(self.exit_counts.sum()))
-                fracs = [c / total for c in self.exit_counts[:-1]]
-                self.controller.update(fracs, self._exit_depths)
-                self._since_update = 0
+        sched = self._scheduler(b, s0 + max_new)
+        sched.controller = self.controller
+        sched.adaptive_every = self._adaptive_every
+        counts_before = sched.flush_counters().copy()
+        tokens_before = sched.tokens_served
+        toks = np.asarray(prompt_tokens)
+        reqs = [Request(tokens=toks[i], max_new=max_new,
+                        frames=(frames[i] if frames is not None else None))
+                for i in range(b)]
+        for r in reqs:
+            sched.submit(r)
+        sched.run(rng=rng)
+        self.exit_counts += sched.flush_counters() - counts_before
+        self.tokens_served += sched.tokens_served - tokens_before
+        sched.completed.clear()        # requests are returned, not retained
+        out = np.stack([np.asarray(r.out_tokens, np.int32) for r in reqs])
+        return jnp.asarray(out)
 
     def exit_stats(self) -> Dict[str, float]:
-        total = max(1, int(self.exit_counts.sum()))
-        st = {f"exit{i}_frac": float(c) / total
-              for i, c in enumerate(self.exit_counts[:-1])}
-        st["full_depth_frac"] = float(self.exit_counts[-1]) / total
-        # expected depth saving (segment granularity)
-        n = self.model.n_exits
-        st["tokens"] = float(self.tokens_served)
-        return st
+        return exit_stats_dict(self.exit_counts, self.tokens_served)

@@ -1,0 +1,391 @@
+"""Continuous-batching serving scheduler: request queue + slot-based KV cache.
+
+The survey's edge-device paradigm (§4, Edgent/SPINN) frames early-exit
+serving as a throughput/deadline problem, which only becomes measurable once
+requests arrive and depart asynchronously.  This module provides that
+runtime:
+
+* A FIFO request queue feeding a fixed pool of ``n_slots`` decode slots.
+  Each slot owns one row of the (fixed-shape) decode cache; per-slot
+  position/length/state live on the host.
+* **Batched prefill**: an admitted request's whole prompt is replayed in
+  chunked jitted scans (``prefill_chunk`` tokens per dispatch) over a fresh
+  cache, then row-merged into the pool — in-flight slots are never touched
+  and the prompt is never fed through a host-side token-at-a-time loop.
+* **One fixed-shape jitted decode step** for the whole pool: tokens [B,1],
+  per-slot positions [B], active mask [B], exit-statistics counters and the
+  entropy threshold are all *arguments*, so slot churn (admissions,
+  completions, mixed prompt lengths, adaptive-threshold updates) never
+  recompiles.  Tests assert ``jit_cache_sizes() == {"decode": 1, ...}``.
+* **Device-side exit counters**: per-step first-exit histograms accumulate
+  in an on-device int32 vector and are flushed to host every
+  ``flush_every`` steps (or when the adaptive controller needs them) —
+  not synced every token like the old engine.
+
+Typical use::
+
+    sched = ContinuousBatchScheduler(model, params, SchedulerConfig(
+        n_slots=8, max_len=192, exit_threshold=0.6))
+    for prompt in prompts:
+        sched.submit(Request(tokens=prompt, max_new=32))
+    sched.run()                       # drain queue + slots
+    outs = [r.out_tokens for r in sched.completed]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.early_exit import exit_stats_dict, first_exit_index
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request.  ``tokens`` is the prompt [S0] int; ``out_tokens``
+    is filled by the scheduler (first token comes from the prompt's last
+    logits, like the sequential engine)."""
+    tokens: Any                        # [S0] int array (np or jnp)
+    max_new: int = 32
+    eos_id: Optional[int] = None
+    frames: Any = None                 # [Tenc, D] for encdec (whisper) archs
+    req_id: int = -1
+    # --- filled by the scheduler ---
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_done: float = 0.0
+    slot: int = -1
+    done: bool = False
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    n_slots: int = 8
+    max_len: int = 256                 # per-slot logical sequence capacity
+    prefill_chunk: int = 16            # tokens per jitted prefill dispatch
+    exit_threshold: float = 0.5
+    temperature: float = 0.0           # 0 = greedy
+    flush_every: int = 32              # decode steps between counter flushes
+    long_mode: bool = False
+
+
+class ContinuousBatchScheduler:
+    """Slot-based continuous batching over ``Model.decode_step``.
+
+    Host-side state is tiny numpy vectors (positions, active mask, current
+    tokens); everything heavy (cache, counters) stays on device.  An optional
+    ``controller`` (AdaptiveExitController) is driven from the flushed
+    counters every ``adaptive_every`` served tokens.
+    """
+
+    def __init__(self, model, params, cfg: SchedulerConfig = SchedulerConfig(),
+                 controller=None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.controller = controller
+        self.adaptive_every = 64
+
+        b = cfg.n_slots
+        mcfg = model.cfg
+        self._vocab = mcfg.vocab_size
+        self._n_exits = model.n_exits
+        self._clen = model.cache_len_for(cfg.max_len, cfg.long_mode)
+        bounds = [s[2] for s in model.plan if s[0] == "exit"]
+        self._exit_depths = [bd / mcfg.num_layers for bd in bounds]
+
+        # --- queue / slot state (host) ---
+        self.queue: deque = deque()
+        self.completed: List[Request] = []
+        self.positions = np.zeros(b, np.int64)     # next decode position
+        self.active = np.zeros(b, bool)
+        self.current_tok = np.zeros(b, np.int32)   # token each slot feeds next
+        self.steps_taken = np.zeros(b, np.int64)   # decode steps this request
+        self.slot_req: List[Optional[Request]] = [None] * b
+        self.tokens_served = 0
+        self.exit_counts = np.zeros(self._n_exits + 1, np.int64)
+        self.n_admitted = 0
+        self.n_submitted = 0
+        self._step_idx = 0
+        self._tokens_since_adapt = 0
+        self._rng = None
+        # per-run fold counters, reset by run() so identical (requests, rng)
+        # reproduce identical samples across calls (seed-engine semantics)
+        self._rng_tick = 0
+        self._admit_tick = 0
+
+        # --- jitted, fixed-shape device functions ---
+        self._counters = jnp.zeros(self._n_exits + 1, jnp.int32)
+        self._zero_key = jax.random.PRNGKey(0)
+        self._init_cache = jax.jit(
+            lambda: model.init_decode_cache(b, self._clen,
+                                            long_mode=cfg.long_mode))
+        # donate dead-after-call buffers (caches, counters, carried logits)
+        # so XLA aliases them in place instead of copying the KV arena
+        # every token; merge donates only the old pool (the output can alias
+        # one side, donating both leaves unusable buffers)
+        self._merge = jax.jit(model.merge_decode_cache,
+                              donate_argnums=(2,))
+        self._prefill_chunk = jax.jit(self._make_prefill_chunk(),
+                                      donate_argnums=(1, 5))
+        self._decode = jax.jit(self._make_decode_step(),
+                               donate_argnums=(1, 5))
+        if mcfg.family == "encdec":
+            from repro.serving.engine import prime_whisper_cross_cache
+            self._prime = jax.jit(
+                lambda p, c, f: prime_whisper_cross_cache(model, p, c, f))
+        self.cache = self._init_cache()
+
+    # ------------------------------------------------------------------
+    # jitted step builders
+    # ------------------------------------------------------------------
+    def _make_prefill_chunk(self):
+        model, cfg = self.model, self.cfg
+
+        def chunk(params, cache, tokens, t0, lengths, last_logits):
+            """Replay ``tokens`` [B,C] at positions t0..t0+C-1; rows update
+            only while t < lengths[b].  Carries the last real token's logits
+            per row so admission can sample the first output token."""
+            n = tokens.shape[1]
+
+            def body(carry, i):
+                cache, last = carry
+                tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+                t = t0 + i
+                logits, _, new_cache = model.decode_step(
+                    params, cache, tok, t, long_mode=cfg.long_mode)
+                act = t < lengths
+                cache = model.merge_decode_cache(act, new_cache, cache)
+                last = jnp.where((t == lengths - 1)[:, None], logits, last)
+                return (cache, last), None
+
+            (cache, last), _ = jax.lax.scan(body, (cache, last_logits),
+                                            jnp.arange(n))
+            return cache, last
+
+        return chunk
+
+    def _make_decode_step(self):
+        model, cfg = self.model, self.cfg
+        n_exits, vocab = self._n_exits, self._vocab
+
+        def step(params, cache, tokens, positions, active, counters,
+                 threshold, key, step_idx):
+            logits, ee, cache = model.decode_step(
+                params, cache, tokens, positions, long_mode=cfg.long_mode)
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if cfg.temperature > 0.0:
+                k = jax.random.fold_in(key, step_idx)
+                nxt = jax.random.categorical(
+                    k, logits / cfg.temperature).astype(jnp.int32)
+            else:
+                nxt = greedy
+            if n_exits:
+                idx = first_exit_index(ee, threshold, vocab)
+            else:
+                idx = jnp.zeros((tokens.shape[0],), jnp.int32)
+            hist = jax.nn.one_hot(idx, n_exits + 1, dtype=jnp.int32)
+            counters = counters + jnp.sum(
+                hist * active.astype(jnp.int32)[:, None], axis=0)
+            # both tokens come back so the host can honor "greedy unless an
+            # rng was provided" (seed-engine semantics) without recompiling
+            return greedy, nxt, cache, counters
+
+        return step
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        toks = np.asarray(req.tokens).reshape(-1)
+        assert toks.size >= 1, "empty prompt"
+        assert req.max_new >= 1, "max_new must be >= 1"
+        assert toks.size + req.max_new <= self.cfg.max_len, \
+            f"prompt {toks.size} + max_new {req.max_new} exceeds " \
+            f"max_len {self.cfg.max_len}"
+        req.tokens = toks.astype(np.int32)
+        if req.req_id < 0:
+            req.req_id = self.n_submitted
+        req.t_submit = time.time()
+        self.n_submitted += 1
+        self.queue.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active.any())
+
+    def tick(self) -> bool:
+        """Admit into free slots, then run one decode step.  Returns whether
+        any device work happened (False = idle)."""
+        admitted = self._admit()
+        stepped = self.step()
+        return admitted or stepped
+
+    def run(self, rng=None):
+        """Drain the queue and all slots to completion."""
+        self._rng = rng
+        self._rng_tick = 0
+        self._admit_tick = 0
+        while self.has_work:
+            if not self.tick():       # pragma: no cover - defensive
+                break
+        self.flush_counters()
+
+    # ------------------------------------------------------------------
+    # admission: chunked batched prefill into freed slots
+    # ------------------------------------------------------------------
+    def _admit(self) -> bool:
+        free = [i for i in range(self.cfg.n_slots) if self.slot_req[i] is None]
+        if not free or not self.queue:
+            return False
+        take = free[: len(self.queue)]
+        reqs = [self.queue.popleft() for _ in take]
+        b, chunk = self.cfg.n_slots, self.cfg.prefill_chunk
+        max_len = max(r.tokens.size for r in reqs)
+        n_chunks = -(-max_len // chunk)
+        tokens = np.zeros((b, n_chunks * chunk), np.int32)
+        lengths = np.zeros(b, np.int32)
+        admit = np.zeros(b, bool)
+        now = time.time()
+        for slot, r in zip(take, reqs):
+            tokens[slot, : r.tokens.size] = r.tokens
+            lengths[slot] = r.tokens.size
+            admit[slot] = True
+            r.slot, r.t_admit = slot, now
+            self.slot_req[slot] = r
+
+        fresh = self._init_cache()
+        if self.model.cfg.family == "encdec":
+            ec = self.model.cfg.encdec
+            frames = np.zeros((b, ec.encoder_seq_len, self.model.cfg.d_model),
+                              np.float32)
+            for slot, r in zip(take, reqs):
+                assert r.frames is not None, "encdec request needs frames"
+                frames[slot] = np.asarray(r.frames, np.float32)
+            fresh = self._prime(self.params, fresh,
+                                jnp.asarray(frames, jnp.bfloat16))
+
+        last = jnp.zeros((b, self._vocab), jnp.float32)
+        lengths_d = jnp.asarray(lengths)
+        for ci in range(n_chunks):
+            fresh, last = self._prefill_chunk(
+                self.params, fresh,
+                jnp.asarray(tokens[:, ci * chunk:(ci + 1) * chunk]),
+                jnp.int32(ci * chunk), lengths_d, last)
+        self.cache = self._merge(jnp.asarray(admit), fresh, self.cache)
+
+        logits_np = np.asarray(last)
+        for slot, r in zip(take, reqs):
+            tok0 = self._sample_first(logits_np[slot])
+            r.out_tokens.append(tok0)
+            self.positions[slot] = lengths[slot]
+            self.current_tok[slot] = tok0
+            self.steps_taken[slot] = 0
+            self.active[slot] = True
+            self.n_admitted += 1
+            if r.eos_id is not None and tok0 == r.eos_id:
+                self._finish(slot)
+        return True
+
+    def _sample_first(self, logits_row) -> int:
+        # seed-engine semantics: sampling needs BOTH temperature>0 and an rng
+        if self.cfg.temperature <= 0.0 or self._rng is None:
+            return int(np.argmax(logits_row))
+        self._admit_tick += 1
+        key = jax.random.fold_in(self._rng, 1_000_003 + self._admit_tick)
+        return int(jax.random.categorical(
+            key, jnp.asarray(logits_row) / self.cfg.temperature))
+
+    # ------------------------------------------------------------------
+    # decode: one fixed-shape step over the whole pool
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        if not self.active.any():
+            return False
+        thr = (self.controller.threshold if self.controller is not None
+               else self.cfg.exit_threshold)
+        key = self._rng if self._rng is not None else self._zero_key
+        greedy, sampled, self.cache, self._counters = self._decode(
+            self.params, self.cache,
+            jnp.asarray(self.current_tok[:, None]),
+            jnp.asarray(self.positions.astype(np.int32)),
+            jnp.asarray(self.active),
+            self._counters, jnp.float32(thr), key, jnp.int32(self._rng_tick))
+        nxt = np.asarray(sampled if self._rng is not None else greedy)
+        self._step_idx += 1
+        self._rng_tick += 1
+        n_active = int(self.active.sum())
+        self.tokens_served += n_active
+        self._tokens_since_adapt += n_active
+        for slot in np.nonzero(self.active)[0]:
+            r = self.slot_req[slot]
+            self.steps_taken[slot] += 1
+            self.positions[slot] += 1
+            if self.steps_taken[slot] >= r.max_new:
+                self._finish(slot)      # last emitted token just ran; the
+                continue                # trailing sample is discarded
+            tok = int(nxt[slot])
+            r.out_tokens.append(tok)
+            self.current_tok[slot] = tok
+            if r.eos_id is not None and tok == r.eos_id:
+                self._finish(slot)
+        self._maybe_flush()
+        return True
+
+    def _finish(self, slot: int):
+        r = self.slot_req[slot]
+        r.done, r.t_done = True, time.time()
+        self.completed.append(r)
+        self.slot_req[slot] = None
+        self.active[slot] = False
+
+    # ------------------------------------------------------------------
+    # exit statistics: device counters, periodic flush, adaptive control
+    # ------------------------------------------------------------------
+    def _maybe_flush(self):
+        if (self.controller is not None
+                and self._tokens_since_adapt >= self.adaptive_every):
+            self.flush_counters()
+            total = max(1, int(self.exit_counts.sum()))
+            fracs = [c / total for c in self.exit_counts[:-1]]
+            self.controller.update(fracs, self._exit_depths)
+            self._tokens_since_adapt = 0
+        elif self._step_idx % self.cfg.flush_every == 0:
+            self.flush_counters()
+
+    def flush_counters(self) -> np.ndarray:
+        """Sync the cumulative device-side exit histogram to host."""
+        self.exit_counts = np.asarray(self._counters, np.int64)
+        return self.exit_counts
+
+    def reset_stats(self):
+        """Zero served-token accounting and exit counters (e.g. after a
+        compile-warmup request, so reports cover only the real trace)."""
+        self._counters = jnp.zeros(self._n_exits + 1, jnp.int32)
+        self.exit_counts = np.zeros(self._n_exits + 1, np.int64)
+        self.tokens_served = 0
+        self._tokens_since_adapt = 0
+        self.completed.clear()
+
+    def exit_stats(self) -> Dict[str, float]:
+        self.flush_counters()
+        return exit_stats_dict(self.exit_counts, self.tokens_served)
+
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        """Compile counts of the hot jitted functions — the no-recompilation
+        invariant the tests assert (slot churn must never retrace).
+        Returns -1 per entry when the installed JAX doesn't expose a
+        compile-cache probe (private API; signature may churn)."""
+        def size(fn):
+            try:
+                return fn._cache_size()
+            except AttributeError:      # pragma: no cover - future JAX
+                return -1
+        return {"decode": size(self._decode),
+                "prefill": size(self._prefill_chunk)}

@@ -1,0 +1,28 @@
+"""Version-tolerant AbstractMesh construction.
+
+JAX changed ``AbstractMesh``'s constructor across releases:
+
+* older releases:  ``AbstractMesh(shape_tuple, axis_names)`` with
+  ``shape_tuple = (16, 16)`` and ``axis_names = ("data", "model")``
+* current releases: ``AbstractMesh((("data", 16), ("model", 16)))`` — one
+  tuple of (name, size) pairs (optionally followed by axis_types).
+
+``make_abstract_mesh(sizes, names)`` accepts the split form and builds the
+mesh under whichever signature the installed JAX exposes, so sharding-rule
+tests don't break on a JAX upgrade.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from jax.sharding import AbstractMesh
+
+
+def make_abstract_mesh(sizes: Sequence[int], names: Sequence[str]) -> AbstractMesh:
+    """AbstractMesh from parallel (sizes, names), e.g. ((16, 16), ("data",
+    "model")), tolerant to the installed JAX's constructor signature."""
+    assert len(sizes) == len(names), (sizes, names)
+    try:                                   # current API: ((name, size), ...)
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except (TypeError, ValueError):        # legacy API: (sizes, names)
+        return AbstractMesh(tuple(sizes), tuple(names))

@@ -1,0 +1,107 @@
+"""Deterministic mini-`hypothesis` stand-in for environments without the
+real package.
+
+Implements just the surface test_planners.py uses — ``given``, ``settings``,
+and ``strategies.{composite, integers, floats, booleans, lists}`` — as a
+seeded deterministic sweep: example 0 pins every draw to its minimum,
+example 1 to its maximum (edge-case probes), and the rest sample uniformly
+from a per-example seeded ``random.Random``.  No shrinking, no database —
+but the property tests still execute with real coverage and reproducible
+failures.
+"""
+from __future__ import annotations
+
+import functools
+import random
+from types import SimpleNamespace
+
+
+class _Ctx:
+    def __init__(self, mode: str, seed: int):
+        self.mode = mode                  # "min" | "max" | "rand"
+        self.rnd = random.Random(seed)
+
+
+class _Strategy:
+    def __init__(self, fn):
+        self._fn = fn
+
+    def draw(self, ctx: _Ctx):
+        return self._fn(ctx)
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    def f(ctx):
+        if ctx.mode == "min":
+            return lo
+        if ctx.mode == "max":
+            return hi
+        return ctx.rnd.randint(lo, hi)
+    return _Strategy(f)
+
+
+def _floats(lo: float, hi: float, **_kw) -> _Strategy:
+    def f(ctx):
+        if ctx.mode == "min":
+            return lo
+        if ctx.mode == "max":
+            return hi
+        return ctx.rnd.uniform(lo, hi)
+    return _Strategy(f)
+
+
+def _booleans() -> _Strategy:
+    def f(ctx):
+        if ctx.mode == "min":
+            return False
+        if ctx.mode == "max":
+            return True
+        return ctx.rnd.random() < 0.5
+    return _Strategy(f)
+
+
+def _lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def f(ctx):
+        if ctx.mode == "min":
+            n = min_size
+        elif ctx.mode == "max":
+            n = max_size
+        else:
+            n = ctx.rnd.randint(min_size, max_size)
+        return [elem.draw(ctx) for _ in range(n)]
+    return _Strategy(f)
+
+
+def _composite(fn):
+    @functools.wraps(fn)
+    def make(*args, **kw):
+        def f(ctx):
+            return fn(lambda s: s.draw(ctx), *args, **kw)
+        return _Strategy(f)
+    return make
+
+
+strategies = SimpleNamespace(composite=_composite, integers=_integers,
+                             floats=_floats, booleans=_booleans, lists=_lists)
+
+
+def settings(max_examples: int = 25, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the property's parameters (it would resolve them as fixtures).
+        def wrapper():
+            for i in range(getattr(wrapper, "_max_examples", 25)):
+                mode = "min" if i == 0 else ("max" if i == 1 else "rand")
+                ctx = _Ctx(mode, seed=7919 * i + 1)
+                fn(*(s.draw(ctx) for s in strats))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -3,7 +3,12 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # deterministic-sweep fallback: same tests, seeded example generation
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.cost_model import (CostGraph, DeviceProfile, LinkProfile,
                                    SegmentCost, TABLE2, LINKS, compute_time)
