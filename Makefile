@@ -1,5 +1,10 @@
-# Tier-1 verify (ROADMAP.md): the whole suite, fail-fast.
-.PHONY: test test-fast serve-bench
+# Repo targets:
+#   make test        tier-1 verify (ROADMAP.md): the whole suite, fail-fast
+#   make test-fast   suite minus the slow dry-run compile test
+#   make lint        byte-compile src/tests/benchmarks (import/syntax gate)
+#   make serve-bench continuous batching vs sequential serving throughput
+#   make bench-smoke tiered (cloud/edge/device) serving benchmark, tiny trace
+.PHONY: test test-fast lint serve-bench bench-smoke
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -8,5 +13,11 @@ test:
 test-fast:
 	PYTHONPATH=src python -m pytest -x -q -m "not slow"
 
+lint:
+	python -m compileall -q src tests benchmarks
+
 serve-bench:
 	python benchmarks/serving_bench.py
+
+bench-smoke:
+	python benchmarks/tiered_serving_bench.py --smoke

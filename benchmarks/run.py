@@ -12,7 +12,8 @@ def main() -> None:
     from benchmarks import (table1_models, table2_hardware,
                             table3_cloud_device, table4_edge_device,
                             table5_cloud_edge_device, table6_device_device,
-                            runtime_micro)
+                            runtime_micro, serving_bench,
+                            tiered_serving_bench)
     from benchmarks.common import emit_csv
 
     table1_models.run()
@@ -22,6 +23,13 @@ def main() -> None:
     table5_cloud_edge_device.run()
     table6_device_device.run()
     runtime_micro.run()
+    # serving benchmarks, smoke-sized so the runner stays CI-friendly:
+    # single-pool continuous batching vs sequential, then paradigm-aware
+    # tiered routing vs a cloud-only pool
+    print()
+    serving_bench.run(requests=6, slots=2, prompt_len=8, max_new=8)
+    print()
+    tiered_serving_bench.run(requests=8, rate=50.0, base_slots=2, max_new=4)
     print()
     emit_csv()
 

@@ -27,8 +27,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+sys.path.insert(0, __file__.rsplit("/", 2)[0])           # repo root
 sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
 
+from benchmarks.common import record                     # noqa: E402
 from repro.configs import get_config                     # noqa: E402
 from repro.models import Model                           # noqa: E402
 from repro.serving import (ContinuousBatchScheduler,     # noqa: E402
@@ -82,6 +84,64 @@ def continuous_serve(model, params, prompts, max_new: int, sched):
     return [r.out_tokens for r in reqs], decode_s
 
 
+def run(arch: str = "granite-3-2b-smoke", requests: int = 16,
+        slots: int = 8, prompt_len: int = 16, max_new: int = 32,
+        seed: int = 0) -> float:
+    """Replay one trace sequentially and through the slot pool; print the
+    comparison, record CSV rows, and return the decode speedup."""
+    cfg = get_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rs = np.random.RandomState(seed)
+    lens = rs.randint(max(1, prompt_len // 2), prompt_len + 1, requests)
+    prompts = [rs.randint(0, cfg.vocab_size, int(l)).astype(np.int32)
+               for l in lens]
+    n_tokens = requests * max_new
+
+    sched = ContinuousBatchScheduler(
+        model, params,
+        SchedulerConfig(n_slots=slots, max_len=prompt_len + max_new,
+                        prefill_chunk=8))
+
+    seq_step = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos))
+
+    # warmup both paths on the REAL trace so every shape (the sequential
+    # path compiles per distinct prompt-length cache shape) is compiled
+    # outside the timed region, for both the decode and end-to-end numbers
+    sequential_serve(model, params, prompts, max_new, seq_step)
+    continuous_serve(model, params, prompts, max_new, sched)
+    sched.reset_stats()
+
+    t0 = time.perf_counter()
+    seq_out, seq_decode_s = sequential_serve(model, params, prompts,
+                                             max_new, seq_step)
+    seq_total = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    cb_out, cb_decode_s = continuous_serve(model, params, prompts,
+                                           max_new, sched)
+    cb_total = time.perf_counter() - t0
+
+    match = sum(a == b for a, b in zip(seq_out, cb_out))
+    print(f"arch={cfg.name} requests={requests} prompt<=",
+          f"{prompt_len} max_new={max_new} slots={slots}")
+    print(f"sequential : decode {n_tokens / seq_decode_s:8.1f} tok/s "
+          f"(end-to-end {n_tokens / seq_total:8.1f} tok/s, {seq_total:.2f}s)")
+    print(f"continuous : decode {n_tokens / cb_decode_s:8.1f} tok/s "
+          f"(end-to-end {n_tokens / cb_total:8.1f} tok/s, {cb_total:.2f}s)")
+    speed_dec = seq_decode_s / cb_decode_s
+    speed_tot = seq_total / cb_total
+    print(f"speedup    : decode {speed_dec:.2f}x, end-to-end {speed_tot:.2f}x")
+    print(f"greedy outputs identical for {match}/{requests} requests "
+          f"(argmax ties within one bf16 ulp may flip across batch widths)")
+    print(f"jit cache sizes (no recompile across admissions): "
+          f"{sched.jit_cache_sizes()}")
+    record("serving/continuous_decode", cb_decode_s / n_tokens * 1e6,
+           derived=f"speedup={speed_dec:.2f}x")
+    record("serving/sequential_decode", seq_decode_s / n_tokens * 1e6)
+    return speed_dec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b-smoke")
@@ -91,57 +151,8 @@ def main():
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    rs = np.random.RandomState(args.seed)
-    lens = rs.randint(max(1, args.prompt_len // 2), args.prompt_len + 1,
-                      args.requests)
-    prompts = [rs.randint(0, cfg.vocab_size, int(l)).astype(np.int32)
-               for l in lens]
-    n_tokens = args.requests * args.max_new
-
-    sched = ContinuousBatchScheduler(
-        model, params,
-        SchedulerConfig(n_slots=args.slots,
-                        max_len=args.prompt_len + args.max_new,
-                        prefill_chunk=8))
-
-    seq_step = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos))
-
-    # warmup both paths on the REAL trace so every shape (the sequential
-    # path compiles per distinct prompt-length cache shape) is compiled
-    # outside the timed region, for both the decode and end-to-end numbers
-    sequential_serve(model, params, prompts, args.max_new, seq_step)
-    continuous_serve(model, params, prompts, args.max_new, sched)
-    sched.reset_stats()
-
-    t0 = time.perf_counter()
-    seq_out, seq_decode_s = sequential_serve(model, params, prompts,
-                                             args.max_new, seq_step)
-    seq_total = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    cb_out, cb_decode_s = continuous_serve(model, params, prompts,
-                                           args.max_new, sched)
-    cb_total = time.perf_counter() - t0
-
-    match = sum(a == b for a, b in zip(seq_out, cb_out))
-    print(f"arch={cfg.name} requests={args.requests} prompt<=",
-          f"{args.prompt_len} max_new={args.max_new} slots={args.slots}")
-    print(f"sequential : decode {n_tokens / seq_decode_s:8.1f} tok/s "
-          f"(end-to-end {n_tokens / seq_total:8.1f} tok/s, {seq_total:.2f}s)")
-    print(f"continuous : decode {n_tokens / cb_decode_s:8.1f} tok/s "
-          f"(end-to-end {n_tokens / cb_total:8.1f} tok/s, {cb_total:.2f}s)")
-    speed_dec = seq_decode_s / cb_decode_s
-    speed_tot = seq_total / cb_total
-    print(f"speedup    : decode {speed_dec:.2f}x, end-to-end {speed_tot:.2f}x")
-    print(f"greedy outputs identical for {match}/{args.requests} requests "
-          f"(argmax ties within one bf16 ulp may flip across batch widths)")
-    print(f"jit cache sizes (no recompile across admissions): "
-          f"{sched.jit_cache_sizes()}")
-    return speed_dec
+    return run(args.arch, args.requests, args.slots, args.prompt_len,
+               args.max_new, args.seed)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,193 @@
+"""Tiered serving benchmark: paradigm-aware routing vs a single cloud pool.
+
+Replays one mixed Poisson trace (short tight-deadline interactive requests +
+long loose-deadline batch requests) three ways:
+
+* **tiered / default scenario** — ``TieredServingCluster``: the admission
+  router places each request on the cloud/edge/device pool (or a
+  prefill/decode split) the paradigm planners pick for it.
+* **tiered / degraded WAN** — same trace under ``Scenario.degraded_wan()``
+  (1 Mbps, 500 ms RTT to the cloud): traffic must shift off the cloud tier.
+* **single-pool baseline** — everything forced onto the cloud pool over the
+  WAN, the pre-refactor architecture (one slot pool, no routing).
+
+Reports per-tier routed counts, utilization, and p50/p95 virtual-clock
+latency, asserts the routing acceptance bands (short -> device/edge, long ->
+cloud, degraded WAN sheds cloud traffic, jit caches stay at one entry per
+pool), and records CSV rows via benchmarks.common.
+
+    PYTHONPATH=src python benchmarks/tiered_serving_bench.py \\
+        [--arch granite-3-2b-smoke] [--plan-arch granite-3-2b] \\
+        [--requests 24] [--rate 20] [--base-slots 4] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0])            # repo root
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+import jax                                                # noqa: E402
+
+from benchmarks.common import record                      # noqa: E402
+from repro.configs import get_config                      # noqa: E402
+from repro.core import Scenario                           # noqa: E402
+from repro.core.paradigms import AdmissionDecision        # noqa: E402
+from repro.models import Model                            # noqa: E402
+from repro.serving import (AdmissionRouter,               # noqa: E402
+                           ClusterConfig, TieredServingCluster)
+
+SHORT_DEADLINE = 0.05          # interactive requests must answer in 50 ms
+                               # (tighter than one WAN round trip + compute,
+                               # so a cloud-only pool cannot meet it)
+LONG_PROMPT = 256              # long enough that cloud compute wins
+
+
+class CloudOnlyRouter(AdmissionRouter):
+    """The pre-refactor architecture as a router: every request goes to the
+    single cloud pool over the WAN, no admission-time choice."""
+
+    def route(self, prompt_len, max_new, *, deadline=None, queue_cost=None):
+        d = AdmissionDecision("cloud", "cloud", "single-pool", 0.0, 0.0)
+        self.route_counts["cloud"] += 1
+        self.decisions.append(d)
+        return d
+
+
+def make_trace(cfg, n_requests: int, rate: float, max_new: int, seed: int):
+    """(arrival, tokens, deadline, is_short) tuples: 3/4 short interactive,
+    1/4 long batch."""
+    rs = np.random.RandomState(seed)
+    arrivals = np.cumsum(rs.exponential(1.0 / rate, n_requests))
+    trace = []
+    for i in range(n_requests):
+        short = i % 4 != 3
+        plen = int(rs.randint(4, 17)) if short else LONG_PROMPT
+        deadline = SHORT_DEADLINE if short else None
+        trace.append((float(arrivals[i]),
+                      rs.randint(0, cfg.vocab_size, plen),
+                      deadline, short))
+    return trace
+
+
+def run_trace(model, params, plan_cfg, scenario, trace, *, base_slots: int,
+              max_new: int, router_cls=AdmissionRouter):
+    cluster = TieredServingCluster(
+        model, params, scenario, plan_cfg=plan_cfg,
+        cfg=ClusterConfig(base_slots=base_slots,
+                          max_len=LONG_PROMPT + max_new,
+                          prefill_chunk=16),
+        router=router_cls(plan_cfg, scenario))
+    for arrival, tokens, deadline, _ in trace:
+        cluster.submit(tokens, max_new=max_new, deadline=deadline,
+                       arrival=arrival)
+    cluster.run()
+    return cluster
+
+
+def short_long_tiers(cluster, trace):
+    """Routed tier per request, split by request class."""
+    short_t = [cr.decision.tier
+               for cr, (_, _, _, s) in zip(cluster.requests, trace) if s]
+    long_t = [cr.decision.tier
+              for cr, (_, _, _, s) in zip(cluster.requests, trace) if not s]
+    return short_t, long_t
+
+
+def report(tag: str, cluster) -> dict:
+    st = cluster.stats()
+    print(f"{tag}: routed={st['route_counts']} splits={st['splits']} "
+          f"p50={st['p50_latency_s']*1e3:.0f}ms "
+          f"p95={st['p95_latency_s']*1e3:.0f}ms "
+          f"deadline-hit={st['deadline_hit_rate']:.2f}")
+    for name, ts in st["tiers"].items():
+        print(f"  {name:6s} slots={ts['n_slots']} routed={ts['routed']:3d} "
+              f"util={ts['utilization']:.2f} "
+              f"occupancy={ts['slot_occupancy']:.2f} "
+              f"p95={ts['p95_latency_s']*1e3:.0f}ms")
+    record(f"serving/tiered_{tag}_p50", st["p50_latency_s"] * 1e6)
+    record(f"serving/tiered_{tag}_p95", st["p95_latency_s"] * 1e6,
+           derived=f"hit={st['deadline_hit_rate']:.2f}")
+    return st
+
+
+def run(arch: str = "granite-3-2b-smoke", plan_arch: str = "granite-3-2b",
+        requests: int = 24, rate: float = 20.0, base_slots: int = 4,
+        max_new: int = 8, seed: int = 0):
+    cfg = get_config(arch)
+    plan_cfg = get_config(plan_arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    trace = make_trace(cfg, requests, rate, max_new, seed)
+    n_short = sum(1 for t in trace if t[3])
+    print(f"trace: {requests} requests ({n_short} short w/ "
+          f"{SHORT_DEADLINE*1e3:.0f}ms deadline, {requests - n_short} long "
+          f"@ {LONG_PROMPT} tokens), plan model {plan_cfg.name}")
+
+    cl_def = run_trace(model, params, plan_cfg, Scenario.default(), trace,
+                       base_slots=base_slots, max_new=max_new)
+    st_def = report("default", cl_def)
+    cl_deg = run_trace(model, params, plan_cfg, Scenario.degraded_wan(),
+                       trace, base_slots=base_slots, max_new=max_new)
+    st_deg = report("degraded-wan", cl_deg)
+    cl_base = run_trace(model, params, plan_cfg, Scenario.default(), trace,
+                        base_slots=base_slots, max_new=max_new,
+                        router_cls=CloudOnlyRouter)
+    st_base = report("cloud-only-baseline", cl_base)
+
+    # --- acceptance bands (the routing claims this PR makes) -------------
+    short_t, long_t = short_long_tiers(cl_def, trace)
+    assert all(t in ("device", "edge") for t in short_t) or \
+        sum(t in ("device", "edge") for t in short_t) >= len(short_t) * 0.7, \
+        f"short/tight requests should mostly land on device/edge: {short_t}"
+    assert sum(t == "cloud" for t in long_t) >= max(1, len(long_t) // 2), \
+        f"long requests should land on the cloud pool: {long_t}"
+    assert (st_deg["route_counts"]["cloud"]
+            < st_def["route_counts"]["cloud"]), \
+        "degraded WAN must shift traffic off the cloud tier"
+    for name, tr in cl_def.tiers.items():
+        if tr.routed:
+            sizes = tr.sched.jit_cache_sizes()
+            assert all(v in (1, -1) for v in sizes.values()), \
+                f"routing decisions must not retrace ({name}: {sizes})"
+    sp50 = st_base["p50_latency_s"] / max(st_def["p50_latency_s"], 1e-12)
+    sp95 = st_base["p95_latency_s"] / max(st_def["p95_latency_s"], 1e-12)
+    record("serving/tiered_vs_cloud_only_p50", st_base["p50_latency_s"] * 1e6,
+           derived=f"tiered_speedup={sp50:.2f}x")
+    record("serving/tiered_vs_cloud_only_p95", st_base["p95_latency_s"] * 1e6,
+           derived=f"tiered_speedup={sp95:.2f}x")
+    print(f"tiered vs cloud-only single pool: p50 {sp50:.2f}x / "
+          f"p95 {sp95:.2f}x lower, deadline hit "
+          f"{st_base['deadline_hit_rate']:.2f} -> "
+          f"{st_def['deadline_hit_rate']:.2f}")
+    assert st_def["deadline_hit_rate"] >= st_base["deadline_hit_rate"], \
+        "routing must not lose deadlines vs the cloud-only pool"
+    return st_def, st_deg, st_base
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b-smoke")
+    ap.add_argument("--plan-arch", default="granite-3-2b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=20.0)
+    ap.add_argument("--base-slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace for the benchmark runner / CI")
+    args = ap.parse_args()
+    if args.smoke:
+        run(args.arch, args.plan_arch, requests=8, rate=50.0,
+            base_slots=2, max_new=4, seed=args.seed)
+    else:
+        run(args.arch, args.plan_arch, requests=args.requests,
+            rate=args.rate, base_slots=args.base_slots,
+            max_new=args.max_new, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,8 +14,9 @@ from repro.core.offload import (compress_boundary, compression_decision,
                                 decompress_boundary)
 from repro.kernels import ops as kops
 from repro.models import Model
-from repro.serving import (ContinuousBatchScheduler, Request, SchedulerConfig,
-                           ServeConfig, ServingEngine)
+from repro.serving import (ClusterConfig, ContinuousBatchScheduler, Request,
+                           SchedulerConfig, ServeConfig, ServingEngine,
+                           TieredServingCluster)
 
 
 def main():
@@ -64,7 +65,30 @@ def main():
     print("engine batch stats:",
           {k: round(v, 3) for k, v in engine.exit_stats().items()})
 
-    # ---- 3. boundary feature compression (the partition-crossing tensor)
+    # ---- 3. the paradigms AS the runtime: the tiered cluster routes each
+    # request to a cloud/edge/device scheduler pool at admission time
+    # (planning against the full-size model, executing the smoke one)
+    cluster = TieredServingCluster(
+        model, params, sc, plan_cfg=get_config("yi-6b"),
+        cfg=ClusterConfig(base_slots=2, max_len=280, prefill_chunk=16))
+    t = 0.0
+    for i in range(6):
+        short = i % 3 != 2
+        cluster.submit(
+            rs.randint(0, cfg.vocab_size, 8 if short else 256),
+            max_new=8, deadline=0.05 if short else None, arrival=t)
+        t += 0.05
+    cluster.run()
+    cst = cluster.stats()
+    print(f"\ntiered serving: routed {cst['route_counts']} "
+          f"(p50 {cst['p50_latency_s']*1e3:.0f}ms virtual, "
+          f"deadline hit {cst['deadline_hit_rate']:.2f})")
+    for tname, ts in cst["tiers"].items():
+        if ts["routed"]:
+            print(f"  {tname:6s} slots={ts['n_slots']} "
+                  f"routed={ts['routed']} util={ts['utilization']:.2f}")
+
+    # ---- 4. boundary feature compression (the partition-crossing tensor)
     x = jax.random.normal(jax.random.PRNGKey(2), (64, cfg.d_model), jnp.bfloat16)
     q, s = kops.compress_rows(x)                 # Pallas kernel (interpret)
     x2 = kops.decompress_rows(q, s)

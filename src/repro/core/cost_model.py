@@ -231,6 +231,17 @@ def build_cost_graph(cfg: ModelConfig, batch: int, seq_len: int,
 # Primitive cost queries used by every planner
 # ---------------------------------------------------------------------------
 
+def kv_cache_bytes_per_token(cfg: ModelConfig, bytes_per_el: int = 2) -> float:
+    """Per-token KV-cache footprint — what a prefill/decode split ships
+    across the tier boundary (attention k+v per layer; SSM/xLSTM state is
+    per-sequence, approximated by one layer's width here)."""
+    if cfg.attention == "mla":
+        per_layer = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+    else:
+        per_layer = 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+    return float(cfg.num_layers * per_layer * bytes_per_el)
+
+
 def compute_time(flops: float, dev: DeviceProfile) -> float:
     return flops / dev.eff_flops
 

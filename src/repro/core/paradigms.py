@@ -70,6 +70,15 @@ class Scenario:
         return dataclasses.replace(sc, device=TABLE2["jetson-tk1"],
                                    dev_cloud=LINKS["wifi"])
 
+    @staticmethod
+    def degraded_wan() -> "Scenario":
+        """Default hardware behind a congested WAN (1 Mbps, 500 ms RTT) —
+        the survey's motivating failure mode for cloud-only inference (§1):
+        admission routing must shift traffic off the cloud tier."""
+        sc = Scenario.default()
+        return dataclasses.replace(
+            sc, dev_cloud=LinkProfile("wan-degraded", 1 * 1e6 / 8, 0.5))
+
 
 @dataclass
 class CollaborationPlan:
@@ -183,3 +192,117 @@ def plan_all(graph: CostGraph, sc: Optional[Scenario] = None,
         "cloud-edge-device": plan_cloud_edge_device(graph, sc),
         "device-device": plan_device_device(graph, sc),
     }
+
+
+# ---------------------------------------------------------------------------
+# Admission-time tier selection (serving runtime entry point)
+# ---------------------------------------------------------------------------
+
+TIERS = ("device", "edge", "cloud")
+
+
+@dataclass(frozen=True)
+class AdmissionDecision:
+    """Per-request tier choice the serving router acts on.
+
+    ``tier`` owns the decode slot; ``prefill_tier`` differs only for a
+    prefill/decode split, where ``transfer_delay`` is the simulated KV-cache
+    handoff between the two tiers."""
+    tier: str                          # decode tier: device | edge | cloud
+    prefill_tier: str                  # == tier unless split
+    paradigm: str                      # planner behind the winning candidate
+    predicted_latency: float           # planner latency, queue excluded
+    effective_latency: float           # + queueing penalty at the decode tier
+    transfer_delay: float = 0.0        # prefill->decode handoff (split only)
+    feasible: bool = True              # meets the deadline (if one was given)
+    details: Dict[str, object] = field(default_factory=dict)
+
+    @property
+    def is_split(self) -> bool:
+        return self.prefill_tier != self.tier
+
+
+def _tier_profile(sc: Scenario, tier: str) -> DeviceProfile:
+    return {"device": sc.device, "edge": sc.edge, "cloud": sc.cloud}[tier]
+
+
+def admission_decision(graph: CostGraph, sc: Scenario, *,
+                       deadline: Optional[float] = None,
+                       queue_cost: Optional[Dict[str, float]] = None,
+                       prefill_tokens: Optional[int] = None,
+                       decode_tokens: int = 0,
+                       kv_bytes_per_token: float = 0.0,
+                       allow_split: bool = True) -> AdmissionDecision:
+    """Pick the serving tier for ONE request at admission time.
+
+    Candidates come from the paradigm planners over ``graph`` (the request's
+    whole prompt+decode workload): Neurosurgeon's optimal cloud-device split,
+    Edgent's deadline-driven edge-device plan, DDNN's 3-tier placement, plus
+    device-local execution and (optionally) prefill/decode disaggregation
+    splits — prefill on a compute-rich tier, KV cache shipped over the
+    inter-tier link, decode on a cheaper tier.  ``queue_cost[tier]`` is the
+    router's estimate of queueing delay at each tier's slot pool and is
+    charged to the candidate's decode tier, so a congested pool sheds load.
+    """
+    qc = queue_cost or {}
+    dl = float("inf") if deadline is None else deadline
+    cands: List[AdmissionDecision] = []
+
+    def add(tier, paradigm, lat, *, prefill_tier=None, transfer=0.0, **det):
+        eff = lat + qc.get(tier, 0.0)
+        cands.append(AdmissionDecision(
+            tier, prefill_tier or tier, paradigm, lat, eff,
+            transfer_delay=transfer, feasible=eff <= dl, details=det))
+
+    # device-local: no link at all (the request is born on the device tier)
+    add("device", "device-local",
+        compute_time(graph.total_flops, sc.device))
+
+    # cloud-device (Neurosurgeon): cut==N means fully local, which the
+    # device-local candidate already covers; cut>0 splits device+cloud
+    ns = neurosurgeon_plan(graph, sc.device, sc.cloud, sc.dev_cloud)
+    if ns.cut < len(graph.segments):
+        add("cloud", "cloud-device/neurosurgeon", ns.latency, neurosurgeon=ns)
+
+    # edge-device (Edgent): joint exit+partition under the deadline
+    prof = ExitProfile.default(
+        len(graph.segments),
+        [i for i, s in enumerate(graph.segments) if s.has_exit_after])
+    eg = edgent_plan(graph, prof, sc.device, sc.edge, sc.dev_edge, dl)
+    m = (list(prof.boundaries) + [len(graph.segments) - 1])[eg.exit_index] + 1
+    add("device" if eg.cut >= m else "edge", "edge-device/edgent",
+        eg.latency, edgent=eg)
+
+    # cloud-edge-device (DDNN): the decode slot lives where the final
+    # segments are placed
+    tiers3 = (Tier("device", sc.device, sc.dev_edge),
+              Tier("edge", sc.edge, sc.edge_cloud),
+              Tier("cloud", sc.cloud, None))
+    dd = ddnn_placement(graph, tiers3, prof.exit_probs)
+    add(dd.tier_of_segment[-1], "cloud-edge-device/ddnn", dd.latency, ddnn=dd)
+
+    # prefill/decode disaggregation: prefill on the compute-rich tier, ship
+    # the KV cache down one link, decode near the client
+    if (allow_split and kv_bytes_per_token > 0.0 and prefill_tokens
+            and decode_tokens > 0):
+        total_tok = prefill_tokens + decode_tokens
+        pf_flops = graph.total_flops * prefill_tokens / total_tok
+        tok_flops = graph.total_flops / total_tok
+        kv_bytes = kv_bytes_per_token * prefill_tokens
+        for pf_tier, dec_tier, up, kv_link, down in (
+                ("cloud", "edge", sc.dev_cloud, sc.edge_cloud, sc.dev_edge),
+                ("edge", "device", sc.dev_edge, sc.dev_edge, None)):
+            transfer = kv_link.tx_time(kv_bytes)
+            lat = (up.tx_time(graph.input_bytes)
+                   + compute_time(pf_flops, _tier_profile(sc, pf_tier))
+                   + transfer
+                   + decode_tokens * compute_time(
+                       tok_flops, _tier_profile(sc, dec_tier))
+                   + (down.tx_time(graph.result_bytes) if down else 0.0))
+            add(dec_tier, f"split/{pf_tier}-prefill",
+                lat, prefill_tier=pf_tier, transfer=transfer,
+                kv_bytes=kv_bytes)
+
+    feas = [c for c in cands if c.feasible]
+    pool = feas or cands
+    return min(pool, key=lambda c: c.effective_latency)

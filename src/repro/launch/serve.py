@@ -20,6 +20,18 @@ Two modes:
           --mode poisson --rate 4 --requests 32 --slots 8 \\
           --prompt-len 16 --max-new 32
 
+  With ``--tiered`` the same trace is instead submitted through the
+  paradigm-aware admission router into cloud/edge/device scheduler pools
+  (``TieredServingCluster``); arrivals become virtual-clock timestamps and
+  the report adds per-tier routed counts, utilization, and p50/p95 latency
+  under the chosen ``--scenario`` (default | degraded-wan |
+  neurosurgeon-era).  ``--plan-arch``
+  names the config the router plans against (defaults to ``--arch`` with a
+  ``-smoke`` suffix stripped, so smoke runtimes route like the real model).
+
+      PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b-smoke \\
+          --mode poisson --tiered --scenario degraded-wan --requests 32
+
 Flags:
     --arch        architecture name (configs registry; "-smoke" for reduced)
     --mode        batch | poisson
@@ -31,6 +43,11 @@ Flags:
     --rate        [poisson] mean arrival rate, requests/second
     --requests    [poisson] total requests in the trace
     --prefill-chunk  tokens per jitted prefill dispatch
+    --tiered      [poisson] route through cloud/edge/device pools
+    --scenario    [tiered] hardware scenario preset
+                  (default | degraded-wan | neurosurgeon-era)
+    --plan-arch   [tiered] config the admission router plans against
+    --deadline    [tiered] per-request deadline in seconds (0 = none)
     --seed        RNG seed for prompts/arrivals
     --long        long-context (ring-buffer KV) mode
 """
@@ -44,9 +61,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import Scenario
 from repro.models import Model, ShardCtx
-from repro.serving import (ContinuousBatchScheduler, Request, ServeConfig,
-                           ServingEngine, SchedulerConfig)
+from repro.serving import (ClusterConfig, ContinuousBatchScheduler, Request,
+                           ServeConfig, ServingEngine, SchedulerConfig,
+                           TieredServingCluster)
+
+SCENARIOS = {"default": Scenario.default,
+             "degraded-wan": Scenario.degraded_wan,
+             "neurosurgeon-era": Scenario.neurosurgeon_era}
 
 
 def serve(arch: str, batch: int, prompt_len: int, max_new: int, *,
@@ -152,6 +175,60 @@ def serve_poisson(arch: str, *, rate: float = 4.0, n_requests: int = 32,
     return stats
 
 
+def serve_tiered_poisson(arch: str, *, rate: float = 4.0,
+                         n_requests: int = 32, base_slots: int = 8,
+                         prompt_len: int = 16, max_new: int = 32,
+                         threshold: float = 0.5, prefill_chunk: int = 16,
+                         scenario: str = "default", plan_arch: str = "",
+                         deadline: float = 0.0, long_mode: bool = False,
+                         seed: int = 0, params=None, quiet: bool = False):
+    """Poisson trace through the tiered cluster: the admission router sends
+    each arrival to a cloud/edge/device pool (or a prefill/decode split)
+    using the paradigm planners; arrivals and the reported latencies live on
+    the tiers' virtual clocks (scenario time), while token generation is
+    real execution.  Returns the cluster's stats dict."""
+    cfg = get_config(arch)
+    model = Model(cfg, ShardCtx(None))
+    if params is None:
+        params = model.init(jax.random.PRNGKey(seed))
+    plan_cfg = get_config(plan_arch) if plan_arch else \
+        get_config(arch[:-6] if arch.endswith("-smoke") else arch)
+    cluster = TieredServingCluster(
+        model, params, SCENARIOS[scenario](), plan_cfg=plan_cfg,
+        cfg=ClusterConfig(base_slots=base_slots,
+                          max_len=prompt_len + max_new,
+                          prefill_chunk=min(prefill_chunk,
+                                            max(1, prompt_len)),
+                          exit_threshold=threshold, long_mode=long_mode))
+    rs = np.random.RandomState(seed)
+    arrivals = np.cumsum(rs.exponential(1.0 / rate, n_requests))
+    lengths = rs.randint(max(1, prompt_len // 4), prompt_len + 1, n_requests)
+    for arr, l in zip(arrivals, lengths):
+        cluster.submit(rs.randint(0, cfg.vocab_size, int(l)),
+                       max_new=max_new, arrival=float(arr),
+                       deadline=deadline or None)
+    t0 = time.time()
+    cluster.run()
+    wall = time.time() - t0
+    stats = cluster.stats()
+    stats["wall_s"] = wall
+    if not quiet:
+        print(f"arch={cfg.name} tiered poisson scenario={scenario} "
+              f"rate={rate}/s requests={n_requests} (plan={plan_cfg.name})")
+        print(f"  routed: {stats['route_counts']} splits={stats['splits']} "
+              f"deadline-hit={stats['deadline_hit_rate']:.2f}")
+        print(f"  virtual p50={stats['p50_latency_s']*1e3:.0f}ms "
+              f"p95={stats['p95_latency_s']*1e3:.0f}ms (wall {wall:.2f}s)")
+        for name, ts in stats["tiers"].items():
+            print(f"  {name:6s} slots={ts['n_slots']} routed={ts['routed']:3d} "
+                  f"util={ts['utilization']:.2f} "
+                  f"occupancy={ts['slot_occupancy']:.2f} "
+                  f"p95={ts['p95_latency_s']*1e3:.0f}ms")
+        print(f"  jit cache sizes (must stay 1 per pool): "
+              f"{stats['jit_cache_sizes']}")
+    return stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -164,10 +241,22 @@ def main():
     ap.add_argument("--rate", type=float, default=4.0)
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--tiered", action="store_true")
+    ap.add_argument("--scenario", default="default", choices=sorted(SCENARIOS))
+    ap.add_argument("--plan-arch", default="")
+    ap.add_argument("--deadline", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--long", action="store_true")
     args = ap.parse_args()
-    if args.mode == "poisson":
+    if args.mode == "poisson" and args.tiered:
+        serve_tiered_poisson(
+            args.arch, rate=args.rate, n_requests=args.requests,
+            base_slots=args.slots, prompt_len=args.prompt_len,
+            max_new=args.max_new, threshold=args.threshold,
+            prefill_chunk=args.prefill_chunk, scenario=args.scenario,
+            plan_arch=args.plan_arch, deadline=args.deadline,
+            long_mode=args.long, seed=args.seed)
+    elif args.mode == "poisson":
         serve_poisson(args.arch, rate=args.rate, n_requests=args.requests,
                       slots=args.slots, prompt_len=args.prompt_len,
                       max_new=args.max_new, threshold=args.threshold,

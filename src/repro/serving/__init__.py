@@ -1,8 +1,32 @@
+"""Serving runtime: continuous-batching pools, paradigm-aware routing.
+
+Architecture (this PR's tentpole, survey §2.3 made runtime):
+
+* ``scheduler``  — ``ContinuousBatchScheduler``: one slot pool with chunked
+  batched prefill, a fixed-shape jitted decode step, device-side exit
+  counters, and a ``poll()``/``StepReport`` API so external drivers can step
+  many pools.
+* ``router``     — ``AdmissionRouter``: per-request tier selection from the
+  paradigm planners (Neurosurgeon / Edgent / DDNN / device-local /
+  prefill-decode splits) over cached cost graphs.
+* ``cluster``    — ``TieredServingCluster``: one scheduler pool per
+  cloud/edge/device tier (slots derived from ``DeviceProfile``s), virtual
+  tier clocks for link/compute delays, per-tier utilization and latency
+  stats.
+* ``engine``     — ``ServingEngine``: the batch front-end; single-pool by
+  default, routed through the tiered cluster when given a ``Scenario``.
+* ``adaptive``   — closed-loop exit-threshold control from flushed counters.
+"""
+from repro.serving.cluster import (ClusterConfig, ClusterRequest,
+                                   TieredServingCluster, derive_tier_slots)
 from repro.serving.engine import (ServeConfig, ServingEngine, make_serve_step,
                                   prime_whisper_cross_cache)
+from repro.serving.router import AdmissionRouter
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
-                                     SchedulerConfig)
+                                     SchedulerConfig, StepReport)
 
 __all__ = ["ServeConfig", "ServingEngine", "make_serve_step",
            "prime_whisper_cross_cache", "ContinuousBatchScheduler",
-           "Request", "SchedulerConfig"]
+           "Request", "SchedulerConfig", "StepReport", "AdmissionRouter",
+           "ClusterConfig", "ClusterRequest", "TieredServingCluster",
+           "derive_tier_slots"]

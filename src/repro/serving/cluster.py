@@ -1,0 +1,345 @@
+"""Tiered serving cluster: one scheduler pool per cloud/edge/device tier,
+fed by the paradigm-planner admission router.
+
+This is the runtime form of the survey's collaborative-inference thesis:
+instead of one local slot pool, the cluster owns a ``ContinuousBatchScheduler``
+per tier whose slot count is derived from the tier's ``DeviceProfile`` (compute
+share and KV-arena memory), and an ``AdmissionRouter`` picks a tier per request
+from prompt length, deadline, and the current per-tier queue depth.
+
+Execution vs. simulation: every pool runs the *same* real model on the local
+accelerator (so outputs are exact and jit caches stay fixed — routing never
+retraces), while tier heterogeneity lives in a **virtual clock** per tier:
+
+* a pool decode step advances the tier clock by ``compute_time(tok_flops,
+  profile)`` on that tier's hardware;
+* prefill chunks advance it by the replayed prompt tokens' compute cost;
+* a request becomes admissible only after its uplink transfer delay
+  (``LinkProfile.tx_time`` of the prompt bytes), and a prefill/decode split
+  additionally waits out the remote prefill plus the simulated KV-cache
+  transfer delay injected between prefill and decode;
+* completion stamps the tier clock plus the downlink result transfer.
+
+Reported per-tier utilization and request p50/p95 latencies are therefore in
+virtual (scenario) time — the quantity the survey's planners predict — while
+token generation itself is bit-exact real execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cost_model import (DeviceProfile, LinkProfile,
+                                   build_cost_graph, compute_time,
+                                   kv_cache_bytes_per_token)
+from repro.core.paradigms import AdmissionDecision, Scenario, _tier_profile
+from repro.serving.router import AdmissionRouter
+from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
+                                     SchedulerConfig)
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    base_slots: int = 8                # cloud-tier pool size; others derived
+    max_len: int = 256                 # per-slot capacity in every pool
+    prefill_chunk: int = 16
+    exit_threshold: float = 0.5
+    temperature: float = 0.0
+    long_mode: bool = False
+    # fairness default: one prefill chunk per poll so admissions interleave
+    # with in-flight decode instead of pausing it
+    max_prefill_chunks_per_step: int = 1
+    flush_every: int = 32
+
+
+@dataclasses.dataclass
+class ClusterRequest:
+    """A routed request: the scheduler ``Request`` plus virtual-time and
+    routing metadata."""
+    req: Request
+    arrival: float
+    deadline: Optional[float]
+    decision: AdmissionDecision
+    ready_at: float                    # arrival + uplink (+ split handoff)
+    t_done_v: float = math.nan         # tier clock + downlink at completion
+
+    @property
+    def done(self) -> bool:
+        return not math.isnan(self.t_done_v)
+
+    @property
+    def latency(self) -> float:
+        return self.t_done_v - self.arrival
+
+    @property
+    def met_deadline(self) -> bool:
+        return self.deadline is None or self.latency <= self.deadline
+
+
+def derive_tier_slots(profile: DeviceProfile, ref: DeviceProfile,
+                      base_slots: int, kv_bytes_per_slot: float) -> int:
+    """Slot count for a tier pool: the cloud reference gets ``base_slots``;
+    weaker tiers scale down with effective compute, floored at one slot and
+    capped by fitting the KV arena in half the tier's memory."""
+    compute_cap = int(round(base_slots * profile.eff_flops / ref.eff_flops))
+    mem_cap = int(0.5 * profile.mem_bytes // max(kv_bytes_per_slot, 1.0))
+    return max(1, min(base_slots, max(1, compute_cap), max(1, mem_cap)))
+
+
+@dataclasses.dataclass
+class TierRuntime:
+    """One tier's pool plus its virtual-time accounting."""
+    name: str
+    profile: DeviceProfile
+    uplink: Optional[LinkProfile]      # client <-> tier path (None = local)
+    sched: ContinuousBatchScheduler
+    tok_cost: float                    # virtual seconds per token computed
+    vclock: float = 0.0
+    busy: float = 0.0                  # vclock share spent doing work
+    decode_steps: int = 0
+    slot_tokens: int = 0               # sum of active slots over decode steps
+    routed: int = 0
+    waiting: List[ClusterRequest] = dataclasses.field(default_factory=list)
+    # rows of the admission currently prefilling: (cluster req, prompt len)
+    prefill_rows: List[tuple] = dataclasses.field(default_factory=list)
+    # admission-time estimate of when each slot frees up (virtual seconds);
+    # drives the router's queue-cost signal
+    slot_avail: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def utilization(self) -> float:
+        # capped at 1: remote split prefills charge busy-time to this tier
+        # without occupying its decode pool's clock
+        return min(1.0, self.busy / self.vclock) if self.vclock > 0 else 0.0
+
+    @property
+    def slot_occupancy(self) -> float:
+        cap = self.sched.cfg.n_slots * self.decode_steps
+        return self.slot_tokens / cap if cap else 0.0
+
+
+class TieredServingCluster:
+    """Cloud/edge/device scheduler pools behind one admission router.
+
+    ``plan_cfg`` (default: the runtime model's config) feeds the router's
+    cost graphs and the per-tier virtual step costs; pass the full-size
+    config when serving a smoke model so tier economics stay realistic.
+    """
+
+    def __init__(self, model, params, scenario: Optional[Scenario] = None,
+                 plan_cfg=None, cfg: ClusterConfig = ClusterConfig(),
+                 router: Optional[AdmissionRouter] = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.scenario = scenario or Scenario.default()
+        self.plan_cfg = plan_cfg if plan_cfg is not None else model.cfg
+        self.router = router or AdmissionRouter(self.plan_cfg, self.scenario)
+        # per-token compute of the PLANNED model at the pool's context size
+        g = build_cost_graph(self.plan_cfg, 1, cfg.max_len)
+        self._tok_flops = g.total_flops / cfg.max_len
+        kv_slot = kv_cache_bytes_per_token(self.plan_cfg) * cfg.max_len
+
+        sc = self.scenario
+        self.tiers: Dict[str, TierRuntime] = {}
+        for name, uplink in (("device", None), ("edge", sc.dev_edge),
+                             ("cloud", sc.dev_cloud)):
+            prof = _tier_profile(sc, name)
+            slots = derive_tier_slots(prof, sc.cloud, cfg.base_slots, kv_slot)
+            sched = ContinuousBatchScheduler(
+                model, params,
+                SchedulerConfig(
+                    n_slots=slots, max_len=cfg.max_len,
+                    prefill_chunk=cfg.prefill_chunk,
+                    exit_threshold=cfg.exit_threshold,
+                    temperature=cfg.temperature, long_mode=cfg.long_mode,
+                    flush_every=cfg.flush_every,
+                    max_prefill_chunks_per_step=cfg.max_prefill_chunks_per_step))
+            self.tiers[name] = TierRuntime(
+                name, prof, uplink, sched,
+                tok_cost=compute_time(self._tok_flops, prof),
+                slot_avail=[0.0] * slots)
+        self.requests: List[ClusterRequest] = []
+        self._cr_of: Dict[int, ClusterRequest] = {}   # id(Request) -> wrapper
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def queue_costs(self, arrival: float = 0.0) -> Dict[str, float]:
+        """Estimated queueing delay per tier for a request arriving at
+        ``arrival`` on the virtual clock: how long past its arrival the
+        tier's earliest slot frees up (an earliest-available-slot estimate,
+        so a trace submitted up front is still judged by when each request
+        actually lands, not by the whole future backlog)."""
+        return {name: max(0.0, min(tr.slot_avail) - arrival)
+                for name, tr in self.tiers.items()}
+
+    def virtual_now(self) -> float:
+        """The cluster-wide virtual timestamp (latest tier clock) — a
+        sensible ``arrival`` for requests born "now" (e.g. repeated engine
+        batches), keeping queue estimates anchored to served work."""
+        return max(tr.vclock for tr in self.tiers.values())
+
+    def submit(self, tokens, *, max_new: int = 32,
+               deadline: Optional[float] = None, arrival: float = 0.0,
+               eos_id: Optional[int] = None, frames=None) -> ClusterRequest:
+        """Route one request and enqueue it at the chosen tier.  ``arrival``
+        is the request's birth on the virtual clock (e.g. a Poisson trace)."""
+        toks = np.asarray(tokens).reshape(-1)
+        assert toks.size + max_new <= self.cfg.max_len, \
+            f"prompt {toks.size} + max_new {max_new} exceeds cluster " \
+            f"max_len {self.cfg.max_len}"
+        d = self.router.route(toks.size, max_new, deadline=deadline,
+                              queue_cost=self.queue_costs(arrival))
+        tr = self.tiers[d.tier]
+        prompt_bytes = float(toks.size * 4)
+        if d.is_split:
+            # prefill runs remotely: input up to the prefill tier, compute
+            # there, then the KV cache crosses to the decode tier — the
+            # decode pool only sees the request after that handoff
+            pf = self.tiers[d.prefill_tier]
+            pf_up = pf.uplink.tx_time(prompt_bytes) if pf.uplink else 0.0
+            pf_cost = toks.size * pf.tok_cost
+            pf.busy += pf_cost              # remote prefill occupies its tier
+            ready = arrival + pf_up + pf_cost + d.transfer_delay
+        else:
+            up = tr.uplink.tx_time(prompt_bytes) if tr.uplink else 0.0
+            ready = arrival + up
+        cr = ClusterRequest(
+            Request(tokens=toks, max_new=max_new, eos_id=eos_id,
+                    frames=frames),
+            arrival, deadline, d, ready)
+        # book the earliest slot so later arrivals see this commitment
+        i = min(range(len(tr.slot_avail)), key=tr.slot_avail.__getitem__)
+        service = (max_new if d.is_split else toks.size + max_new) \
+            * tr.tok_cost
+        tr.slot_avail[i] = max(ready, tr.slot_avail[i]) + service
+        tr.waiting.append(cr)
+        tr.routed += 1
+        self.requests.append(cr)
+        self._cr_of[id(cr.req)] = cr
+        return cr
+
+    # ------------------------------------------------------------------
+    # pool stepping + virtual-time accounting
+    # ------------------------------------------------------------------
+    def _release_ready(self, tr: TierRuntime):
+        """Move waiting requests whose transfers have landed into the pool
+        queue; fast-forward an idle tier's clock to the next arrival."""
+        if not tr.waiting:
+            return
+        if not tr.sched.has_work:
+            tr.vclock = max(tr.vclock, min(c.ready_at for c in tr.waiting))
+        still = []
+        for cr in tr.waiting:
+            if cr.ready_at <= tr.vclock:
+                tr.sched.submit(cr.req)
+            else:
+                still.append(cr)
+        tr.waiting = still
+
+    def _poll_tier(self, tr: TierRuntime):
+        self._release_ready(tr)
+        if not tr.sched.has_work:
+            return False
+        rep = tr.sched.poll()
+        if rep.admitted:
+            tr.prefill_rows = [(self._cr_of[id(r)], r.tokens.size)
+                               for r in rep.admitted]
+        if rep.prefill_chunks:
+            # charge replayed prompt tokens to this tier — except rows whose
+            # prefill was already paid for remotely (split decisions)
+            chunk = tr.sched.cfg.prefill_chunk
+            lo = rep.prefill_chunk_start * chunk
+            hi = lo + rep.prefill_chunks * chunk
+            cost = 0.0
+            for cr, plen in tr.prefill_rows:
+                if cr.decision.is_split:
+                    continue
+                cost += min(max(plen - lo, 0), hi - lo) * tr.tok_cost
+            tr.vclock += cost
+            tr.busy += cost
+        if rep.prefill_done:
+            tr.prefill_rows = []
+        if rep.decode_stepped:
+            tr.vclock += tr.tok_cost
+            tr.busy += tr.tok_cost
+            tr.decode_steps += 1
+            tr.slot_tokens += rep.n_active
+        for r in rep.completed:
+            cr = self._cr_of[id(r)]
+            down = (tr.uplink.tx_time(len(r.out_tokens) * 4.0)
+                    if tr.uplink else 0.0)
+            cr.t_done_v = tr.vclock + down
+        return rep.worked
+
+    def poll(self) -> bool:
+        """One round over all tier pools.  Returns whether any worked."""
+        worked = False
+        for tr in self.tiers.values():
+            worked = self._poll_tier(tr) or worked
+        return worked
+
+    @property
+    def has_work(self) -> bool:
+        return any(tr.waiting or tr.sched.has_work
+                   for tr in self.tiers.values())
+
+    def run(self):
+        """Drain every pool (all submitted requests complete)."""
+        while self.has_work:
+            if not self.poll():        # pragma: no cover - defensive
+                break
+        for tr in self.tiers.values():
+            tr.sched.flush_counters()
+
+    def clear_completed(self):
+        """Drop completed requests from the cluster's retention (and the
+        pools' completed lists) so a long-lived cluster reused across many
+        batches doesn't grow without bound.  Router counts and tier
+        clocks/utilization survive; ``stats()`` afterwards covers only
+        still-tracked requests."""
+        done = [cr for cr in self.requests if cr.done]
+        for cr in done:
+            self._cr_of.pop(id(cr.req), None)
+        self.requests = [cr for cr in self.requests if not cr.done]
+        for tr in self.tiers.values():
+            tr.sched.completed.clear()
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+    def jit_cache_sizes(self) -> Dict[str, Dict[str, int]]:
+        return {n: tr.sched.jit_cache_sizes() for n, tr in self.tiers.items()}
+
+    def stats(self) -> Dict[str, object]:
+        done = [cr for cr in self.requests if cr.done]
+        lats = np.asarray([cr.latency for cr in done]) if done else np.zeros(1)
+        per_tier = {}
+        for name, tr in self.tiers.items():
+            tl = [cr.latency for cr in done if cr.decision.tier == name]
+            per_tier[name] = {
+                "routed": tr.routed,
+                "n_slots": tr.sched.cfg.n_slots,
+                "vclock_s": tr.vclock,
+                "utilization": tr.utilization,
+                "slot_occupancy": tr.slot_occupancy,
+                "tokens": tr.sched.tokens_served,
+                "p50_latency_s": float(np.percentile(tl, 50)) if tl else 0.0,
+                "p95_latency_s": float(np.percentile(tl, 95)) if tl else 0.0,
+            }
+        return {
+            "requests": len(self.requests),
+            "completed": len(done),
+            "splits": self.router.split_count,
+            "route_counts": dict(self.router.route_counts),
+            "p50_latency_s": float(np.percentile(lats, 50)),
+            "p95_latency_s": float(np.percentile(lats, 95)),
+            "deadline_hit_rate": (sum(cr.met_deadline for cr in done)
+                                  / len(done) if done else 1.0),
+            "tiers": per_tier,
+            "jit_cache_sizes": self.jit_cache_sizes(),
+        }

@@ -9,6 +9,12 @@ scheduler (repro.serving.scheduler): batched prefill, greedy/temperature
 sampling, SPINN-style exit statistics (which fraction of tokens would have
 exited at each head under the configured entropy threshold — the number the
 edge-device paradigm planner consumes), and whisper cross-cache priming.
+
+Given a ``scenario`` (and optionally a full-size ``plan_cfg``), the engine
+instead submits every row through a ``TieredServingCluster``: the admission
+router spreads the batch over cloud/edge/device pools and
+``engine.route_counts`` reports where rows landed.  Outputs are identical
+either way — tiers differ in virtual cost, not in arithmetic.
 """
 from __future__ import annotations
 
@@ -89,15 +95,20 @@ class ServingEngine:
     (survey §7.3) is driven from those flushed counters.
     """
 
-    def __init__(self, model, params, scfg: ServeConfig = ServeConfig()):
+    def __init__(self, model, params, scfg: ServeConfig = ServeConfig(),
+                 scenario=None, plan_cfg=None):
         self.model = model
         self.params = params
         self.scfg = scfg
+        self.scenario = scenario           # set -> route through tier pools
+        self.plan_cfg = plan_cfg
         self.exit_counts = np.zeros(model.n_exits + 1, np.int64)
         self.tokens_served = 0
         self.controller = None
         self._adaptive_every = 64
         self._scheds: Dict[Tuple[int, int], Any] = {}
+        self._cluster = None
+        self.route_counts: Dict[str, int] = {}
 
     def enable_adaptive(self, target_depth_fraction: float,
                         update_every: int = 64):
@@ -131,12 +142,19 @@ class ServingEngine:
         return sched
 
     def generate(self, prompt_tokens, *, max_new: int = 32,
-                 frames=None, rng=None):
-        """prompt_tokens [B, S0] -> generated [B, max_new]."""
+                 frames=None, rng=None, deadline=None):
+        """prompt_tokens [B, S0] -> generated [B, max_new].
+
+        With a ``scenario`` configured, rows are routed per request across
+        the cloud/edge/device pools (``deadline`` feeds the router);
+        otherwise one local pool serves the whole batch."""
         cfg = self.model.cfg
         b, s0 = prompt_tokens.shape
         if cfg.family == "encdec":
             assert frames is not None, "whisper needs encoder frames"
+        if self.scenario is not None:
+            return self._generate_tiered(prompt_tokens, max_new, frames,
+                                         rng, deadline)
         sched = self._scheduler(b, s0 + max_new)
         sched.controller = self.controller
         sched.adaptive_every = self._adaptive_every
@@ -153,6 +171,51 @@ class ServingEngine:
         self.tokens_served += sched.tokens_served - tokens_before
         sched.completed.clear()        # requests are returned, not retained
         out = np.stack([np.asarray(r.out_tokens, np.int32) for r in reqs])
+        return jnp.asarray(out)
+
+    def _generate_tiered(self, prompt_tokens, max_new, frames, rng, deadline):
+        """Batch generation through the tiered cluster: one routed request
+        per row, exit counters aggregated over all tier pools."""
+        from repro.serving.cluster import ClusterConfig, TieredServingCluster
+        b, s0 = prompt_tokens.shape
+        need = s0 + max_new
+        if self._cluster is None or self._cluster.cfg.max_len < need:
+            max_len = max(self.scfg.max_len, 1 << (need - 1).bit_length())
+            self._cluster = TieredServingCluster(
+                self.model, self.params, self.scenario,
+                plan_cfg=self.plan_cfg,
+                cfg=ClusterConfig(max_len=max_len,
+                                  exit_threshold=self.scfg.exit_threshold,
+                                  temperature=self.scfg.temperature,
+                                  long_mode=self.scfg.long_mode))
+        cl = self._cluster
+        before = {n: (tr.sched.flush_counters().copy(),
+                      tr.sched.tokens_served)
+                  for n, tr in cl.tiers.items()}
+        routes_before = dict(cl.router.route_counts)
+        for tr in cl.tiers.values():
+            tr.sched.params = self.params
+            tr.sched.set_rng(rng)
+            tr.sched.controller = self.controller
+            tr.sched.adaptive_every = self._adaptive_every
+        toks = np.asarray(prompt_tokens)
+        now = cl.virtual_now()
+        crs = [cl.submit(toks[i], max_new=max_new, deadline=deadline,
+                         arrival=now,
+                         frames=(frames[i] if frames is not None else None))
+               for i in range(b)]
+        cl.run()
+        for n, tr in cl.tiers.items():
+            counts0, tokens0 = before[n]
+            self.exit_counts += tr.sched.flush_counters() - counts0
+            self.tokens_served += tr.sched.tokens_served - tokens0
+        # this batch's placement (per-call delta, stable across cluster
+        # rebuilds); requests are returned, not retained by the cluster
+        self.route_counts = {t: c - routes_before.get(t, 0)
+                             for t, c in cl.router.route_counts.items()}
+        cl.clear_completed()
+        out = np.stack([np.asarray(cr.req.out_tokens, np.int32)
+                        for cr in crs])
         return jnp.asarray(out)
 
     def exit_stats(self) -> Dict[str, float]:

@@ -1,0 +1,67 @@
+"""Admission router: per-request tier selection from the paradigm planners.
+
+The survey's paradigms (§2.3) are offline plans; serving needs them *at
+admission time*, per request.  ``AdmissionRouter`` closes that gap: given a
+request's prompt length, decode budget, and deadline, plus the current
+queueing pressure at each tier's slot pool, it calls
+``core.paradigms.admission_decision`` — Neurosurgeon's cloud-device split,
+Edgent's deadline-driven edge plan, DDNN's 3-tier placement, device-local
+execution, and prefill/decode disaggregation splits all compete on the
+scenario's measured cost profiles — and returns the winning
+``AdmissionDecision``.
+
+Cost graphs are cached per prompt-length bucket so routing is O(planner)
+only on the first request of each bucket; every later request in the bucket
+is a dictionary lookup plus a handful of float comparisons.  Nothing here
+touches jitted code, so routing decisions can never trigger a recompile.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.cost_model import (CostGraph, build_cost_graph,
+                                   kv_cache_bytes_per_token)
+from repro.core.paradigms import (TIERS, AdmissionDecision, Scenario,
+                                  admission_decision)
+
+
+class AdmissionRouter:
+    """Route one request to a serving tier (or a prefill/decode split).
+
+    ``plan_cfg`` is the model config the cost graphs are built from — for a
+    smoke-model runtime this is typically the *full-size* variant, so tier
+    economics reflect the real model while execution stays cheap (the same
+    planner/runtime split the rest of the repo uses).
+    """
+
+    def __init__(self, plan_cfg, scenario: Optional[Scenario] = None, *,
+                 bucket: int = 16, allow_split: bool = True):
+        self.plan_cfg = plan_cfg
+        self.scenario = scenario or Scenario.default()
+        self.bucket = max(1, bucket)
+        self.allow_split = allow_split
+        self._kv_tok = kv_cache_bytes_per_token(plan_cfg)
+        self._graphs: Dict[int, CostGraph] = {}
+        self.route_counts: Dict[str, int] = {t: 0 for t in TIERS}
+        self.split_count = 0
+        self.decisions: List[AdmissionDecision] = []
+
+    def _graph(self, total_tokens: int) -> CostGraph:
+        b = -(-max(1, total_tokens) // self.bucket) * self.bucket
+        if b not in self._graphs:
+            self._graphs[b] = build_cost_graph(self.plan_cfg, 1, b)
+        return self._graphs[b]
+
+    def route(self, prompt_len: int, max_new: int, *,
+              deadline: Optional[float] = None,
+              queue_cost: Optional[Dict[str, float]] = None
+              ) -> AdmissionDecision:
+        d = admission_decision(
+            self._graph(prompt_len + max_new), self.scenario,
+            deadline=deadline, queue_cost=queue_cost,
+            prefill_tokens=prompt_len, decode_tokens=max_new,
+            kv_bytes_per_token=self._kv_tok, allow_split=self.allow_split)
+        self.route_counts[d.tier] += 1
+        self.split_count += int(d.is_split)
+        self.decisions.append(d)
+        return d

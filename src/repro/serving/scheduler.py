@@ -12,6 +12,9 @@ runtime:
   chunked jitted scans (``prefill_chunk`` tokens per dispatch) over a fresh
   cache, then row-merged into the pool — in-flight slots are never touched
   and the prompt is never fed through a host-side token-at-a-time loop.
+  ``SchedulerConfig.max_prefill_chunks_per_step`` caps how many chunks one
+  ``poll()`` may run, so a long admission interleaves with in-flight decode
+  instead of pausing it unboundedly (prefill/decode fairness).
 * **One fixed-shape jitted decode step** for the whole pool: tokens [B,1],
   per-slot positions [B], active mask [B], exit-statistics counters and the
   entropy threshold are all *arguments*, so slot churn (admissions,
@@ -21,6 +24,13 @@ runtime:
   in an on-device int32 vector and are flushed to host every
   ``flush_every`` steps (or when the adaptive controller needs them) —
   not synced every token like the old engine.
+
+The scheduler is pool-instantiable and externally steppable: ``run()`` is a
+thin drain loop over ``poll()``, which performs one admission/prefill/decode
+round and returns a ``StepReport`` describing the work done.  The tiered
+serving cluster (``repro.serving.cluster``) instantiates one scheduler per
+cloud/edge/device tier and drives all pools via ``poll()``, using the
+reports for virtual-time accounting.
 
 Typical use::
 
@@ -73,6 +83,46 @@ class SchedulerConfig:
     temperature: float = 0.0           # 0 = greedy
     flush_every: int = 32              # decode steps between counter flushes
     long_mode: bool = False
+    # prefill/decode fairness: max prefill chunks one poll() may run before
+    # the pool decode step gets its turn.  0 = unbounded (an admission's
+    # whole prompt replays before decode resumes — the old behaviour).
+    max_prefill_chunks_per_step: int = 0
+
+
+@dataclasses.dataclass
+class StepReport:
+    """What one ``poll()`` did — consumed by external pool drivers (the
+    tiered cluster) for virtual-time accounting and by fairness tests."""
+    admitted: List[Request] = dataclasses.field(default_factory=list)
+    prefill_chunks: int = 0            # chunks advanced this poll
+    prefill_chunk_start: int = 0       # index of the first chunk advanced
+    prefill_tokens: int = 0            # real prompt tokens covered this poll
+    prefill_done: bool = False         # admission finalized this poll
+    decode_stepped: bool = False
+    n_active: int = 0                  # active slots during the decode step
+    completed: List[Request] = dataclasses.field(default_factory=list)
+
+    @property
+    def worked(self) -> bool:
+        return bool(self.admitted) or self.prefill_chunks > 0 \
+            or self.decode_stepped
+
+
+@dataclasses.dataclass
+class _PendingPrefill:
+    """An admission whose chunked prompt replay is still in flight.  The
+    fresh cache is private to the admission, so in-flight decode slots keep
+    stepping on the pool cache between chunks."""
+    reqs: List[Request]
+    slots: List[int]
+    tokens: Any                        # np [n_slots, n_chunks*chunk] int32
+    lengths: Any                       # np [n_slots] int32
+    lengths_d: Any                     # device copy
+    admit: Any                         # np [n_slots] bool
+    cache: Any                         # fresh decode cache being filled
+    last: Any                          # carried last-real-token logits
+    next_chunk: int = 0
+    n_chunks: int = 0
 
 
 class ContinuousBatchScheduler:
@@ -115,6 +165,8 @@ class ContinuousBatchScheduler:
         self._step_idx = 0
         self._tokens_since_adapt = 0
         self._rng = None
+        self._pending: Optional[_PendingPrefill] = None
+        self._last_step_active = 0
         # per-run fold counters, reset by run() so identical (requests, rng)
         # reproduce identical samples across calls (seed-engine semantics)
         self._rng_tick = 0
@@ -216,24 +268,46 @@ class ContinuousBatchScheduler:
         self.n_submitted += 1
         self.queue.append(req)
 
-    @property
-    def has_work(self) -> bool:
-        return bool(self.queue) or bool(self.active.any())
-
-    def tick(self) -> bool:
-        """Admit into free slots, then run one decode step.  Returns whether
-        any device work happened (False = idle)."""
-        admitted = self._admit()
-        stepped = self.step()
-        return admitted or stepped
-
-    def run(self, rng=None):
-        """Drain the queue and all slots to completion."""
+    def set_rng(self, rng):
+        """Install a sampling rng and reset the per-run fold counters, so
+        identical (requests, rng) reproduce identical samples — the same
+        reset ``run()`` performs, for external pool drivers that step the
+        scheduler via ``poll()`` instead."""
         self._rng = rng
         self._rng_tick = 0
         self._admit_tick = 0
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active.any()) \
+            or self._pending is not None
+
+    def tick(self) -> bool:
+        """One admission/prefill/decode round.  Returns whether any device
+        work happened (False = idle)."""
+        return self.poll().worked
+
+    def poll(self) -> StepReport:
+        """One scheduler round: begin an admission if slots are free, advance
+        at most ``max_prefill_chunks_per_step`` prefill chunks, then run one
+        pool decode step.  Returns a ``StepReport`` of the work done — the
+        external-driver API the tiered cluster steps pools through."""
+        rep = StepReport()
+        done_before = len(self.completed)   # before prefill: an eos on the
+        if self._pending is None:           # first sampled token completes
+            rep.admitted = self._begin_admit()   # a request at admission
+        if self._pending is not None:
+            self._advance_prefill(self.cfg.max_prefill_chunks_per_step, rep)
+        rep.decode_stepped = self.step()
+        rep.n_active = self._last_step_active
+        rep.completed = self.completed[done_before:]
+        return rep
+
+    def run(self, rng=None):
+        """Drain the queue and all slots to completion."""
+        self.set_rng(rng)
         while self.has_work:
-            if not self.tick():       # pragma: no cover - defensive
+            if not self.poll().worked:  # pragma: no cover - defensive
                 break
         self.flush_counters()
 
@@ -241,9 +315,22 @@ class ContinuousBatchScheduler:
     # admission: chunked batched prefill into freed slots
     # ------------------------------------------------------------------
     def _admit(self) -> bool:
+        """Compatibility entry: begin an admission (if possible) and advance
+        its prefill by the configured cap (0 = to completion)."""
+        began = bool(self._begin_admit())
+        if self._pending is None:
+            return began
+        rep = StepReport()
+        self._advance_prefill(self.cfg.max_prefill_chunks_per_step, rep)
+        return began or rep.prefill_chunks > 0
+
+    def _begin_admit(self) -> List[Request]:
+        """Reserve free slots for queued requests and stage their prompts as
+        a pending chunked prefill over a fresh cache.  No chunks run here —
+        ``_advance_prefill`` replays them, bounded per poll for fairness."""
         free = [i for i in range(self.cfg.n_slots) if self.slot_req[i] is None]
         if not free or not self.queue:
-            return False
+            return []
         take = free[: len(self.queue)]
         reqs = [self.queue.popleft() for _ in take]
         b, chunk = self.cfg.n_slots, self.cfg.prefill_chunk
@@ -271,27 +358,49 @@ class ContinuousBatchScheduler:
             fresh = self._prime(self.params, fresh,
                                 jnp.asarray(frames, jnp.bfloat16))
 
-        last = jnp.zeros((b, self._vocab), jnp.float32)
-        lengths_d = jnp.asarray(lengths)
-        for ci in range(n_chunks):
-            fresh, last = self._prefill_chunk(
-                self.params, fresh,
-                jnp.asarray(tokens[:, ci * chunk:(ci + 1) * chunk]),
-                jnp.int32(ci * chunk), lengths_d, last)
-        self.cache = self._merge(jnp.asarray(admit), fresh, self.cache)
+        self._pending = _PendingPrefill(
+            reqs=reqs, slots=take, tokens=tokens, lengths=lengths,
+            lengths_d=jnp.asarray(lengths), admit=admit, cache=fresh,
+            last=jnp.zeros((b, self._vocab), jnp.float32),
+            next_chunk=0, n_chunks=n_chunks)
+        return reqs
 
-        logits_np = np.asarray(last)
-        for slot, r in zip(take, reqs):
+    def _advance_prefill(self, max_chunks: int, rep: StepReport):
+        """Run up to ``max_chunks`` pending prefill chunks (<=0 = all); merge
+        into the pool and activate the slots when the last chunk lands."""
+        p = self._pending
+        assert p is not None
+        chunk = self.cfg.prefill_chunk
+        end = p.n_chunks if max_chunks <= 0 \
+            else min(p.n_chunks, p.next_chunk + max_chunks)
+        rep.prefill_chunk_start = p.next_chunk
+        for ci in range(p.next_chunk, end):
+            p.cache, p.last = self._prefill_chunk(
+                self.params, p.cache,
+                jnp.asarray(p.tokens[:, ci * chunk:(ci + 1) * chunk]),
+                jnp.int32(ci * chunk), p.lengths_d, p.last)
+            rep.prefill_chunks += 1
+            lo, hi = ci * chunk, (ci + 1) * chunk
+            rep.prefill_tokens += int(
+                np.sum(np.clip(p.lengths - lo, 0, hi - lo)))
+        p.next_chunk = end
+        if p.next_chunk < p.n_chunks:
+            return
+        # last chunk replayed: merge rows into the pool and go live
+        self.cache = self._merge(jnp.asarray(p.admit), p.cache, self.cache)
+        logits_np = np.asarray(p.last)
+        for slot, r in zip(p.slots, p.reqs):
             tok0 = self._sample_first(logits_np[slot])
             r.out_tokens.append(tok0)
-            self.positions[slot] = lengths[slot]
+            self.positions[slot] = p.lengths[slot]
             self.current_tok[slot] = tok0
             self.steps_taken[slot] = 0
             self.active[slot] = True
             self.n_admitted += 1
             if r.eos_id is not None and tok0 == r.eos_id:
                 self._finish(slot)
-        return True
+        self._pending = None
+        rep.prefill_done = True
 
     def _sample_first(self, logits_row) -> int:
         # seed-engine semantics: sampling needs BOTH temperature>0 and an rng
@@ -306,6 +415,7 @@ class ContinuousBatchScheduler:
     # decode: one fixed-shape step over the whole pool
     # ------------------------------------------------------------------
     def step(self) -> bool:
+        self._last_step_active = int(self.active.sum())
         if not self.active.any():
             return False
         thr = (self.controller.threshold if self.controller is not None

@@ -77,3 +77,63 @@ def test_engine_adaptive_integration():
     assert eng.controller is not None
     assert 0.02 <= eng.controller.threshold <= 0.98
     assert eng.tokens_served == 24
+
+
+def test_scheduler_drives_controller_from_flushed_counters():
+    """The controller wired straight into the scheduler: after enough served
+    tokens the flushed exit statistics must actually move the threshold, and
+    it must stay inside [lo, hi] no matter how hard the target pushes."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serving import (ContinuousBatchScheduler, Request,
+                               SchedulerConfig)
+
+    cfg = get_config("granite-3-2b-smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rs = np.random.RandomState(9)
+
+    def serve(target):
+        ctrl = AdaptiveExitController(target_depth_fraction=target,
+                                      threshold=0.5)
+        sched = ContinuousBatchScheduler(
+            m, params, SchedulerConfig(n_slots=2, max_len=32),
+            controller=ctrl)
+        sched.adaptive_every = 4       # update from every 4 served tokens
+        for l in (4, 6, 5, 3):
+            sched.submit(Request(tokens=rs.randint(0, cfg.vocab_size, l),
+                                 max_new=8))
+        sched.run()
+        assert sched.flush_counters().sum() == sched.tokens_served == 32
+        return ctrl
+
+    # unreachable target: every update loosens; must move up yet stay <= hi
+    c_lo = serve(0.01)
+    assert c_lo.threshold > 0.5
+    assert c_lo.lo <= c_lo.threshold <= c_lo.hi
+    # trivially-met target: every update tightens; must move down, >= lo
+    c_hi = serve(1.0)
+    assert c_hi.threshold < 0.5
+    assert c_hi.lo <= c_hi.threshold <= c_hi.hi
+
+
+def test_engine_adaptive_threshold_moves():
+    """enable_adaptive end to end: an impossible depth target must push the
+    engine's threshold strictly above its initial value, clamped at hi."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serving import ServeConfig, ServingEngine
+
+    cfg = get_config("granite-3-2b-smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, ServeConfig(exit_threshold=0.3))
+    eng.enable_adaptive(target_depth_fraction=0.01, update_every=4)
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 4), 0,
+                                 cfg.vocab_size)
+    eng.generate(prompts, max_new=16)
+    assert eng.controller.threshold > 0.3
+    assert eng.controller.threshold <= eng.controller.hi

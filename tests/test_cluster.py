@@ -1,0 +1,282 @@
+"""Tiered serving cluster + admission router invariants.
+
+The acceptance claims of the paradigm-aware serving PR: short-prompt /
+tight-deadline requests land on the device/edge pools while long prompts go
+to the cloud pool; a degraded WAN shifts traffic off the cloud tier; queue
+pressure sheds load; prefill/decode splits fire when the interconnect makes
+them profitable; and routing decisions never retrace the jitted step
+functions (per-pool jit caches stay at one entry)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (LINKS, TABLE2, Scenario, admission_decision,
+                        build_cost_graph, kv_cache_bytes_per_token)
+from repro.core.cost_model import LinkProfile
+from repro.models import Model
+from repro.serving import (AdmissionRouter, ClusterConfig, ServeConfig,
+                           ServingEngine, TieredServingCluster,
+                           derive_tier_slots)
+
+PLAN_ARCH = "granite-3-2b"          # router plans against the full model
+RUN_ARCH = "granite-3-2b-smoke"     # execution stays smoke-sized
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_config(RUN_ARCH)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+@pytest.fixture(scope="module")
+def plan_cfg():
+    return get_config(PLAN_ARCH)
+
+
+# ---------------------------------------------------------------------------
+# router / admission_decision (pure planners, no model execution)
+# ---------------------------------------------------------------------------
+
+def test_short_tight_lands_on_device_or_edge(plan_cfg):
+    r = AdmissionRouter(plan_cfg, Scenario.default())
+    d = r.route(8, 32, deadline=0.05)
+    assert d.tier in ("device", "edge")
+    assert d.feasible
+    assert r.route_counts[d.tier] == 1
+
+
+def test_long_loose_lands_on_cloud(plan_cfg):
+    r = AdmissionRouter(plan_cfg, Scenario.default())
+    d = r.route(512, 32, deadline=None)
+    assert d.tier == "cloud"
+    assert "neurosurgeon" in d.paradigm
+
+
+def test_degraded_wan_shifts_off_cloud(plan_cfg):
+    """The same long request that picks cloud under the default scenario
+    must avoid the cloud tier once the WAN degrades."""
+    d_ok = AdmissionRouter(plan_cfg, Scenario.default()).route(
+        512, 32, deadline=None)
+    d_bad = AdmissionRouter(plan_cfg, Scenario.degraded_wan()).route(
+        512, 32, deadline=None)
+    assert d_ok.tier == "cloud"
+    assert d_bad.tier != "cloud"
+
+
+def test_queue_pressure_sheds_load(plan_cfg):
+    """A congested edge pool pushes a short request to another tier."""
+    r = AdmissionRouter(plan_cfg, Scenario.default())
+    free = r.route(8, 32, deadline=0.5)
+    congested = r.route(8, 32, deadline=0.5, queue_cost={"edge": 1.0})
+    assert free.tier == "edge"
+    assert congested.tier != "edge"
+    assert congested.effective_latency <= free.predicted_latency + 1.0
+
+
+def test_strong_device_soc_serves_locally(plan_cfg):
+    """A phone-class SoC behind a congested LTE uplink keeps short prompts
+    on the device tier (no link beats a slow link)."""
+    sc = dataclasses.replace(Scenario.default(),
+                             device=TABLE2["honor-magic3"],
+                             dev_edge=LINKS["lte"])
+    d = AdmissionRouter(plan_cfg, sc).route(8, 16, deadline=0.05)
+    assert d.tier == "device"
+    assert d.paradigm == "device-local"
+
+
+def test_split_fires_on_fat_interconnect(plan_cfg):
+    """Prefill/decode disaggregation: with a LAN-class device<->edge link, a
+    congested edge pool, and an unusable WAN, prefilling on the edge and
+    decoding on the device beats every whole-request placement."""
+    sc = dataclasses.replace(
+        Scenario.default(),
+        dev_edge=LINKS["lan"],
+        dev_cloud=LinkProfile("wan-down", 1e3, 10.0),
+        edge_cloud=LinkProfile("wan-down", 1e3, 10.0))
+    g = build_cost_graph(plan_cfg, 1, 160)
+    d = admission_decision(
+        g, sc, deadline=None, queue_cost={"edge": 5.0, "cloud": 5.0},
+        prefill_tokens=128, decode_tokens=32,
+        kv_bytes_per_token=kv_cache_bytes_per_token(plan_cfg))
+    assert d.is_split
+    assert d.prefill_tier == "edge" and d.tier == "device"
+    assert d.transfer_delay > 0.0
+
+
+def test_route_decisions_cache_cost_graphs(plan_cfg):
+    r = AdmissionRouter(plan_cfg, Scenario.default(), bucket=16)
+    for p in (3, 7, 11, 14):            # same bucket -> one graph
+        r.route(p, 2, deadline=0.05)
+    assert len(r._graphs) == 1
+    r.route(100, 2)
+    assert len(r._graphs) == 2
+
+
+def test_derive_tier_slots_scales_with_compute():
+    sc = Scenario.default()
+    kv = 1 << 20
+    cloud = derive_tier_slots(sc.cloud, sc.cloud, 8, kv)
+    edge = derive_tier_slots(sc.edge, sc.cloud, 8, kv)
+    device = derive_tier_slots(sc.device, sc.cloud, 8, kv)
+    assert cloud == 8
+    assert 1 <= device <= edge <= cloud
+    # memory cap binds when the KV arena outgrows half the tier's memory
+    tiny = dataclasses.replace(sc.cloud, mem_bytes=4 * kv)
+    assert derive_tier_slots(tiny, sc.cloud, 8, kv) == 2
+
+
+# ---------------------------------------------------------------------------
+# cluster execution (smoke model, virtual-clock accounting)
+# ---------------------------------------------------------------------------
+
+def _mixed_trace(cfg, rs, n_short=4, n_long=2, gap=0.1):
+    trace = []
+    t = 0.0
+    for i in range(n_short + n_long):
+        short = i < n_short
+        plen = int(rs.randint(4, 13)) if short else 256
+        trace.append((t, rs.randint(0, cfg.vocab_size, plen),
+                      0.05 if short else None, short))
+        t += gap
+    return trace
+
+
+def test_cluster_routes_and_completes(granite, plan_cfg):
+    cfg, m, params = granite
+    rs = np.random.RandomState(0)
+    max_new = 6
+    cluster = TieredServingCluster(
+        m, params, Scenario.default(), plan_cfg=plan_cfg,
+        cfg=ClusterConfig(base_slots=2, max_len=264, prefill_chunk=16))
+    trace = _mixed_trace(cfg, rs)
+    for arrival, toks, deadline, _ in trace:
+        cluster.submit(toks, max_new=max_new, deadline=deadline,
+                       arrival=arrival)
+    cluster.run()
+    st = cluster.stats()
+    assert st["completed"] == len(trace)
+    assert sum(st["route_counts"].values()) == len(trace)
+    # routing acceptance: short/tight on device or edge, long on cloud
+    for cr, (_, _, _, short) in zip(cluster.requests, trace):
+        assert len(cr.req.out_tokens) == max_new
+        assert cr.done and cr.latency > 0.0
+        if short:
+            assert cr.decision.tier in ("device", "edge")
+        else:
+            assert cr.decision.tier == "cloud"
+    # virtual accounting: every serving tier accrued clock and utilization
+    for name, tr in cluster.tiers.items():
+        if tr.routed:
+            assert tr.vclock > 0.0 and 0.0 < tr.utilization <= 1.0
+            sizes = tr.sched.jit_cache_sizes()
+            if -1 not in sizes.values():
+                assert sizes == {"decode": 1, "prefill": 1}, \
+                    f"{name} pool retraced: {sizes}"
+
+
+def test_cluster_degraded_wan_reroutes_execution(granite, plan_cfg):
+    """Same trace, degraded WAN: the cloud pool's routed share must drop
+    and the requests still complete (edge absorbs the long prompts)."""
+    cfg, m, params = granite
+    max_new = 4
+
+    def routed(scenario):
+        rs = np.random.RandomState(1)
+        cluster = TieredServingCluster(
+            m, params, scenario, plan_cfg=plan_cfg,
+            cfg=ClusterConfig(base_slots=2, max_len=264, prefill_chunk=16))
+        for arrival, toks, deadline, _ in _mixed_trace(cfg, rs,
+                                                       n_short=2, n_long=2):
+            cluster.submit(toks, max_new=max_new, deadline=deadline,
+                           arrival=arrival)
+        cluster.run()
+        st = cluster.stats()
+        assert st["completed"] == 4
+        return st["route_counts"]["cloud"]
+
+    assert routed(Scenario.degraded_wan()) < routed(Scenario.default())
+
+
+def test_cluster_split_injects_transfer_delay(granite, plan_cfg):
+    """A split-routed request waits out remote prefill + the KV handoff on
+    the virtual clock before its decode tier admits it."""
+    cfg, m, params = granite
+    sc = dataclasses.replace(
+        Scenario.default(),
+        dev_edge=LINKS["lan"],
+        dev_cloud=LinkProfile("wan-down", 1e3, 10.0),
+        edge_cloud=LinkProfile("wan-down", 1e3, 10.0))
+    cluster = TieredServingCluster(
+        m, params, sc, plan_cfg=plan_cfg,
+        cfg=ClusterConfig(base_slots=2, max_len=192, prefill_chunk=16))
+    rs = np.random.RandomState(2)
+    # congest the edge pool so the split candidate wins for the long prompt
+    for _ in range(3):
+        cluster.submit(rs.randint(0, cfg.vocab_size, 150), max_new=4,
+                       arrival=0.0)
+    cr = cluster.submit(rs.randint(0, cfg.vocab_size, 128), max_new=4,
+                        arrival=0.0)
+    assert cr.decision.is_split
+    assert cr.decision.transfer_delay > 0.0
+    assert cr.ready_at >= cr.decision.transfer_delay
+    cluster.run()
+    assert cr.done
+    assert cr.latency >= cr.decision.transfer_delay
+    assert len(cr.req.out_tokens) == 4
+
+
+def test_engine_tiered_matches_single_pool(granite, plan_cfg):
+    """Routing is a placement choice, not an arithmetic one: the tiered
+    engine's greedy outputs equal the single-pool engine's."""
+    cfg, m, params = granite
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (3, 7), 0,
+                                 cfg.vocab_size)
+    single = ServingEngine(m, params, ServeConfig(exit_threshold=0.6))
+    tiered = ServingEngine(m, params, ServeConfig(exit_threshold=0.6),
+                           scenario=Scenario.default(), plan_cfg=plan_cfg)
+    out_s = np.asarray(single.generate(prompts, max_new=6))
+    out_t = np.asarray(tiered.generate(prompts, max_new=6))
+    assert (out_s == out_t).all()
+    assert sum(tiered.route_counts.values()) == 3
+    assert tiered.tokens_served == 18
+    assert tiered.exit_counts.sum() == 18
+
+
+def test_engine_tiered_adaptive_and_sampling(granite, plan_cfg):
+    """The tiered path preserves the engine contract: enable_adaptive moves
+    the threshold from tier-pool counters, and sampling with the same rng is
+    reproducible across calls (per-run fold counters reset via set_rng)."""
+    cfg, m, params = granite
+    eng = ServingEngine(m, params,
+                        ServeConfig(exit_threshold=0.3, temperature=0.8),
+                        scenario=Scenario.default(), plan_cfg=plan_cfg)
+    eng.enable_adaptive(target_depth_fraction=0.01, update_every=4)
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 5), 0,
+                                 cfg.vocab_size)
+    rng = jax.random.PRNGKey(4)
+    out1 = np.asarray(eng.generate(prompts, max_new=12, rng=rng))
+    assert eng.controller.threshold > 0.3          # counters drove updates
+    assert eng.controller.threshold <= eng.controller.hi
+    assert sum(eng.route_counts.values()) == 2     # per-call placement
+    out2 = np.asarray(eng.generate(prompts, max_new=12, rng=rng))
+    assert (out1 == out2).all()
+    # reuse must not retain completed requests in the cluster
+    assert eng._cluster.requests == []
+
+
+def test_serve_tiered_poisson_smoke():
+    from repro.launch.serve import serve_tiered_poisson
+    stats = serve_tiered_poisson(
+        RUN_ARCH, rate=100.0, n_requests=8, base_slots=2, prompt_len=12,
+        max_new=4, seed=0, quiet=True)
+    assert stats["completed"] == 8
+    assert sum(stats["route_counts"].values()) == 8
+    assert stats["p95_latency_s"] >= stats["p50_latency_s"] > 0.0
+    for name, pool in stats["jit_cache_sizes"].items():
+        if stats["tiers"][name]["routed"] and -1 not in pool.values():
+            assert pool == {"decode": 1, "prefill": 1}

@@ -168,6 +168,69 @@ def test_engine_generate_matches_sequential_reference(granite):
     assert eng.exit_counts.sum() == 18
 
 
+def test_prefill_decode_interleaving(granite):
+    """Fairness: with max_prefill_chunks_per_step=1, a long admission's
+    chunked prefill no longer pauses in-flight decode — every poll that
+    advances a prefill chunk also steps the active decode slots, and the
+    outputs still match the sequential reference."""
+    cfg, m, params = granite
+    rs = np.random.RandomState(7)
+    sched = ContinuousBatchScheduler(
+        m, params, SchedulerConfig(n_slots=2, max_len=48, prefill_chunk=4,
+                                   max_prefill_chunks_per_step=1))
+    a = Request(tokens=rs.randint(0, cfg.vocab_size, 4), max_new=16)
+    sched.submit(a)
+    while not sched.active.any():      # admit A; it starts decoding
+        sched.poll()
+    b = Request(tokens=rs.randint(0, cfg.vocab_size, 16), max_new=4)
+    sched.submit(b)                    # 16-token prompt = 4 chunks
+    reports = []
+    while sched.has_work:
+        reports.append(sched.poll())
+    sched.flush_counters()
+    prefill_polls = [r for r in reports if r.prefill_chunks]
+    # B's prompt was spread over >= 4 polls, one chunk each ...
+    assert len(prefill_polls) >= 4
+    assert all(r.prefill_chunks == 1 for r in prefill_polls)
+    # ... and decode kept running underneath every one of them
+    assert all(r.decode_stepped and r.n_active >= 1 for r in prefill_polls)
+    # interleaving must not change results
+    _assert_matches_reference(m, params, a.tokens, a.out_tokens, 16)
+    _assert_matches_reference(m, params, b.tokens, b.out_tokens, 4)
+    _assert_single_compile(sched.jit_cache_sizes())
+
+
+def test_eos_at_admission_reported_in_poll(granite):
+    """A request whose FIRST sampled token is eos completes during prefill
+    finalization; the StepReport of that poll must still carry it (external
+    pool drivers stamp completion times from reports)."""
+    cfg, m, params = granite
+    rs = np.random.RandomState(11)
+    prompt = rs.randint(0, cfg.vocab_size, 5).astype(np.int32)
+    first = _sequential_reference(m, params, prompt, 1)[0]
+    sched = ContinuousBatchScheduler(
+        m, params, SchedulerConfig(n_slots=1, max_len=16))
+    req = Request(tokens=prompt, max_new=8, eos_id=first)
+    sched.submit(req)
+    completed = []
+    while sched.has_work:
+        completed += sched.poll().completed
+    assert req.done and req.out_tokens == [first]
+    assert completed == [req]
+
+
+def test_unbounded_prefill_is_default(granite):
+    """max_prefill_chunks_per_step=0 (default) replays the whole prompt in
+    one poll — the pre-fairness behaviour stays the default."""
+    cfg, m, params = granite
+    rs = np.random.RandomState(8)
+    sched = ContinuousBatchScheduler(
+        m, params, SchedulerConfig(n_slots=1, max_len=32, prefill_chunk=4))
+    sched.submit(Request(tokens=rs.randint(0, cfg.vocab_size, 16), max_new=2))
+    rep = sched.poll()
+    assert rep.prefill_chunks == 4 and rep.prefill_done
+
+
 def test_scheduler_ring_buffer_window_wraps():
     """Sliding-window arch with sequences LONGER than the window: per-slot
     positions drive the ring-buffer branch (slot = pos % window, per-row
