@@ -2,9 +2,11 @@
 #   make test        tier-1 verify (ROADMAP.md): the whole suite, fail-fast
 #   make test-fast   suite minus the slow dry-run compile test
 #   make lint        byte-compile src/tests/benchmarks (import/syntax gate)
+#   make check       CI gate: lint + test-fast
 #   make serve-bench continuous batching vs sequential serving throughput
 #   make bench-smoke tiered (cloud/edge/device) serving benchmark, tiny trace
-.PHONY: test test-fast lint serve-bench bench-smoke
+#   make bench-exit  early-exit threshold sweep (tok/s + p50 vs threshold)
+.PHONY: test test-fast lint check serve-bench bench-smoke bench-exit
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -16,8 +18,13 @@ test-fast:
 lint:
 	python -m compileall -q src tests benchmarks
 
+check: lint test-fast
+
 serve-bench:
 	python benchmarks/serving_bench.py
 
 bench-smoke:
 	python benchmarks/tiered_serving_bench.py --smoke
+
+bench-exit:
+	python benchmarks/exit_bench.py

@@ -1,0 +1,213 @@
+"""Early-exit serving sweep: decode tok/s and virtual p50 vs exit threshold.
+
+The depth-segmented decode PR's acceptance benchmark: as the entropy
+threshold loosens, more tokens clear an exit probe, the scheduler dispatches
+fewer segment stages per step, and decode throughput rises — compute is
+actually truncated, not just counted.  Two sweeps over a 4-layer / 3-exit
+variant of a smoke arch:
+
+* **single pool** — one ``ContinuousBatchScheduler`` replays the same trace
+  at each threshold; reports decode tok/s, measured depth fraction (layer-
+  weighted share of the stack dispatched per token), and the exit histogram.
+  Thresholds are anchored to the measured entropy distribution (0 = nothing
+  exits, the head-0 median = a mixed split, 1.5 = everything exits at the
+  first head) so the sweep shows graded truncation on random-init weights.
+* **tiered cluster** — the same short/tight-deadline trace through the
+  cloud/edge/device pools at threshold 0 vs permissive: tier virtual clocks
+  charge the truncated per-token step cost, so device/edge p50 must drop.
+
+    PYTHONPATH=src python benchmarks/exit_bench.py \\
+        [--arch granite-3-2b-smoke] [--requests 8] [--slots 2] [--max-new 24]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0])           # repo root
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from benchmarks.common import record                     # noqa: E402
+from repro.configs import get_config                     # noqa: E402
+from repro.core import Scenario                          # noqa: E402
+from repro.models import Model                           # noqa: E402
+from repro.serving import (ClusterConfig,                # noqa: E402
+                           ContinuousBatchScheduler, Request,
+                           SchedulerConfig, TieredServingCluster)
+
+
+def bench_config(arch: str, n_layers: int = 4):
+    """A deeper smoke variant with an exit head after every layer but the
+    last, so the threshold knob has more than one truncation point."""
+    base = get_config(arch)
+    return dataclasses.replace(
+        base, name=base.name + f"-exit{n_layers}", num_layers=n_layers,
+        exits=dataclasses.replace(base.exits,
+                                  exit_layers=tuple(range(1, n_layers))))
+
+
+def measure_entropies(model, params, cfg, steps: int = 24, seed: int = 1):
+    """Normalized head-0 exit entropies along a greedy decode trace."""
+    cache = model.init_decode_cache(1, steps + 2)
+    rs = np.random.RandomState(seed)
+    tok = jnp.asarray([[rs.randint(0, cfg.vocab_size)]], jnp.int32)
+    step = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos))
+    ents = []
+    for t in range(steps):
+        logits, ee, cache = step(params, cache, tok, jnp.int32(t))
+        ents.append(float(ee[0, 0]) / np.log(cfg.vocab_size))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    return np.asarray(ents)
+
+
+def serve_trace(sched, prompts, max_new: int):
+    """Replay the trace; time only decode steps.  Returns (decode_s, stats)."""
+    reqs = [Request(tokens=p, max_new=max_new) for p in prompts]
+    for r in reqs:
+        sched.submit(r)
+    decode_s = 0.0
+    while sched.has_work:
+        sched._admit()
+        t0 = time.perf_counter()
+        sched.step()
+        decode_s += time.perf_counter() - t0
+    return decode_s, sched.exit_stats()
+
+
+def run(arch: str = "granite-3-2b-smoke", requests: int = 8, slots: int = 2,
+        prompt_len: int = 8, max_new: int = 24, seed: int = 0) -> None:
+    cfg = bench_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rs = np.random.RandomState(seed)
+    prompts = [rs.randint(0, cfg.vocab_size,
+                          int(rs.randint(max(1, prompt_len // 2),
+                                         prompt_len + 1))).astype(np.int32)
+               for _ in range(requests)]
+    n_tokens = requests * max_new
+
+    ents = measure_entropies(model, params, cfg)
+    # the sweep compares *exit-enabled* thresholds: ~0 (probes dispatch,
+    # nothing clears them), the measured head-0 median (mixed split), and
+    # permissive (everything exits at head 0).  Exactly 0 disables probing
+    # altogether (no probes, no syncs) and is reported separately below —
+    # on CPU-interpret the probe kernels cost a visible fraction of a tiny
+    # model's step, so the probe-free path is not a sweep point.
+    thresholds = [1e-9, float(np.median(ents)), 1.5]
+    print(f"arch={cfg.name} ({cfg.num_layers} layers, {model.n_exits} exits) "
+          f"requests={requests} slots={slots} max_new={max_new}")
+    print(f"normalized head-0 entropy: min={ents.min():.4f} "
+          f"median={np.median(ents):.4f} max={ents.max():.4f}")
+
+    # one scheduler reused across thresholds: the threshold is a jit
+    # *argument*, so the sweep never recompiles.  Warm up at a tiny positive
+    # threshold: nothing exits (so every segment stage compiles at full
+    # depth) but the probes still dispatch and compile — at exactly 0 the
+    # scheduler skips probes entirely and they'd compile inside a timed run
+    sched = ContinuousBatchScheduler(
+        model, params,
+        SchedulerConfig(n_slots=slots, max_len=prompt_len + max_new,
+                        prefill_chunk=8, exit_threshold=1e-9))
+    serve_trace(sched, prompts, max_new)                 # warmup (compiles)
+
+    rows = []
+    for thr in thresholds:
+        sched.cfg.exit_threshold = thr
+        sched.reset_stats()
+        decode_s, st = serve_trace(sched, prompts, max_new)
+        tok_s = n_tokens / decode_s
+        rows.append((thr, tok_s, st["measured_depth"], st))
+        hist = {k: round(v, 3) for k, v in st.items()
+                if k.endswith("_frac")}
+        print(f"  thr={thr:<8.3g} decode {tok_s:8.1f} tok/s  "
+              f"measured depth {st['measured_depth']:.3f}  exits {hist}")
+        record(f"serving/exit_sweep_thr{thr:.3g}", decode_s / n_tokens * 1e6,
+               derived=f"depth={st['measured_depth']:.3f}")
+
+    depths = [r[2] for r in rows]
+    toks = [r[1] for r in rows]
+    assert all(a > b for a, b in zip(depths, depths[1:])), \
+        f"measured depth must strictly shrink as the threshold loosens: " \
+        f"{depths}"
+    assert all(a < b for a, b in zip(toks, toks[1:])), \
+        f"decode tok/s must strictly rise as the threshold loosens: {toks}"
+    print(f"speedup full->permissive: {toks[-1] / toks[0]:.2f}x "
+          f"(depth {depths[0]:.2f} -> {depths[-1]:.2f})")
+
+    # threshold exactly 0: probing disabled entirely (no probe dispatches,
+    # no per-probe host syncs) — the fastest way to run full depth
+    sched.cfg.exit_threshold = 0.0
+    sched.reset_stats()
+    decode_s, st = serve_trace(sched, prompts, max_new)
+    print(f"  thr=0 (probe-free) decode {n_tokens / decode_s:8.1f} tok/s  "
+          f"measured depth {st['measured_depth']:.3f}")
+    record("serving/exit_probe_free", decode_s / n_tokens * 1e6,
+           derived="depth=1.000")
+    assert st["measured_depth"] == 1.0
+
+    # --- tiered: truncated compute must move the virtual clocks ----------
+    # default scenario routes short/tight prompts to the edge pool; a
+    # phone-class SoC behind a congested LTE uplink keeps them on-device —
+    # together the sweep covers both lightweight tiers
+    from repro.core import LINKS, TABLE2
+    plan_cfg = get_config(arch[:-6] if arch.endswith("-smoke") else arch)
+    scenarios = {
+        "edge": Scenario.default(),
+        "device": dataclasses.replace(Scenario.default(),
+                                      device=TABLE2["honor-magic3"],
+                                      dev_edge=LINKS["lte"]),
+    }
+
+    def tier_p50(scenario, threshold):
+        cluster = TieredServingCluster(
+            model, params, scenario, plan_cfg=plan_cfg,
+            cfg=ClusterConfig(base_slots=slots,
+                              max_len=prompt_len + max_new,
+                              exit_threshold=threshold))
+        t = 0.0
+        for i, p in enumerate(prompts):
+            # alternate tight/looser deadlines so both the device and edge
+            # pools participate in the sweep
+            cluster.submit(p[:4] if i % 2 else p[:6], max_new=8,
+                           deadline=0.01 if i % 2 else 0.05, arrival=t)
+            t += 0.01
+        cluster.run()
+        st = cluster.stats()
+        return {n: ts["p50_latency_s"] for n, ts in st["tiers"].items()
+                if ts["routed"]}
+
+    for label, sc in scenarios.items():
+        p50_full = tier_p50(sc, 0.0)
+        p50_trunc = tier_p50(sc, 1.5)
+        assert label in p50_full, (label, p50_full)
+        for name in p50_full:
+            print(f"  [{label} scenario] tier {name:6s} p50 "
+                  f"{p50_full[name]*1e3:7.2f}ms (full) -> "
+                  f"{p50_trunc[name]*1e3:7.2f}ms (permissive)")
+            assert p50_trunc[name] < p50_full[name], \
+                f"{name}: truncation must lower virtual p50"
+            record(f"serving/exit_tier_p50_{name}", p50_trunc[name] * 1e6,
+                   derived=f"full={p50_full[name]*1e6:.0f}us")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b-smoke")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(args.arch, args.requests, args.slots, args.prompt_len, args.max_new,
+        args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,7 @@ def main() -> None:
                             table3_cloud_device, table4_edge_device,
                             table5_cloud_edge_device, table6_device_device,
                             runtime_micro, serving_bench,
-                            tiered_serving_bench)
+                            tiered_serving_bench, exit_bench)
     from benchmarks.common import emit_csv
 
     table1_models.run()
@@ -24,12 +24,15 @@ def main() -> None:
     table6_device_device.run()
     runtime_micro.run()
     # serving benchmarks, smoke-sized so the runner stays CI-friendly:
-    # single-pool continuous batching vs sequential, then paradigm-aware
-    # tiered routing vs a cloud-only pool
+    # single-pool continuous batching vs sequential, paradigm-aware tiered
+    # routing vs a cloud-only pool, then the early-exit threshold sweep
+    # (depth-segmented decode: tok/s rises as exits truncate compute)
     print()
     serving_bench.run(requests=6, slots=2, prompt_len=8, max_new=8)
     print()
-    tiered_serving_bench.run(requests=8, rate=50.0, base_slots=2, max_new=4)
+    tiered_serving_bench.run(requests=12, rate=50.0, base_slots=2, max_new=4)
+    print()
+    exit_bench.run(requests=4, slots=2, prompt_len=8, max_new=12)
     print()
     emit_csv()
 

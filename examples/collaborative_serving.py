@@ -57,6 +57,28 @@ def main():
     print("early-exit serving stats:",
           {k: round(v, 3) for k, v in sched.exit_stats().items()})
 
+    # How early exit changes serving latency: decode is depth-segmented —
+    # the plan compiles into per-segment jitted stages bounded by exit
+    # heads, and after each fused entropy probe the scheduler stops
+    # dispatching segments once every active slot has exited.  A looser
+    # threshold therefore *removes* layers from the step (measured as the
+    # depth fraction below), which is what shrinks per-token latency — the
+    # exit histogram above is bookkeeping, the depth fraction is FLOPs.
+    # The tiered cluster charges its virtual clocks with that truncated
+    # cost, so the threshold knob moves tier p50 directly (see
+    # benchmarks/exit_bench.py for the full sweep).
+    for thr in (0.0, 1.5):
+        s2 = ContinuousBatchScheduler(
+            model, params, SchedulerConfig(n_slots=2, max_len=32,
+                                           exit_threshold=thr))
+        for length in (6, 9):
+            s2.submit(Request(tokens=rs.randint(0, cfg.vocab_size, length),
+                              max_new=12))
+        s2.run()
+        print(f"  threshold {thr:3.1f}: measured depth fraction "
+              f"{s2.measured_depth_fraction():.2f} "
+              f"(stage dispatches {s2.stage_calls})")
+
     # ...the batch front-end (ServingEngine) rides on the same scheduler
     engine = ServingEngine(model, params, ServeConfig(exit_threshold=0.9))
     prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,

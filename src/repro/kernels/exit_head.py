@@ -51,12 +51,16 @@ def _exit_head_kernel(x_ref, w_ref, m_ref, s_ref, t_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_v", "interpret"))
 def exit_head_entropy(x, w, *, block_t: int = 128, block_v: int = 512,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """x [T, D] (any float dtype), w [D, V] -> entropy [T] fp32.
 
     T, V padded to block multiples by the wrapper in ops.py; this function
-    requires exact tiling.
+    requires exact tiling.  ``interpret=None`` auto-detects the backend:
+    the kernel body runs interpreted everywhere except on a real TPU,
+    where the same call compiles to Mosaic.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     tsz, d = x.shape
     d2, v = w.shape
     assert d == d2 and tsz % block_t == 0 and v % block_v == 0

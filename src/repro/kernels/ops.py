@@ -20,16 +20,30 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
+def _off_tpu() -> bool:
+    """Interpret everywhere except a real TPU (Mosaic target)."""
+    return jax.default_backend() != "tpu"
+
+
 def exit_head_entropy(x, w, *, block_t: int = 128, block_v: int = 512,
-                      interpret: bool | None = None):
-    """x [..., D], w [D, V] -> entropy [...] fp32 (pads T and V)."""
-    interpret = _on_cpu() if interpret is None else interpret
+                      interpret: bool | None = None,
+                      align_128: bool | None = None):
+    """x [..., D], w [D, V] -> entropy [...] fp32 (pads T and V).
+
+    ``interpret=None`` auto-detects the backend (interpret only off-TPU).
+    ``align_128`` (default: on for the compiled TPU path) forces MXU-legal
+    tiling: T is padded to full ``block_t`` tiles and the inner dim to a
+    multiple of 128 — zero feature columns/rows contribute nothing to the
+    logits, so the entropy is unchanged.
+    """
+    interpret = _off_tpu() if interpret is None else interpret
+    align = (not interpret) if align_128 is None else align_128
     lead = x.shape[:-1]
     d = x.shape[-1]
     x2 = x.reshape(-1, d)
     t = x2.shape[0]
     v = w.shape[1]
-    bt = min(block_t, max(8, t))
+    bt = block_t if align else min(block_t, max(8, t))
     pt = (-t) % bt
     pv = (-v) % block_v
     if pt:
@@ -44,6 +58,10 @@ def exit_head_entropy(x, w, *, block_t: int = 128, block_v: int = 512,
         bias = jnp.zeros((1, v + pv), w.dtype).at[0, v:].set(-1e30)
         x2 = jnp.concatenate([x2, jnp.ones((x2.shape[0], 1), x2.dtype)], axis=1)
         wp = jnp.concatenate([wp, bias.astype(wp.dtype)], axis=0)
+    if align and x2.shape[1] % 128:
+        pd = (-x2.shape[1]) % 128
+        x2 = jnp.pad(x2, ((0, 0), (0, pd)))
+        wp = jnp.pad(wp, ((0, pd), (0, 0)))
     ent = _exit.exit_head_entropy(x2, wp, block_t=bt, block_v=block_v,
                                   interpret=interpret)
     return ent[:t].reshape(lead)

@@ -223,6 +223,7 @@ def serve_tiered_poisson(arch: str, *, rate: float = 4.0,
             print(f"  {name:6s} slots={ts['n_slots']} routed={ts['routed']:3d} "
                   f"util={ts['utilization']:.2f} "
                   f"occupancy={ts['slot_occupancy']:.2f} "
+                  f"depth={ts['measured_depth']:.2f} "
                   f"p95={ts['p95_latency_s']*1e3:.0f}ms")
         print(f"  jit cache sizes (must stay 1 per pool): "
               f"{stats['jit_cache_sizes']}")

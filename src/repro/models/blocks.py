@@ -187,10 +187,18 @@ def init_exit_head(key, cfg):
     return p
 
 
-def exit_head_logits(cfg, p, x):
+def exit_head_hidden(cfg, p, x):
+    """The exit head's pre-vocab hidden state (norm + optional gelu MLP) —
+    shared by the full-logits head and the fused entropy probe so the two
+    paths cannot drift."""
     h = apply_norm(cfg.norm, x, p["norm"])
     if "w_h" in p:
         h = jax.nn.gelu(h @ p["w_h"].astype(h.dtype))
+    return h
+
+
+def exit_head_logits(cfg, p, x):
+    h = exit_head_hidden(cfg, p, x)
     return jnp.einsum("...d,dv->...v", h, p["w"].astype(h.dtype)).astype(jnp.float32)
 
 

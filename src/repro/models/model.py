@@ -10,6 +10,25 @@ Public surface used by training/serving/launch:
 
 Batch dict keys: "tokens" [B,S] int32 (always); "patch_embeds" [B,Tf,D] (vlm);
 "frames" [B,Tenc,D] (encdec); "positions" optional.
+
+Depth-segmented decode (the survey's edge-device paradigm made executable):
+the plan compiles into ``decode_segments`` — runs of plan steps bounded by
+exit heads.  The serving scheduler jits one stage per segment and dispatches
+only the segments each token still needs:
+
+    x          = m.embed_decode_tokens(params, tokens)
+    x, cache   = m.decode_segment(params, cache, x, seg, pos, alive)
+    entropy    = m.exit_probe_entropy(params, seg.exit_index, x)  # fused
+    logits     = m.finalize_decode(params, x)
+
+``alive`` [B] gates per-slot work: an exited slot's hidden state is frozen
+(passthrough) and its KV/state rows are not written; every slot's token is
+produced by ``finalize_decode`` (final norm + LM head) over its — possibly
+early-frozen — hidden state, CALM-style, so exit heads act purely as
+entropy probes.  With no exits fired the segmented path is bit-identical to
+the monolithic ``decode_step``.  Approximation note: a slot that exits at
+depth d leaves zero-KV holes at layers deeper than d for that position
+(SkipDecode-style); SSM/xLSTM states are simply not advanced there.
 """
 from __future__ import annotations
 
@@ -23,6 +42,24 @@ import jax.numpy as jnp
 from repro.models import blocks as B
 from repro.models.common import apply_norm, embed, init_norm, normal_init, unembed
 from repro.models.ffn import SINGLE, ShardCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthSegment:
+    """A run of plan steps bounded by exit heads.
+
+    ``steps`` are index-resolved plan entries — ("scan", kind, block_idx) or
+    ("shared_attn", site_idx) — so a segment can be executed without
+    re-walking the plan.  ``exit_index`` is the exit head probed after this
+    segment (None for the final segment).  ``layers`` is the number of
+    transformer layers the segment covers (pair units count as
+    ``layer_period`` layers); it drives depth-weighted cost accounting.
+    """
+    index: int
+    steps: Tuple[Tuple, ...]
+    exit_index: Optional[int]
+    layers: int
+    layer_frac: float              # layers / num_layers
 
 
 @dataclasses.dataclass
@@ -39,6 +76,16 @@ def _entropy(logits):
     return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
 
 
+def _row_where(mask, axis):
+    """Per-leaf row select: take ``new`` where ``mask`` along ``axis``.
+    Shared by cache merging (admissions) and alive-masked segment writes."""
+    def f(new, old):
+        shape = [1] * new.ndim
+        shape[axis] = -1
+        return jnp.where(mask.reshape(shape), new, old)
+    return f
+
+
 class Model:
     def __init__(self, cfg, ctx: ShardCtx = SINGLE, remat: bool = False):
         self.cfg = cfg
@@ -48,6 +95,7 @@ class Model:
         # exits that survived plan construction (pair-family drops exits that
         # would split a (dense, moe) unit)
         self.n_exits = sum(1 for s in self.plan if s[0] == "exit")
+        self.decode_segments = self._build_decode_segments()
 
     # ------------------------------------------------------------------
     # Init
@@ -246,18 +294,11 @@ class Model:
         caches are stacked [n_layers, B, ...] (batch axis 1); shared-attn
         caches are [B, ...] (batch axis 0).
         """
-        def row_where(axis):
-            def f(n, o):
-                shape = [1] * n.ndim
-                shape[axis] = -1
-                return jnp.where(take_new.reshape(shape), n, o)
-            return f
-
-        out = {"blocks": [jax.tree.map(row_where(1), n, o)
+        out = {"blocks": [jax.tree.map(_row_where(take_new, 1), n, o)
                           for n, o in zip(new_cache["blocks"],
                                           old_cache["blocks"])]}
         if "shared_attn" in old_cache:
-            out["shared_attn"] = [jax.tree.map(row_where(0), n, o)
+            out["shared_attn"] = [jax.tree.map(_row_where(take_new, 0), n, o)
                                   for n, o in zip(new_cache["shared_attn"],
                                                   old_cache["shared_attn"])]
         return out
@@ -311,6 +352,100 @@ class Model:
         ee = (jnp.stack(exit_entropies) if exit_entropies
               else jnp.zeros((0, bsz), jnp.float32))
         return logits, ee, new_cache
+
+    # ------------------------------------------------------------------
+    # Depth-segmented decode (early exits truncate compute)
+    # ------------------------------------------------------------------
+    def _build_decode_segments(self) -> List[DepthSegment]:
+        """Split the plan at exit heads into index-resolved depth segments."""
+        cfg = self.cfg
+        total = max(1, cfg.num_layers)
+        segs: List[DepthSegment] = []
+        steps: List[Tuple] = []
+        layers = 0
+        bi = sa_i = 0
+        for step in self.plan:
+            if step[0] == "scan":
+                _, kind, n, _ = step
+                steps.append(("scan", kind, bi))
+                bi += 1
+                per_unit = cfg.moe.layer_period if kind == "pair" else 1
+                layers += n * per_unit
+            elif step[0] == "shared_attn":
+                steps.append(("shared_attn", sa_i))
+                sa_i += 1
+            elif step[0] == "exit":
+                _, ei, _ = step
+                segs.append(DepthSegment(len(segs), tuple(steps), ei,
+                                         layers, layers / total))
+                steps, layers = [], 0
+        segs.append(DepthSegment(len(segs), tuple(steps), None,
+                                 layers, layers / total))
+        return segs
+
+    def embed_decode_tokens(self, params, tokens):
+        """tokens [B,1] int32 -> embeddings [B,1,D] (decode front-end)."""
+        return embed(tokens, params["embed"])
+
+    def decode_segment(self, params, cache, x, seg: DepthSegment, position,
+                       alive, *, long_mode: bool = False):
+        """One-token decode through one depth segment.
+
+        ``alive`` [B] bool gates per-slot effects: rows that already exited
+        keep their hidden state (passthrough) and their cache rows are not
+        written.  With ``alive`` all-true this is exactly the corresponding
+        slice of the monolithic ``decode_step`` (bit-identical).  Returns
+        ``(x, cache)`` where ``cache`` is the full cache dict with only this
+        segment's entries replaced.
+        """
+        cfg = self.cfg
+        window = self._window(long_mode)
+        x_in = x
+        new_blocks = list(cache["blocks"])
+        new_sa = list(cache.get("shared_attn", []))
+        for st in seg.steps:
+            if st[0] == "scan":
+                _, kind, bi = st
+                x, nc, _ = B.decode_scan_block(
+                    cfg, kind, params["blocks"][bi], x, cache["blocks"][bi],
+                    position, window, self.ctx)
+                # blocks are stacked [n_layers, B, ...]: batch axis 1
+                new_blocks[bi] = jax.tree.map(_row_where(alive, 1), nc,
+                                              cache["blocks"][bi])
+            else:
+                _, sa_i = st
+                x, nkv = B.run_shared_attn_decode(
+                    cfg, params["shared_attn"], x, cache["shared_attn"][sa_i],
+                    position, window)
+                new_sa[sa_i] = jax.tree.map(_row_where(alive, 0), nkv,
+                                            cache["shared_attn"][sa_i])
+        x = jnp.where(alive[:, None, None], x, x_in)
+        out: Dict[str, Any] = {"blocks": new_blocks}
+        if cfg.shared_attn_period:
+            out["shared_attn"] = new_sa
+        return x, out
+
+    def exit_probe_entropy(self, params, exit_index: int, x):
+        """Entropy of exit head ``exit_index`` over decode hidden x [B,1,D].
+
+        Uses the fused Pallas ``exit_head_entropy`` kernel: the [B,V] exit
+        logits are never materialized — vocab tiles stream through online
+        softmax statistics and only the [B] entropy comes back.
+        """
+        from repro.kernels import ops as kops
+        p = params["exit_heads"][exit_index]
+        h = B.exit_head_hidden(self.cfg, p, x[:, 0, :])
+        return kops.exit_head_entropy(h, p["w"])
+
+    def finalize_decode(self, params, x):
+        """Final norm + LM head over decode hidden x [B,1,D] -> [B,V] fp32.
+
+        Every slot's token comes from here (CALM-style shared head): slots
+        that exited early arrive with their hidden state frozen at the exit
+        boundary.
+        """
+        h = apply_norm(self.cfg.norm, x, params["final_norm"])
+        return unembed(h, params.get("lm_head", params["embed"]))[:, 0]
 
     # ------------------------------------------------------------------
     def prefill(self, params, batch, *, long_mode: bool = False):

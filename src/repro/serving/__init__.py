@@ -3,9 +3,10 @@
 Architecture (this PR's tentpole, survey §2.3 made runtime):
 
 * ``scheduler``  — ``ContinuousBatchScheduler``: one slot pool with chunked
-  batched prefill, a fixed-shape jitted decode step, device-side exit
-  counters, and a ``poll()``/``StepReport`` API so external drivers can step
-  many pools.
+  batched prefill, a depth-segmented decode pipeline (per-segment jitted
+  stages bounded by exit heads; early exits truncate compute and the
+  measured depth is reported per step), device-side exit counters, and a
+  ``poll()``/``StepReport`` API so external drivers can step many pools.
 * ``router``     — ``AdmissionRouter``: per-request tier selection from the
   paradigm planners (Neurosurgeon / Edgent / DDNN / device-local /
   prefill-decode splits) over cached cost graphs.

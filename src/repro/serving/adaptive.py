@@ -35,11 +35,21 @@ class AdaptiveExitController:
             used += f
         return frac + max(0.0, 1.0 - used) * 1.0
 
-    def update(self, exit_fracs: Sequence[float],
-               boundaries: Sequence[float]) -> float:
-        depth = self.expected_depth_fraction(exit_fracs, boundaries)
-        if depth > self.target_depth_fraction:
+    def update_measured(self, depth_fraction: float) -> float:
+        """The one control path: steer the threshold from a *measured* depth
+        fraction — the scheduler reports the layer-weighted share of the
+        stack its segment stages actually dispatched per token, so the knob
+        tracks real truncated compute, not a histogram-derived estimate."""
+        if depth_fraction > self.target_depth_fraction:
             self.threshold = min(self.hi, self.threshold * self.gain)
         else:
             self.threshold = max(self.lo, self.threshold / self.gain)
         return self.threshold
+
+    def update(self, exit_fracs: Sequence[float],
+               boundaries: Sequence[float]) -> float:
+        """Estimate depth from exit fractions + static boundaries, then
+        steer.  Kept for callers without segment reports (monolithic
+        decode); the serving scheduler feeds ``update_measured`` directly."""
+        return self.update_measured(
+            self.expected_depth_fraction(exit_fracs, boundaries))

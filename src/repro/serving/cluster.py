@@ -12,7 +12,10 @@ accelerator (so outputs are exact and jit caches stay fixed — routing never
 retraces), while tier heterogeneity lives in a **virtual clock** per tier:
 
 * a pool decode step advances the tier clock by ``compute_time(tok_flops,
-  profile)`` on that tier's hardware;
+  profile)`` on that tier's hardware, scaled by the **measured depth
+  fraction** the scheduler's segment pipeline actually dispatched — early
+  exits truncate compute, so a permissive threshold directly lowers tier
+  latency (the survey's edge-device win, now measured rather than modeled);
 * prefill chunks advance it by the replayed prompt tokens' compute cost;
 * a request becomes admissible only after its uplink transfer delay
   (``LinkProfile.tx_time`` of the prompt bytes), and a prefill/decode split
@@ -265,8 +268,14 @@ class TieredServingCluster:
         if rep.prefill_done:
             tr.prefill_rows = []
         if rep.decode_stepped:
-            tr.vclock += tr.tok_cost
-            tr.busy += tr.tok_cost
+            # charge the *truncated* step cost: the scheduler reports the
+            # layer-weighted fraction of the stack its segment stages
+            # dispatched (1.0 when nothing exited / monolithic mode)
+            depth = rep.decode_depth_frac if rep.decode_depth_frac > 0.0 \
+                else 1.0
+            cost = tr.tok_cost * depth
+            tr.vclock += cost
+            tr.busy += cost
             tr.decode_steps += 1
             tr.slot_tokens += rep.n_active
         for r in rep.completed:
@@ -328,6 +337,7 @@ class TieredServingCluster:
                 "utilization": tr.utilization,
                 "slot_occupancy": tr.slot_occupancy,
                 "tokens": tr.sched.tokens_served,
+                "measured_depth": tr.sched.measured_depth_fraction(),
                 "p50_latency_s": float(np.percentile(tl, 50)) if tl else 0.0,
                 "p95_latency_s": float(np.percentile(tl, 95)) if tl else 0.0,
             }

@@ -104,6 +104,7 @@ class ServingEngine:
         self.plan_cfg = plan_cfg
         self.exit_counts = np.zeros(model.n_exits + 1, np.int64)
         self.tokens_served = 0
+        self.depth_weighted_tokens = 0.0   # measured truncated depth x tokens
         self.controller = None
         self._adaptive_every = 64
         self._scheds: Dict[Tuple[int, int], Any] = {}
@@ -160,6 +161,7 @@ class ServingEngine:
         sched.adaptive_every = self._adaptive_every
         counts_before = sched.flush_counters().copy()
         tokens_before = sched.tokens_served
+        depth_before = sched.depth_weighted_tokens
         toks = np.asarray(prompt_tokens)
         reqs = [Request(tokens=toks[i], max_new=max_new,
                         frames=(frames[i] if frames is not None else None))
@@ -169,6 +171,8 @@ class ServingEngine:
         sched.run(rng=rng)
         self.exit_counts += sched.flush_counters() - counts_before
         self.tokens_served += sched.tokens_served - tokens_before
+        self.depth_weighted_tokens += \
+            sched.depth_weighted_tokens - depth_before
         sched.completed.clear()        # requests are returned, not retained
         out = np.stack([np.asarray(r.out_tokens, np.int32) for r in reqs])
         return jnp.asarray(out)
@@ -190,7 +194,8 @@ class ServingEngine:
                                   long_mode=self.scfg.long_mode))
         cl = self._cluster
         before = {n: (tr.sched.flush_counters().copy(),
-                      tr.sched.tokens_served)
+                      tr.sched.tokens_served,
+                      tr.sched.depth_weighted_tokens)
                   for n, tr in cl.tiers.items()}
         routes_before = dict(cl.router.route_counts)
         for tr in cl.tiers.values():
@@ -206,9 +211,11 @@ class ServingEngine:
                for i in range(b)]
         cl.run()
         for n, tr in cl.tiers.items():
-            counts0, tokens0 = before[n]
+            counts0, tokens0, depth0 = before[n]
             self.exit_counts += tr.sched.flush_counters() - counts0
             self.tokens_served += tr.sched.tokens_served - tokens0
+            self.depth_weighted_tokens += \
+                tr.sched.depth_weighted_tokens - depth0
         # this batch's placement (per-call delta, stable across cluster
         # rebuilds); requests are returned, not retained by the cluster
         self.route_counts = {t: c - routes_before.get(t, 0)
@@ -218,5 +225,14 @@ class ServingEngine:
                         for cr in crs])
         return jnp.asarray(out)
 
+    def measured_depth_fraction(self) -> float:
+        """Layer-weighted fraction of the stack dispatched per served token,
+        aggregated over every pool this engine drove (1.0 = full depth)."""
+        if not self.tokens_served:
+            return 1.0
+        return self.depth_weighted_tokens / self.tokens_served
+
     def exit_stats(self) -> Dict[str, float]:
-        return exit_stats_dict(self.exit_counts, self.tokens_served)
+        st = exit_stats_dict(self.exit_counts, self.tokens_served)
+        st["measured_depth"] = self.measured_depth_fraction()
+        return st

@@ -15,11 +15,25 @@ runtime:
   ``SchedulerConfig.max_prefill_chunks_per_step`` caps how many chunks one
   ``poll()`` may run, so a long admission interleaves with in-flight decode
   instead of pausing it unboundedly (prefill/decode fairness).
-* **One fixed-shape jitted decode step** for the whole pool: tokens [B,1],
-  per-slot positions [B], active mask [B], exit-statistics counters and the
-  entropy threshold are all *arguments*, so slot churn (admissions,
-  completions, mixed prompt lengths, adaptive-threshold updates) never
-  recompiles.  Tests assert ``jit_cache_sizes() == {"decode": 1, ...}``.
+* **Depth-segmented decode** (default): the model's plan compiles into
+  per-segment jitted stages bounded by exit heads.  One decode step runs
+  ``segment0 -> probe0 -> segment1 -> ... -> finalize``; after each probe
+  (the fused Pallas entropy kernel — no [B,V] logits materialized) the
+  per-slot ``alive`` mask drops slots whose normalized entropy cleared the
+  threshold, gating deeper segments (hidden passthrough + masked KV/state
+  writes), and the host short-circuits the remaining stages entirely once
+  every active slot has exited.  Early exits therefore *truncate compute*,
+  not just counters: the per-step depth fraction (layer-weighted share of
+  the stack dispatched) is measured, reported per ``poll()``, and drives
+  the adaptive controller and the tiered cluster's virtual clocks.
+  ``SchedulerConfig(segmented=False)`` falls back to the monolithic
+  one-jit ``decode_step`` (the pre-refactor reference path).
+* **Fixed shapes everywhere**: tokens [B,1], per-slot positions [B],
+  active/alive masks [B], counters and the entropy threshold are all
+  *arguments*, so slot churn (admissions, completions, mixed prompt
+  lengths, adaptive-threshold updates) never recompiles.  Each segment
+  stage compiles exactly once — ``jit_cache_sizes()`` is bounded by the
+  number of depth segments and tests assert every entry stays <= 1.
 * **Device-side exit counters**: per-step first-exit histograms accumulate
   in an on-device int32 vector and are flushed to host every
   ``flush_every`` steps (or when the adaptive controller needs them) —
@@ -87,6 +101,11 @@ class SchedulerConfig:
     # the pool decode step gets its turn.  0 = unbounded (an admission's
     # whole prompt replays before decode resumes — the old behaviour).
     max_prefill_chunks_per_step: int = 0
+    # depth-segmented decode: early exits truncate compute (per-segment
+    # jitted stages, short-circuited once every active slot exited).
+    # False = monolithic one-jit decode_step, exits counted but not acted on
+    # (the pre-refactor reference path, used by parity tests).
+    segmented: bool = True
 
 
 @dataclasses.dataclass
@@ -100,6 +119,12 @@ class StepReport:
     prefill_done: bool = False         # admission finalized this poll
     decode_stepped: bool = False
     n_active: int = 0                  # active slots during the decode step
+    # depth-segmented decode accounting: how many segment stages the decode
+    # step dispatched and the layer-weighted fraction of the stack they
+    # cover (1.0 = full depth).  External drivers (the tiered cluster)
+    # charge their virtual clocks with the *truncated* step cost.
+    decode_segments_run: int = 0
+    decode_depth_frac: float = 0.0
     completed: List[Request] = dataclasses.field(default_factory=list)
 
     @property
@@ -147,8 +172,6 @@ class ContinuousBatchScheduler:
         self._vocab = mcfg.vocab_size
         self._n_exits = model.n_exits
         self._clen = model.cache_len_for(cfg.max_len, cfg.long_mode)
-        bounds = [s[2] for s in model.plan if s[0] == "exit"]
-        self._exit_depths = [bd / mcfg.num_layers for bd in bounds]
 
         # --- queue / slot state (host) ---
         self.queue: deque = deque()
@@ -160,6 +183,12 @@ class ContinuousBatchScheduler:
         self.slot_req: List[Optional[Request]] = [None] * b
         self.tokens_served = 0
         self.exit_counts = np.zeros(self._n_exits + 1, np.int64)
+        # measured truncated compute: sum over served tokens of the
+        # layer-weighted depth fraction their decode step dispatched
+        self.depth_weighted_tokens = 0.0
+        self._depth_since_adapt = 0.0
+        self._last_segments_run = 0
+        self._last_depth_frac = 0.0
         self.n_admitted = 0
         self.n_submitted = 0
         self._step_idx = 0
@@ -186,8 +215,23 @@ class ContinuousBatchScheduler:
                               donate_argnums=(2,))
         self._prefill_chunk = jax.jit(self._make_prefill_chunk(),
                                       donate_argnums=(1, 5))
-        self._decode = jax.jit(self._make_decode_step(),
-                               donate_argnums=(1, 5))
+        # decode: either the depth-segmented stage pipeline (default) or the
+        # monolithic one-jit step (pre-refactor reference / parity path)
+        self._segments = model.decode_segments
+        self.stage_calls: Dict[str, int] = {}
+        if cfg.segmented:
+            self._segment_fns = [
+                jax.jit(self._make_segment_stage(seg), donate_argnums=(1,))
+                for seg in self._segments]
+            self._probe_fns = [jax.jit(self._make_probe(ei))
+                               for ei in range(self._n_exits)]
+            self._finalize = jax.jit(self._make_finalize(),
+                                     donate_argnums=(2,))
+            for name in self._stage_names():
+                self.stage_calls[name] = 0
+        else:
+            self._decode = jax.jit(self._make_decode_step(),
+                                   donate_argnums=(1, 5))
         if mcfg.family == "encdec":
             from repro.serving.engine import prime_whisper_cross_cache
             self._prime = jax.jit(
@@ -223,6 +267,26 @@ class ContinuousBatchScheduler:
 
         return chunk
 
+    def _sample_and_count(self, logits, first_exit, active, counters, key,
+                          step_idx):
+        """Token selection + first-exit histogram update, shared by the
+        monolithic step and the segmented finalize so their threshold-0
+        parity cannot drift.  Both tokens come back so the host can honor
+        "greedy unless an rng was provided" (seed-engine semantics) without
+        recompiling."""
+        cfg = self.cfg
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if cfg.temperature > 0.0:
+            k = jax.random.fold_in(key, step_idx)
+            nxt = jax.random.categorical(
+                k, logits / cfg.temperature).astype(jnp.int32)
+        else:
+            nxt = greedy
+        hist = jax.nn.one_hot(first_exit, self._n_exits + 1, dtype=jnp.int32)
+        counters = counters + jnp.sum(
+            hist * active.astype(jnp.int32)[:, None], axis=0)
+        return greedy, nxt, counters
+
     def _make_decode_step(self):
         model, cfg = self.model, self.cfg
         n_exits, vocab = self._n_exits, self._vocab
@@ -231,25 +295,69 @@ class ContinuousBatchScheduler:
                  threshold, key, step_idx):
             logits, ee, cache = model.decode_step(
                 params, cache, tokens, positions, long_mode=cfg.long_mode)
-            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            if cfg.temperature > 0.0:
-                k = jax.random.fold_in(key, step_idx)
-                nxt = jax.random.categorical(
-                    k, logits / cfg.temperature).astype(jnp.int32)
-            else:
-                nxt = greedy
             if n_exits:
                 idx = first_exit_index(ee, threshold, vocab)
             else:
                 idx = jnp.zeros((tokens.shape[0],), jnp.int32)
-            hist = jax.nn.one_hot(idx, n_exits + 1, dtype=jnp.int32)
-            counters = counters + jnp.sum(
-                hist * active.astype(jnp.int32)[:, None], axis=0)
-            # both tokens come back so the host can honor "greedy unless an
-            # rng was provided" (seed-engine semantics) without recompiling
+            greedy, nxt, counters = self._sample_and_count(
+                logits, idx, active, counters, key, step_idx)
             return greedy, nxt, cache, counters
 
         return step
+
+    # ------------------------------------------------------------------
+    # depth-segmented decode stages (one jit per segment, compiled once)
+    # ------------------------------------------------------------------
+    def _stage_names(self) -> List[str]:
+        names = []
+        for seg in self._segments:
+            names.append(f"segment{seg.index}")
+            if seg.exit_index is not None:
+                names.append(f"probe{seg.exit_index}")
+        names.append("finalize")
+        return names
+
+    def _make_segment_stage(self, seg):
+        """Stage for one depth segment.  The first stage embeds the tokens;
+        every stage runs its plan steps with ``alive``-masked cache writes
+        and hidden passthrough for exited slots."""
+        model, cfg = self.model, self.cfg
+        first = seg.index == 0
+
+        def stage(params, cache, x, positions, alive):
+            if first:
+                x = model.embed_decode_tokens(params, x)
+            return model.decode_segment(params, cache, x, seg, positions,
+                                        alive, long_mode=cfg.long_mode)
+
+        return stage
+
+    def _make_probe(self, exit_index: int):
+        """Exit decision after a segment: fused entropy (no [B,V] logits),
+        normalized by log(V) so one threshold spans vocab sizes."""
+        model, vocab = self.model, self._vocab
+
+        def probe(params, x, alive, first_exit, threshold):
+            ent = model.exit_probe_entropy(params, exit_index, x)
+            hit = alive & (ent / jnp.log(float(vocab)) < threshold)
+            first_exit = jnp.where(hit, jnp.int32(exit_index), first_exit)
+            return alive & ~hit, first_exit
+
+        return probe
+
+    def _make_finalize(self):
+        """Token selection + counter update from the (possibly early-frozen)
+        hidden states, via the same ``_sample_and_count`` the monolithic
+        step uses."""
+        model = self.model
+
+        def finalize(params, x, counters, first_exit, active, key, step_idx):
+            logits = model.finalize_decode(params, x)
+            greedy, nxt, counters = self._sample_and_count(
+                logits, first_exit, active, counters, key, step_idx)
+            return greedy, nxt, counters
+
+        return finalize
 
     # ------------------------------------------------------------------
     # public API
@@ -300,6 +408,9 @@ class ContinuousBatchScheduler:
             self._advance_prefill(self.cfg.max_prefill_chunks_per_step, rep)
         rep.decode_stepped = self.step()
         rep.n_active = self._last_step_active
+        if rep.decode_stepped:
+            rep.decode_segments_run = self._last_segments_run
+            rep.decode_depth_frac = self._last_depth_frac
         rep.completed = self.completed[done_before:]
         return rep
 
@@ -414,6 +525,48 @@ class ContinuousBatchScheduler:
     # ------------------------------------------------------------------
     # decode: one fixed-shape step over the whole pool
     # ------------------------------------------------------------------
+    def _step_segmented(self, tokens, positions, active_d, thr, key):
+        """One decode step through the segment pipeline: run a segment,
+        probe its exit head, drop exited slots from ``alive``, and stop
+        dispatching segments once no *active* slot is still alive — that
+        host-side short-circuit is where early exits actually save FLOPs.
+        Records the dispatched depth in ``_last_depth_frac``."""
+        b = self.cfg.n_slots
+        # alive starts all-true (not `active`): inactive pool rows compute
+        # and write garbage exactly like the monolithic step, so threshold-0
+        # runs stay bit-identical to it; their probe hits are irrelevant
+        # because finalize masks counters by `active` and the short-circuit
+        # condition only consults active rows.
+        alive = jnp.ones((b,), bool)
+        first_exit = jnp.full((b,), self._n_exits, jnp.int32)
+        x = tokens
+        layers_run = 0
+        segs_run = 0
+        # normalized entropy is >= 0, so a threshold <= 0 can never fire an
+        # exit: skip the probes AND their blocking host syncs entirely (the
+        # full-depth path costs zero round-trips per token)
+        probing = thr > 0.0
+        for seg in self._segments:
+            x, self.cache = self._segment_fns[seg.index](
+                self.params, self.cache, x, positions, alive)
+            self.stage_calls[f"segment{seg.index}"] += 1
+            layers_run += seg.layers
+            segs_run += 1
+            if seg.exit_index is None or not probing:
+                continue
+            alive, first_exit = self._probe_fns[seg.exit_index](
+                self.params, x, alive, first_exit, jnp.float32(thr))
+            self.stage_calls[f"probe{seg.exit_index}"] += 1
+            if not bool(np.asarray(jnp.any(alive & active_d))):
+                break
+        greedy, sampled, self._counters = self._finalize(
+            self.params, x, self._counters, first_exit, active_d, key,
+            jnp.int32(self._rng_tick))
+        self.stage_calls["finalize"] += 1
+        self._last_segments_run = segs_run
+        self._last_depth_frac = layers_run / max(1, self.model.cfg.num_layers)
+        return greedy, sampled
+
     def step(self) -> bool:
         self._last_step_active = int(self.active.sum())
         if not self.active.any():
@@ -421,18 +574,27 @@ class ContinuousBatchScheduler:
         thr = (self.controller.threshold if self.controller is not None
                else self.cfg.exit_threshold)
         key = self._rng if self._rng is not None else self._zero_key
-        greedy, sampled, self.cache, self._counters = self._decode(
-            self.params, self.cache,
-            jnp.asarray(self.current_tok[:, None]),
-            jnp.asarray(self.positions.astype(np.int32)),
-            jnp.asarray(self.active),
-            self._counters, jnp.float32(thr), key, jnp.int32(self._rng_tick))
+        tokens = jnp.asarray(self.current_tok[:, None])
+        positions = jnp.asarray(self.positions.astype(np.int32))
+        active_d = jnp.asarray(self.active)
+        if self.cfg.segmented:
+            greedy, sampled = self._step_segmented(
+                tokens, positions, active_d, thr, key)
+        else:
+            greedy, sampled, self.cache, self._counters = self._decode(
+                self.params, self.cache, tokens, positions, active_d,
+                self._counters, jnp.float32(thr), key,
+                jnp.int32(self._rng_tick))
+            self._last_segments_run = len(self._segments)
+            self._last_depth_frac = 1.0
         nxt = np.asarray(sampled if self._rng is not None else greedy)
         self._step_idx += 1
         self._rng_tick += 1
         n_active = int(self.active.sum())
         self.tokens_served += n_active
         self._tokens_since_adapt += n_active
+        self.depth_weighted_tokens += self._last_depth_frac * n_active
+        self._depth_since_adapt += self._last_depth_frac * n_active
         for slot in np.nonzero(self.active)[0]:
             r = self.slot_req[slot]
             self.steps_taken[slot] += 1
@@ -462,10 +624,13 @@ class ContinuousBatchScheduler:
         if (self.controller is not None
                 and self._tokens_since_adapt >= self.adaptive_every):
             self.flush_counters()
-            total = max(1, int(self.exit_counts.sum()))
-            fracs = [c / total for c in self.exit_counts[:-1]]
-            self.controller.update(fracs, self._exit_depths)
+            # one code path: the controller consumes the depth the segment
+            # pipeline measured (monolithic mode truthfully reports 1.0 —
+            # it never truncates), not a histogram-derived estimate
+            self.controller.update_measured(
+                self._depth_since_adapt / max(1, self._tokens_since_adapt))
             self._tokens_since_adapt = 0
+            self._depth_since_adapt = 0.0
         elif self._step_idx % self.cfg.flush_every == 0:
             self.flush_counters()
 
@@ -481,15 +646,30 @@ class ContinuousBatchScheduler:
         self.exit_counts = np.zeros(self._n_exits + 1, np.int64)
         self.tokens_served = 0
         self._tokens_since_adapt = 0
+        self.depth_weighted_tokens = 0.0
+        self._depth_since_adapt = 0.0
+        for name in self.stage_calls:
+            self.stage_calls[name] = 0
         self.completed.clear()
+
+    def measured_depth_fraction(self) -> float:
+        """Layer-weighted fraction of the stack the decode pipeline actually
+        dispatched per served token (1.0 = every token ran full depth)."""
+        if not self.tokens_served:
+            return 1.0
+        return self.depth_weighted_tokens / self.tokens_served
 
     def exit_stats(self) -> Dict[str, float]:
         self.flush_counters()
-        return exit_stats_dict(self.exit_counts, self.tokens_served)
+        st = exit_stats_dict(self.exit_counts, self.tokens_served)
+        st["measured_depth"] = self.measured_depth_fraction()
+        return st
 
     def jit_cache_sizes(self) -> Dict[str, int]:
         """Compile counts of the hot jitted functions — the no-recompilation
-        invariant the tests assert (slot churn must never retrace).
+        invariant the tests assert (slot churn must never retrace; every
+        entry stays <= 1, and the number of decode entries is bounded by the
+        number of depth segments + exit probes + finalize).
         Returns -1 per entry when the installed JAX doesn't expose a
         compile-cache probe (private API; signature may churn)."""
         def size(fn):
@@ -497,5 +677,14 @@ class ContinuousBatchScheduler:
                 return fn._cache_size()
             except AttributeError:      # pragma: no cover - future JAX
                 return -1
-        return {"decode": size(self._decode),
-                "prefill": size(self._prefill_chunk)}
+        sizes = {"prefill": size(self._prefill_chunk)}
+        if self.cfg.segmented:
+            for seg in self._segments:
+                sizes[f"segment{seg.index}"] = size(
+                    self._segment_fns[seg.index])
+            for ei in range(self._n_exits):
+                sizes[f"probe{ei}"] = size(self._probe_fns[ei])
+            sizes["finalize"] = size(self._finalize)
+        else:
+            sizes["decode"] = size(self._decode)
+        return sizes

@@ -50,6 +50,18 @@ def test_threshold_bounded():
     assert c2.threshold >= c2.lo
 
 
+def test_update_measured_is_the_single_control_path():
+    """update() (histogram estimate) must be a thin wrapper over
+    update_measured() (the scheduler's measured-depth path)."""
+    a = AdaptiveExitController(target_depth_fraction=0.5, threshold=0.5)
+    b = AdaptiveExitController(target_depth_fraction=0.5, threshold=0.5)
+    a.update([0.5], [0.4])             # expected depth 0.7 > target
+    b.update_measured(0.7)
+    assert a.threshold == b.threshold > 0.5
+    a.update_measured(0.2)             # under budget -> tighten
+    assert a.threshold < b.threshold
+
+
 def test_depth_fraction_math():
     c = AdaptiveExitController(target_depth_fraction=0.5)
     # half exit at 0.4 depth, half run full -> 0.5*0.4 + 0.5*1.0 = 0.7

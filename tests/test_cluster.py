@@ -175,7 +175,7 @@ def test_cluster_routes_and_completes(granite, plan_cfg):
             assert tr.vclock > 0.0 and 0.0 < tr.utilization <= 1.0
             sizes = tr.sched.jit_cache_sizes()
             if -1 not in sizes.values():
-                assert sizes == {"decode": 1, "prefill": 1}, \
+                assert all(v <= 1 for v in sizes.values()), \
                     f"{name} pool retraced: {sizes}"
 
 
@@ -249,24 +249,33 @@ def test_engine_tiered_matches_single_pool(granite, plan_cfg):
 
 def test_engine_tiered_adaptive_and_sampling(granite, plan_cfg):
     """The tiered path preserves the engine contract: enable_adaptive moves
-    the threshold from tier-pool counters, and sampling with the same rng is
-    reproducible across calls (per-run fold counters reset via set_rng)."""
+    the threshold from measured segment depth, and sampling with the same
+    rng is reproducible (per-run fold counters reset via set_rng).  Since
+    exits now truncate compute, the comparison uses two fresh engines: a
+    persistent controller's threshold carries across calls and can change
+    which tokens exit (and therefore the tokens themselves)."""
     cfg, m, params = granite
-    eng = ServingEngine(m, params,
-                        ServeConfig(exit_threshold=0.3, temperature=0.8),
-                        scenario=Scenario.default(), plan_cfg=plan_cfg)
-    eng.enable_adaptive(target_depth_fraction=0.01, update_every=4)
+
+    def fresh_engine():
+        eng = ServingEngine(m, params,
+                            ServeConfig(exit_threshold=0.3, temperature=0.8),
+                            scenario=Scenario.default(), plan_cfg=plan_cfg)
+        eng.enable_adaptive(target_depth_fraction=0.01, update_every=4)
+        return eng
+
     prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 5), 0,
                                  cfg.vocab_size)
     rng = jax.random.PRNGKey(4)
-    out1 = np.asarray(eng.generate(prompts, max_new=12, rng=rng))
-    assert eng.controller.threshold > 0.3          # counters drove updates
-    assert eng.controller.threshold <= eng.controller.hi
-    assert sum(eng.route_counts.values()) == 2     # per-call placement
-    out2 = np.asarray(eng.generate(prompts, max_new=12, rng=rng))
+    e1, e2 = fresh_engine(), fresh_engine()
+    out1 = np.asarray(e1.generate(prompts, max_new=12, rng=rng))
+    assert e1.controller.threshold > 0.3           # measured depth drove it
+    assert e1.controller.threshold <= e1.controller.hi
+    assert sum(e1.route_counts.values()) == 2      # per-call placement
+    out2 = np.asarray(e2.generate(prompts, max_new=12, rng=rng))
     assert (out1 == out2).all()
-    # reuse must not retain completed requests in the cluster
-    assert eng._cluster.requests == []
+    # repeated use must not retain completed requests in the cluster
+    e1.generate(prompts, max_new=12, rng=rng)
+    assert e1._cluster.requests == []
 
 
 def test_serve_tiered_poisson_smoke():
@@ -279,4 +288,4 @@ def test_serve_tiered_poisson_smoke():
     assert stats["p95_latency_s"] >= stats["p50_latency_s"] > 0.0
     for name, pool in stats["jit_cache_sizes"].items():
         if stats["tiers"][name]["routed"] and -1 not in pool.values():
-            assert pool == {"decode": 1, "prefill": 1}
+            assert all(v <= 1 for v in pool.values()), (name, pool)

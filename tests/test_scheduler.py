@@ -59,9 +59,15 @@ def _assert_matches_reference(model, params, prompt, got, max_new):
 
 
 def _assert_single_compile(sizes):
+    """Every jitted stage compiled at most once (slot churn never retraces).
+    The segmented decode path has one entry per depth segment / exit probe /
+    finalize instead of a single "decode" entry; stages a run short-circuits
+    past may legitimately show 0 compiles."""
     if -1 in sizes.values():           # probe unavailable on this JAX
         pytest.skip("jit compile-cache probe unavailable")
-    assert sizes == {"decode": 1, "prefill": 1}
+    assert all(v <= 1 for v in sizes.values()), sizes
+    assert sizes["prefill"] == 1
+    assert sizes.get("segment0", sizes.get("decode")) == 1
 
 
 def test_slot_reuse_and_mixed_prompt_lengths(granite):
