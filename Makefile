@@ -6,7 +6,9 @@
 #   make serve-bench continuous batching vs sequential serving throughput
 #   make bench-smoke tiered (cloud/edge/device) serving benchmark, tiny trace
 #   make bench-exit  early-exit threshold sweep (tok/s + p50 vs threshold)
-.PHONY: test test-fast lint check serve-bench bench-smoke bench-exit
+#   make bench-multi multi-model pool vs swap-serving (mixed-model trace)
+.PHONY: test test-fast lint check serve-bench bench-smoke bench-exit \
+	bench-multi
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -28,3 +30,6 @@ bench-smoke:
 
 bench-exit:
 	python benchmarks/exit_bench.py
+
+bench-multi:
+	python benchmarks/multi_model_bench.py

@@ -81,7 +81,7 @@ def serve_trace(sched, prompts, max_new: int):
 
 
 def run(arch: str = "granite-3-2b-smoke", requests: int = 8, slots: int = 2,
-        prompt_len: int = 8, max_new: int = 24, seed: int = 0) -> None:
+        prompt_len: int = 8, max_new: int = 24, seed: int = 0) -> dict:
     cfg = bench_config(arch)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -182,6 +182,7 @@ def run(arch: str = "granite-3-2b-smoke", requests: int = 8, slots: int = 2,
         return {n: ts["p50_latency_s"] for n, ts in st["tiers"].items()
                 if ts["routed"]}
 
+    tier_p50s = {}
     for label, sc in scenarios.items():
         p50_full = tier_p50(sc, 0.0)
         p50_trunc = tier_p50(sc, 1.5)
@@ -194,6 +195,15 @@ def run(arch: str = "granite-3-2b-smoke", requests: int = 8, slots: int = 2,
                 f"{name}: truncation must lower virtual p50"
             record(f"serving/exit_tier_p50_{name}", p50_trunc[name] * 1e6,
                    derived=f"full={p50_full[name]*1e6:.0f}us")
+            tier_p50s[f"{label}/{name}"] = {"full_s": p50_full[name],
+                                            "permissive_s": p50_trunc[name]}
+    return {
+        "thresholds": [float(t) for t in thresholds],
+        "decode_tok_s": [float(t) for t in toks],
+        "measured_depths": [float(d) for d in depths],
+        "speedup_full_to_permissive": toks[-1] / toks[0],
+        "tier_p50": tier_p50s,
+    }
 
 
 def main():

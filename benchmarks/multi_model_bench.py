@@ -1,0 +1,192 @@
+"""Multi-model serving: one multiplexed pool vs sequential per-model pools.
+
+An edge node serves a zoo of heterogeneous DNNs (survey §6.3 dynamic task
+allocation; Zhou et al.'s multi-tenant edge serving).  This benchmark
+replays ONE mixed trace — requests alternating between an attention arch
+and an SSM arch (optionally a shared-attention hybrid too) — two ways:
+
+* **swap-serving baseline** — the single-model architecture: only one model
+  is resident at a time, so the trace is served in arrival order and every
+  model switch drains the resident pool before the next model's requests
+  start (model-swap cost itself is charged at zero — generous to the
+  baseline).  Alternating arrivals leave the slot pool mostly one-deep:
+  decode steps run near batch 1.
+* **multiplexed** — ``MultiModelScheduler``: every model's arena is
+  resident and all of them decode in the same poll loop, so each model's
+  requests batch up regardless of arrival interleaving.
+
+Both paths run the SAME arenas (same compiled stages, same slot counts), so
+outputs are bit-identical and the comparison is pure scheduling.  The
+acceptance bar is >= 1.5x mixed-trace decode tok/s for the multiplexed
+pool, with lower request p50 (late-drained requests dominate the baseline's
+percentiles).
+
+    PYTHONPATH=src python benchmarks/multi_model_bench.py \\
+        [--models granite-3-2b-smoke,xlstm-350m-smoke] [--requests 12] \\
+        [--slots 4] [--prompt-len 12] [--max-new 16]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0])           # repo root
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from benchmarks.common import record                     # noqa: E402
+from repro.configs import get_config                     # noqa: E402
+from repro.models import Model                           # noqa: E402
+from repro.serving import (ModelGroup, MultiModelScheduler,  # noqa: E402
+                           Request, SchedulerConfig)
+
+DEFAULT_MODELS = "granite-3-2b-smoke,xlstm-350m-smoke"
+
+
+def make_trace(archs, requests: int, prompt_len: int, max_new: int,
+               seed: int):
+    """[(model, prompt)] — models alternate request-by-request (the worst
+    case for swap-serving, the common case for a multi-tenant edge node)."""
+    rs = np.random.RandomState(seed)
+    trace = []
+    for i in range(requests):
+        arch = archs[i % len(archs)]
+        plen = int(rs.randint(max(1, prompt_len // 2), prompt_len + 1))
+        trace.append((arch, rs.randint(0, get_config(arch).vocab_size,
+                                       plen).astype(np.int32)))
+    return trace
+
+
+def _drain_decode_timed(arenas, decode_s: float) -> float:
+    """Step ``arenas`` until idle, timing only the decode dispatches."""
+    while any(a.has_work for a in arenas):
+        for a in arenas:
+            a._admit()
+        t0 = time.perf_counter()
+        for a in arenas:
+            a.step()
+        decode_s += time.perf_counter() - t0
+    return decode_s
+
+
+def swap_serve(pool: MultiModelScheduler, trace, max_new: int):
+    """Arrival-order serving with one resident model: contiguous same-model
+    runs batch together; a model switch drains the resident arena first.
+    Returns (requests, decode_seconds, t_start)."""
+    reqs = [Request(tokens=p.copy(), max_new=max_new, model=m)
+            for m, p in trace]
+    decode_s = 0.0
+    t_start = time.time()
+    i = 0
+    while i < len(reqs):
+        resident = reqs[i].model
+        while i < len(reqs) and reqs[i].model == resident:
+            pool.pools[resident].submit(reqs[i])
+            i += 1
+        decode_s = _drain_decode_timed([pool.pools[resident]], decode_s)
+    return reqs, decode_s, t_start
+
+
+def multiplexed_serve(pool: MultiModelScheduler, trace, max_new: int):
+    """Everything submitted through the one multi-model queue; all arenas
+    decode in the same loop."""
+    reqs = [Request(tokens=p.copy(), max_new=max_new, model=m)
+            for m, p in trace]
+    t_start = time.time()
+    for r in reqs:
+        pool.submit(r)
+    decode_s = _drain_decode_timed(list(pool.pools.values()), 0.0)
+    return reqs, decode_s, t_start
+
+
+def _latencies(reqs, t_start):
+    return np.asarray([r.t_done - t_start for r in reqs])
+
+
+def run(models: str = DEFAULT_MODELS, requests: int = 12, slots: int = 4,
+        prompt_len: int = 12, max_new: int = 16, seed: int = 0) -> dict:
+    archs = [a.strip() for a in models.split(",") if a.strip()]
+    entries = []
+    for i, arch in enumerate(archs):
+        cfg = get_config(arch)
+        model = Model(cfg)
+        entries.append((arch, model, model.init(jax.random.PRNGKey(seed + i))))
+    group = ModelGroup(entries)
+    pool = MultiModelScheduler(
+        group, SchedulerConfig(n_slots=slots, max_len=prompt_len + max_new,
+                               prefill_chunk=8))
+    trace = make_trace(archs, requests, prompt_len, max_new, seed)
+    n_tokens = requests * max_new
+    print(f"models={','.join(archs)} requests={requests} (alternating) "
+          f"slots={slots}/model max_new={max_new}")
+
+    # warm up every arena's compiles on the real trace, then reset
+    multiplexed_serve(pool, trace, max_new)
+    pool.reset_stats()
+
+    base_reqs, base_decode_s, t0 = swap_serve(pool, trace, max_new)
+    base_lat = _latencies(base_reqs, t0)
+    pool.reset_stats()
+    mux_reqs, mux_decode_s, t0 = multiplexed_serve(pool, trace, max_new)
+    mux_lat = _latencies(mux_reqs, t0)
+
+    match = sum(a.out_tokens == b.out_tokens
+                for a, b in zip(base_reqs, mux_reqs))
+    assert match == requests, \
+        f"multiplexing changed outputs ({match}/{requests} matched)"
+
+    base_tok_s = n_tokens / base_decode_s
+    mux_tok_s = n_tokens / mux_decode_s
+    speedup = base_decode_s / mux_decode_s
+    p50_base = float(np.percentile(base_lat, 50))
+    p50_mux = float(np.percentile(mux_lat, 50))
+    print(f"swap-serving : decode {base_tok_s:8.1f} tok/s  "
+          f"p50 {p50_base*1e3:7.0f}ms  p95 "
+          f"{np.percentile(base_lat, 95)*1e3:7.0f}ms")
+    print(f"multiplexed  : decode {mux_tok_s:8.1f} tok/s  "
+          f"p50 {p50_mux*1e3:7.0f}ms  p95 "
+          f"{np.percentile(mux_lat, 95)*1e3:7.0f}ms")
+    print(f"speedup      : decode {speedup:.2f}x, p50 "
+          f"{p50_base / max(p50_mux, 1e-12):.2f}x lower "
+          f"(outputs bit-identical for {match}/{requests})")
+    sizes = pool.jit_cache_sizes()
+    print(f"jit cache sizes (<=1 per stage per model): {sizes}")
+    if -1 not in sizes.values():
+        assert all(v <= 1 for v in sizes.values()), sizes
+    assert speedup >= 1.5, \
+        f"multiplexed pool must beat swap-serving by >=1.5x (got " \
+        f"{speedup:.2f}x)"
+    assert p50_mux < p50_base, "multiplexing must lower mixed-trace p50"
+    record("serving/multi_model_multiplexed", mux_decode_s / n_tokens * 1e6,
+           derived=f"speedup={speedup:.2f}x")
+    record("serving/multi_model_swap_baseline",
+           base_decode_s / n_tokens * 1e6)
+    return {
+        "models": archs,
+        "requests": requests,
+        "decode_speedup": speedup,
+        "multiplexed_tok_s": mux_tok_s,
+        "swap_baseline_tok_s": base_tok_s,
+        "p50_s": p50_mux,
+        "swap_baseline_p50_s": p50_base,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default=DEFAULT_MODELS)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(args.models, args.requests, args.slots, args.prompt_len,
+        args.max_new, args.seed)
+
+
+if __name__ == "__main__":
+    main()

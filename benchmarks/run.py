@@ -1,11 +1,18 @@
 """Benchmark runner — one function per survey table + runtime micros.
 
-Prints per-table reproductions (with survey-band assertions) and ends with
-the ``name,us_per_call,derived`` CSV.
+Prints per-table reproductions (with survey-band assertions), ends with the
+``name,us_per_call,derived`` CSV, and writes ``BENCH_serving.json``: the
+serving perf-trajectory artifact (decode tok/s, p50, deadline-hit-rate for
+the smoke serving benches) that CI archives so regressions across PRs show
+up as a number, not a vibe.
 """
 from __future__ import annotations
 
+import json
 import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0])           # repo root
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
 
 
 def main() -> None:
@@ -13,7 +20,8 @@ def main() -> None:
                             table3_cloud_device, table4_edge_device,
                             table5_cloud_edge_device, table6_device_device,
                             runtime_micro, serving_bench,
-                            tiered_serving_bench, exit_bench)
+                            tiered_serving_bench, exit_bench,
+                            multi_model_bench)
     from benchmarks.common import emit_csv
 
     table1_models.run()
@@ -25,16 +33,39 @@ def main() -> None:
     runtime_micro.run()
     # serving benchmarks, smoke-sized so the runner stays CI-friendly:
     # single-pool continuous batching vs sequential, paradigm-aware tiered
-    # routing vs a cloud-only pool, then the early-exit threshold sweep
-    # (depth-segmented decode: tok/s rises as exits truncate compute)
+    # routing vs a cloud-only pool, the early-exit threshold sweep
+    # (depth-segmented decode: tok/s rises as exits truncate compute), then
+    # the multi-model pool vs swap-serving
     print()
-    serving_bench.run(requests=6, slots=2, prompt_len=8, max_new=8)
+    serving = serving_bench.run(requests=6, slots=2, prompt_len=8, max_new=8)
     print()
-    tiered_serving_bench.run(requests=12, rate=50.0, base_slots=2, max_new=4)
+    st_def, st_deg, st_base = tiered_serving_bench.run(
+        requests=12, rate=50.0, base_slots=2, max_new=4)
     print()
-    exit_bench.run(requests=4, slots=2, prompt_len=8, max_new=12)
+    exits = exit_bench.run(requests=4, slots=2, prompt_len=8, max_new=12)
+    print()
+    multi = multi_model_bench.run(requests=8, slots=4, prompt_len=8,
+                                  max_new=8)
     print()
     emit_csv()
+
+    artifact = {
+        "continuous_batching": serving,
+        "tiered": {
+            "p50_s": st_def["p50_latency_s"],
+            "p95_s": st_def["p95_latency_s"],
+            "deadline_hit_rate": st_def["deadline_hit_rate"],
+            "degraded_wan_cloud_routed": st_deg["route_counts"]["cloud"],
+            "cloud_only_p50_s": st_base["p50_latency_s"],
+            "cloud_only_deadline_hit_rate": st_base["deadline_hit_rate"],
+        },
+        "exit_sweep": exits,
+        "multi_model": multi,
+    }
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(artifact, f, indent=2)
+        f.write("\n")
+    print("wrote BENCH_serving.json")
 
 
 if __name__ == '__main__':

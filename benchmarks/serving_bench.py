@@ -86,9 +86,10 @@ def continuous_serve(model, params, prompts, max_new: int, sched):
 
 def run(arch: str = "granite-3-2b-smoke", requests: int = 16,
         slots: int = 8, prompt_len: int = 16, max_new: int = 32,
-        seed: int = 0) -> float:
+        seed: int = 0) -> dict:
     """Replay one trace sequentially and through the slot pool; print the
-    comparison, record CSV rows, and return the decode speedup."""
+    comparison, record CSV rows, and return a stats dict (decode tok/s +
+    speedup — the perf-trajectory numbers ``run.py`` archives)."""
     cfg = get_config(arch)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -139,7 +140,12 @@ def run(arch: str = "granite-3-2b-smoke", requests: int = 16,
     record("serving/continuous_decode", cb_decode_s / n_tokens * 1e6,
            derived=f"speedup={speed_dec:.2f}x")
     record("serving/sequential_decode", seq_decode_s / n_tokens * 1e6)
-    return speed_dec
+    return {
+        "decode_speedup": speed_dec,
+        "end_to_end_speedup": speed_tot,
+        "continuous_tok_s": n_tokens / cb_decode_s,
+        "sequential_tok_s": n_tokens / seq_decode_s,
+    }
 
 
 def main():

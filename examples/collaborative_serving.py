@@ -110,7 +110,28 @@ def main():
             print(f"  {tname:6s} slots={ts['n_slots']} "
                   f"routed={ts['routed']} util={ts['utilization']:.2f}")
 
-    # ---- 4. boundary feature compression (the partition-crossing tensor)
+    # ---- 4. a multi-tenant edge node: ONE pool multiplexing two
+    # heterogeneous models (survey §6.3 dynamic task allocation).  Each
+    # model owns its own cache arena + jitted stages behind one queue;
+    # outputs are bit-identical to dedicated per-model schedulers.
+    from repro.serving import ModelGroup, MultiModelScheduler
+    cfg_b = get_config("xlstm-350m-smoke")
+    model_b = Model(cfg_b)
+    group = ModelGroup([
+        ("yi", model, params),
+        ("xlstm", model_b, model_b.init(jax.random.PRNGKey(3)))])
+    pool = MultiModelScheduler(group, SchedulerConfig(n_slots=2, max_len=32))
+    for i in range(6):
+        name = ("yi", "xlstm")[i % 2]
+        vocab = (cfg if name == "yi" else cfg_b).vocab_size
+        pool.submit(Request(tokens=rs.randint(0, vocab, 4 + i), max_new=8,
+                            model=name))
+    pool.run()
+    print(f"\nmulti-model pool: {len(pool.completed)} requests over "
+          f"{list(pool.pools)} arenas, per-model tokens "
+          f"{ {n: p.tokens_served for n, p in pool.pools.items()} }")
+
+    # ---- 5. boundary feature compression (the partition-crossing tensor)
     x = jax.random.normal(jax.random.PRNGKey(2), (64, cfg.d_model), jnp.bfloat16)
     q, s = kops.compress_rows(x)                 # Pallas kernel (interpret)
     x2 = kops.decompress_rows(q, s)

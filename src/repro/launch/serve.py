@@ -32,8 +32,22 @@ Two modes:
       PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b-smoke \\
           --mode poisson --tiered --scenario degraded-wan --requests 32
 
+  With ``--models a,b`` (poisson mode) the trace instead carries requests
+  for SEVERAL architectures and one multi-model pool
+  (``MultiModelScheduler``) multiplexes them: one arena (cache + jitted
+  stages + exit counters) per model behind one queue, requests assigned
+  round-robin across models.  Combine with ``--tiered`` to route
+  per-(model, request) across the cloud/edge/device pools using per-model
+  cost graphs (plan configs default to each arch with ``-smoke`` stripped).
+
+      PYTHONPATH=src python -m repro.launch.serve \\
+          --models granite-3-2b-smoke,xlstm-350m-smoke \\
+          --mode poisson --rate 8 --requests 32
+
 Flags:
     --arch        architecture name (configs registry; "-smoke" for reduced)
+    --models      [poisson] comma-separated archs for a multi-model pool
+                  (overrides --arch)
     --mode        batch | poisson
     --batch       [batch] requests per batch
     --prompt-len  max prompt length (poisson draws lengths up to this)
@@ -63,13 +77,46 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import Scenario
 from repro.models import Model, ShardCtx
-from repro.serving import (ClusterConfig, ContinuousBatchScheduler, Request,
+from repro.serving import (ClusterConfig, ContinuousBatchScheduler,
+                           ModelGroup, MultiModelScheduler, Request,
                            ServeConfig, ServingEngine, SchedulerConfig,
                            TieredServingCluster)
 
 SCENARIOS = {"default": Scenario.default,
              "degraded-wan": Scenario.degraded_wan,
              "neurosurgeon-era": Scenario.neurosurgeon_era}
+
+
+def _poisson_trace(rs, rate: float, n_requests: int, prompt_len: int):
+    """Exponential inter-arrival gaps + uniform prompt lengths — the shared
+    open-loop trace every Poisson driver replays."""
+    arrivals = np.cumsum(rs.exponential(1.0 / rate, n_requests))
+    lengths = rs.randint(max(1, prompt_len // 4), prompt_len + 1, n_requests)
+    return arrivals, lengths
+
+
+def _drive_open_loop(sched, reqs, arrivals):
+    """Submit each request at its arrival offset and tick the pool until
+    every request completes.  Returns (t0, makespan_seconds)."""
+    t0 = time.time()
+    i = 0
+    while len(sched.completed) < len(reqs):
+        now = time.time() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            sched.submit(reqs[i])
+            i += 1
+        if sched.has_work:
+            sched.tick()
+        elif i < len(reqs):
+            time.sleep(min(0.002, max(0.0, arrivals[i] - now)))
+    return t0, time.time() - t0
+
+
+def _pctl(vals, q: float) -> float:
+    """Percentile, or nan for an empty sample (a model that received no
+    requests must not crash or fake a 0.0)."""
+    return float(np.percentile(np.asarray(vals), q)) if len(vals) \
+        else float("nan")
 
 
 def serve(arch: str, batch: int, prompt_len: int, max_new: int, *,
@@ -118,8 +165,7 @@ def serve_poisson(arch: str, *, rate: float = 4.0, n_requests: int = 32,
                         exit_threshold=threshold, long_mode=long_mode))
 
     rs = np.random.RandomState(seed)
-    arrivals = np.cumsum(rs.exponential(1.0 / rate, n_requests))
-    lengths = rs.randint(max(1, prompt_len // 4), prompt_len + 1, n_requests)
+    arrivals, lengths = _poisson_trace(rs, rate, n_requests, prompt_len)
     reqs = [Request(tokens=rs.randint(0, cfg.vocab_size, int(l)),
                     max_new=max_new) for l in lengths]
     if cfg.family == "encdec":
@@ -136,19 +182,7 @@ def serve_poisson(arch: str, *, rate: float = 4.0, n_requests: int = 32,
     sched.run()
     sched.reset_stats()               # warmup must not skew the report
 
-    t0 = time.time()
-    i = 0
-    while len(sched.completed) < n_requests:
-        now = time.time() - t0
-        while i < n_requests and arrivals[i] <= now:
-            sched.submit(reqs[i])
-            i += 1
-        if sched.has_work:
-            sched.tick()
-        elif i < n_requests:
-            time.sleep(min(0.002, max(0.0, arrivals[i] - now)))
-    makespan = time.time() - t0
-
+    t0, makespan = _drive_open_loop(sched, reqs, arrivals)
     lat = np.asarray([r.t_done - (t0 + arrivals[j])
                       for j, r in enumerate(reqs)])
     total_tokens = sum(len(r.out_tokens) for r in reqs)
@@ -172,6 +206,154 @@ def serve_poisson(arch: str, *, rate: float = 4.0, n_requests: int = 32,
               f"sustained={stats['sustained_tok_s']:.1f} tok/s "
               f"makespan={makespan:.2f}s")
         print(f"  jit cache sizes (must stay 1): {stats['jit_cache_sizes']}")
+    return stats
+
+
+def _build_group(archs, seed: int) -> ModelGroup:
+    """One (model, params) entry per arch name; params seeded per entry."""
+    entries = []
+    for i, arch in enumerate(archs):
+        cfg = get_config(arch)
+        model = Model(cfg, ShardCtx(None))
+        entries.append((arch, model,
+                        model.init(jax.random.PRNGKey(seed + i))))
+    return ModelGroup(entries)
+
+
+def serve_multi_poisson(archs, *, rate: float = 4.0, n_requests: int = 32,
+                        slots: int = 4, prompt_len: int = 16,
+                        max_new: int = 32, threshold: float = 0.5,
+                        prefill_chunk: int = 16, long_mode: bool = False,
+                        seed: int = 0, quiet: bool = False):
+    """Open-loop Poisson trace through ONE multi-model pool: requests are
+    assigned round-robin across ``archs`` and the ``MultiModelScheduler``
+    multiplexes every model's arena in the same poll loop.  Returns a stats
+    dict with per-model breakdowns and the flattened per-model jit cache
+    sizes (the <=1-per-stage-per-model no-recompile invariant)."""
+    group = _build_group(archs, seed)
+    sched = MultiModelScheduler(
+        group,
+        SchedulerConfig(n_slots=slots, max_len=prompt_len + max_new,
+                        prefill_chunk=min(prefill_chunk, max(1, prompt_len)),
+                        exit_threshold=threshold, long_mode=long_mode))
+
+    rs = np.random.RandomState(seed)
+    arrivals, lengths = _poisson_trace(rs, rate, n_requests, prompt_len)
+
+    def _frames(cfg):
+        if cfg.family != "encdec":
+            return None
+        return 0.02 * rs.randn(cfg.encdec.encoder_seq_len,
+                               cfg.d_model).astype(np.float32)
+
+    reqs = []
+    for i, l in enumerate(lengths):
+        arch = archs[i % len(archs)]
+        cfg = get_config(arch)
+        reqs.append(Request(tokens=rs.randint(0, cfg.vocab_size, int(l)),
+                            max_new=max_new, model=arch,
+                            frames=_frames(cfg)))
+
+    # warm up each arena's compiles outside the timed trace
+    for arch in archs:
+        cfg = get_config(arch)
+        sched.submit(Request(tokens=rs.randint(0, cfg.vocab_size,
+                                               int(lengths[0])),
+                             max_new=1, model=arch, frames=_frames(cfg)))
+    sched.run()
+    sched.reset_stats()
+
+    t0, makespan = _drive_open_loop(sched, reqs, arrivals)
+    lat = np.asarray([r.t_done - (t0 + arrivals[j])
+                      for j, r in enumerate(reqs)])
+    total_tokens = sum(len(r.out_tokens) for r in reqs)
+    per_model = {}
+    for arch in archs:
+        ml = [lat[j] for j, r in enumerate(reqs) if r.model == arch]
+        per_model[arch] = {
+            "requests": len(ml),
+            "tokens": sched.pools[arch].tokens_served,
+            "p50_latency_s": _pctl(ml, 50),
+            "p95_latency_s": _pctl(ml, 95),
+        }
+    stats = {
+        "requests": n_requests,
+        "models": per_model,
+        "slots": slots,
+        "rate_req_s": rate,
+        "makespan_s": makespan,
+        "p50_latency_s": _pctl(lat, 50),
+        "p95_latency_s": _pctl(lat, 95),
+        "sustained_tok_s": total_tokens / makespan,
+        "tokens": total_tokens,
+        "jit_cache_sizes": sched.jit_cache_sizes(),
+    }
+    if not quiet:
+        print(f"multi-model poisson models={','.join(archs)} rate={rate}/s "
+              f"requests={n_requests} slots={slots}/model")
+        print(f"  p50={stats['p50_latency_s']*1e3:.0f}ms "
+              f"p95={stats['p95_latency_s']*1e3:.0f}ms "
+              f"sustained={stats['sustained_tok_s']:.1f} tok/s "
+              f"makespan={makespan:.2f}s")
+        for arch, ms in per_model.items():
+            print(f"  {arch:24s} requests={ms['requests']:3d} "
+                  f"tokens={ms['tokens']:4d} "
+                  f"p95={ms['p95_latency_s']*1e3:.0f}ms")
+        print(f"  jit cache sizes (must stay 1 per stage per model): "
+              f"{stats['jit_cache_sizes']}")
+    return stats
+
+
+def serve_multi_tiered_poisson(archs, *, rate: float = 4.0,
+                               n_requests: int = 32, base_slots: int = 8,
+                               prompt_len: int = 16, max_new: int = 32,
+                               threshold: float = 0.5,
+                               prefill_chunk: int = 16,
+                               scenario: str = "default",
+                               deadline: float = 0.0,
+                               long_mode: bool = False, seed: int = 0,
+                               quiet: bool = False):
+    """Multi-model Poisson trace through the tiered cluster: each request is
+    routed per (model, request) using that model's cost graphs (plan config
+    = the arch with ``-smoke`` stripped), so heavy and light models can land
+    on different tiers within the same trace."""
+    group = _build_group(archs, seed)
+    plan_cfgs = {arch: get_config(arch[:-6] if arch.endswith("-smoke")
+                                  else arch)
+                 for arch in archs}
+    cluster = TieredServingCluster(
+        group, scenario=SCENARIOS[scenario](), plan_cfg=plan_cfgs,
+        cfg=ClusterConfig(base_slots=base_slots,
+                          max_len=prompt_len + max_new,
+                          prefill_chunk=min(prefill_chunk,
+                                            max(1, prompt_len)),
+                          exit_threshold=threshold, long_mode=long_mode))
+    rs = np.random.RandomState(seed)
+    arrivals, lengths = _poisson_trace(rs, rate, n_requests, prompt_len)
+    for i, (arr, l) in enumerate(zip(arrivals, lengths)):
+        arch = archs[i % len(archs)]
+        cluster.submit(rs.randint(0, get_config(arch).vocab_size, int(l)),
+                       max_new=max_new, arrival=float(arr),
+                       deadline=deadline or None, model=arch)
+    t0 = time.time()
+    cluster.run()
+    wall = time.time() - t0
+    stats = cluster.stats()
+    stats["wall_s"] = wall
+    if not quiet:
+        print(f"multi-model tiered poisson models={','.join(archs)} "
+              f"scenario={scenario} rate={rate}/s requests={n_requests}")
+        print(f"  routed: {stats['route_counts']} splits={stats['splits']} "
+              f"deadline-hit={stats['deadline_hit_rate']:.2f}")
+        print(f"  virtual p50={stats['p50_latency_s']*1e3:.0f}ms "
+              f"p95={stats['p95_latency_s']*1e3:.0f}ms (wall {wall:.2f}s)")
+        for arch, ms in stats["models"].items():
+            print(f"  {arch:24s} routed={ms['routed']:3d} "
+                  f"{ms['route_counts']} tokens={ms['tokens']}")
+        for name, ts in stats["tiers"].items():
+            print(f"  {name:6s} slots={ts['n_slots']} "
+                  f"routed={ts['routed']:3d} util={ts['utilization']:.2f} "
+                  f"p95={ts['p95_latency_s']*1e3:.0f}ms")
     return stats
 
 
@@ -201,8 +383,7 @@ def serve_tiered_poisson(arch: str, *, rate: float = 4.0,
                                             max(1, prompt_len)),
                           exit_threshold=threshold, long_mode=long_mode))
     rs = np.random.RandomState(seed)
-    arrivals = np.cumsum(rs.exponential(1.0 / rate, n_requests))
-    lengths = rs.randint(max(1, prompt_len // 4), prompt_len + 1, n_requests)
+    arrivals, lengths = _poisson_trace(rs, rate, n_requests, prompt_len)
     for arr, l in zip(arrivals, lengths):
         cluster.submit(rs.randint(0, cfg.vocab_size, int(l)),
                        max_new=max_new, arrival=float(arr),
@@ -232,7 +413,10 @@ def serve_tiered_poisson(arch: str, *, rate: float = 4.0,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--models", default="",
+                    help="comma-separated archs for a multi-model pool "
+                         "(poisson mode; overrides --arch)")
     ap.add_argument("--mode", default="batch", choices=["batch", "poisson"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -249,7 +433,25 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--long", action="store_true")
     args = ap.parse_args()
-    if args.mode == "poisson" and args.tiered:
+    assert args.arch or args.models, "need --arch or --models"
+    if args.models:
+        assert args.mode == "poisson", "--models needs --mode poisson"
+        archs = [a.strip() for a in args.models.split(",") if a.strip()]
+        if args.tiered:
+            serve_multi_tiered_poisson(
+                archs, rate=args.rate, n_requests=args.requests,
+                base_slots=args.slots, prompt_len=args.prompt_len,
+                max_new=args.max_new, threshold=args.threshold,
+                prefill_chunk=args.prefill_chunk, scenario=args.scenario,
+                deadline=args.deadline, long_mode=args.long, seed=args.seed)
+        else:
+            serve_multi_poisson(
+                archs, rate=args.rate, n_requests=args.requests,
+                slots=args.slots, prompt_len=args.prompt_len,
+                max_new=args.max_new, threshold=args.threshold,
+                prefill_chunk=args.prefill_chunk, long_mode=args.long,
+                seed=args.seed)
+    elif args.mode == "poisson" and args.tiered:
         serve_tiered_poisson(
             args.arch, rate=args.rate, n_requests=args.requests,
             base_slots=args.slots, prompt_len=args.prompt_len,

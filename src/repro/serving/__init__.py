@@ -1,27 +1,35 @@
 """Serving runtime: continuous-batching pools, paradigm-aware routing.
 
-Architecture (this PR's tentpole, survey §2.3 made runtime):
+Architecture (survey §2.3 made runtime):
 
-* ``scheduler``  — ``ContinuousBatchScheduler``: one slot pool with chunked
-  batched prefill, a depth-segmented decode pipeline (per-segment jitted
-  stages bounded by exit heads; early exits truncate compute and the
-  measured depth is reported per step), device-side exit counters, and a
-  ``poll()``/``StepReport`` API so external drivers can step many pools.
-* ``router``     — ``AdmissionRouter``: per-request tier selection from the
-  paradigm planners (Neurosurgeon / Edgent / DDNN / device-local /
-  prefill-decode splits) over cached cost graphs.
+* ``scheduler``  — ``ContinuousBatchScheduler``: one single-model slot pool
+  with chunked batched prefill, a depth-segmented decode pipeline
+  (per-segment jitted stages bounded by exit heads; early exits truncate
+  compute and the measured depth is reported per step), device-side exit
+  counters, and a ``poll()``/``StepReport`` API so external drivers can
+  step many pools.
+* ``multipool``  — ``ModelGroup`` + ``MultiModelScheduler``: one pool
+  multiplexing heterogeneous models (§6.3 multi-tenant edge serving) — one
+  arena (cache + jitted stages + counters) per named model behind one
+  queue, one ``poll()``, and a cross-model prefill-fairness budget.
+* ``router``     — ``AdmissionRouter``: per-(model, request) tier selection
+  from the paradigm planners (Neurosurgeon / Edgent / DDNN / device-local /
+  prefill-decode splits) over cached per-model cost graphs.
 * ``cluster``    — ``TieredServingCluster``: one scheduler pool per
-  cloud/edge/device tier (slots derived from ``DeviceProfile``s), virtual
-  tier clocks for link/compute delays, per-tier utilization and latency
-  stats.
+  cloud/edge/device tier (slots derived from ``DeviceProfile``s and each
+  model's KV footprint), virtual tier clocks for link/compute delays,
+  per-tier utilization and latency stats.
 * ``engine``     — ``ServingEngine``: the batch front-end; single-pool by
-  default, routed through the tiered cluster when given a ``Scenario``.
+  default, routed through the tiered cluster when given a ``Scenario``,
+  multi-model via ``generate_multi`` when given a ``ModelGroup``.
 * ``adaptive``   — closed-loop exit-threshold control from flushed counters.
 """
 from repro.serving.cluster import (ClusterConfig, ClusterRequest,
                                    TieredServingCluster, derive_tier_slots)
 from repro.serving.engine import (ServeConfig, ServingEngine, make_serve_step,
                                   prime_whisper_cross_cache)
+from repro.serving.multipool import (ModelEntry, ModelGroup,
+                                     MultiModelScheduler)
 from repro.serving.router import AdmissionRouter
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
                                      SchedulerConfig, StepReport)
@@ -30,4 +38,5 @@ __all__ = ["ServeConfig", "ServingEngine", "make_serve_step",
            "prime_whisper_cross_cache", "ContinuousBatchScheduler",
            "Request", "SchedulerConfig", "StepReport", "AdmissionRouter",
            "ClusterConfig", "ClusterRequest", "TieredServingCluster",
-           "derive_tier_slots"]
+           "derive_tier_slots", "ModelEntry", "ModelGroup",
+           "MultiModelScheduler"]

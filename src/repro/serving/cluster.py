@@ -1,37 +1,53 @@
-"""Tiered serving cluster: one scheduler pool per cloud/edge/device tier,
+"""Tiered serving cluster: scheduler pools per cloud/edge/device tier,
 fed by the paradigm-planner admission router.
 
 This is the runtime form of the survey's collaborative-inference thesis:
-instead of one local slot pool, the cluster owns a ``ContinuousBatchScheduler``
-per tier whose slot count is derived from the tier's ``DeviceProfile`` (compute
-share and KV-arena memory), and an ``AdmissionRouter`` picks a tier per request
-from prompt length, deadline, and the current per-tier queue depth.
+instead of one local slot pool, the cluster owns a scheduler pool per tier
+whose slot count is derived from the tier's ``DeviceProfile`` (compute
+share and KV-arena memory), and an ``AdmissionRouter`` picks a tier per
+request from prompt length, deadline, and the current per-tier queue depth.
 
-Execution vs. simulation: every pool runs the *same* real model on the local
-accelerator (so outputs are exact and jit caches stay fixed — routing never
-retraces), while tier heterogeneity lives in a **virtual clock** per tier:
+**Multi-model tiers**: construct the cluster with a ``ModelGroup`` and each
+tier's pool becomes a ``MultiModelScheduler`` — one arena per named model,
+each with its own per-tier slot count (derived from that model's KV
+footprint) and its own virtual per-token cost (derived from that model's
+plan config).  Routing is per (model, request): a heavy model's request can
+land on the cloud pool while a light model's stays on device within the
+same trace.  A plain ``Model`` keeps the single-model behaviour.
 
-* a pool decode step advances the tier clock by ``compute_time(tok_flops,
-  profile)`` on that tier's hardware, scaled by the **measured depth
-  fraction** the scheduler's segment pipeline actually dispatched — early
-  exits truncate compute, so a permissive threshold directly lowers tier
-  latency (the survey's edge-device win, now measured rather than modeled);
-* prefill chunks advance it by the replayed prompt tokens' compute cost;
+Execution vs. simulation: every pool runs the *same* real model(s) on the
+local accelerator (so outputs are exact and jit caches stay fixed — routing
+never retraces), while tier heterogeneity lives in a **virtual clock** per
+tier:
+
+* a pool decode step advances the tier clock by the sum over models that
+  stepped of ``compute_time(model_tok_flops, profile)`` on that tier's
+  hardware, each scaled by the **measured depth fraction** that model's
+  segment pipeline actually dispatched — early exits truncate compute, so a
+  permissive threshold directly lowers tier latency (the survey's
+  edge-device win, now measured rather than modeled);
+* prefill chunks advance it by the replayed prompt tokens' compute cost at
+  the prefilling model's rate;
 * a request becomes admissible only after its uplink transfer delay
   (``LinkProfile.tx_time`` of the prompt bytes), and a prefill/decode split
   additionally waits out the remote prefill plus the simulated KV-cache
   transfer delay injected between prefill and decode;
-* completion stamps the tier clock plus the downlink result transfer.
+* completion stamps the tier clock plus the downlink result transfer, and
+  **releases the admission-time slot booking**: a request that finishes
+  early (EOS before ``max_new``, truncated depth) returns its unused
+  reservation, so ``queue_costs()`` tracks reality instead of drifting
+  pessimistic over a long trace.
 
 Reported per-tier utilization and request p50/p95 latencies are therefore in
 virtual (scenario) time — the quantity the survey's planners predict — while
-token generation itself is bit-exact real execution.
+token generation itself is bit-exact real execution.  Latency percentiles
+are ``nan`` until a request has completed (never a fake 0.0).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
@@ -39,9 +55,10 @@ from repro.core.cost_model import (DeviceProfile, LinkProfile,
                                    build_cost_graph, compute_time,
                                    kv_cache_bytes_per_token)
 from repro.core.paradigms import AdmissionDecision, Scenario, _tier_profile
+from repro.serving.multipool import ModelGroup, MultiModelScheduler
 from repro.serving.router import AdmissionRouter
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
-                                     SchedulerConfig)
+                                     SchedulerConfig, StepReport)
 
 
 @dataclasses.dataclass
@@ -68,6 +85,13 @@ class ClusterRequest:
     decision: AdmissionDecision
     ready_at: float                    # arrival + uplink (+ split handoff)
     t_done_v: float = math.nan         # tier clock + downlink at completion
+    # admission-time slot booking (released/reconciled at completion);
+    # booked_released0 snapshots the slot's cumulative released time at
+    # booking, so stacked bookings don't re-release earlier requests' slack
+    booked_model: str = ""
+    booked_slot: int = -1
+    booked_until: float = 0.0
+    booked_released0: float = 0.0
 
     @property
     def done(self) -> bool:
@@ -94,23 +118,44 @@ def derive_tier_slots(profile: DeviceProfile, ref: DeviceProfile,
 
 @dataclasses.dataclass
 class TierRuntime:
-    """One tier's pool plus its virtual-time accounting."""
+    """One tier's pool plus its virtual-time accounting.  All per-model
+    state is keyed by model name ("" for a single-model cluster)."""
     name: str
     profile: DeviceProfile
     uplink: Optional[LinkProfile]      # client <-> tier path (None = local)
-    sched: ContinuousBatchScheduler
-    tok_cost: float                    # virtual seconds per token computed
+    sched: Union[ContinuousBatchScheduler, MultiModelScheduler]
+    tok_cost: Dict[str, float]         # virtual seconds per token, per model
+    slots_total: int                   # sum of per-model arena slot counts
     vclock: float = 0.0
     busy: float = 0.0                  # vclock share spent doing work
     decode_steps: int = 0
     slot_tokens: int = 0               # sum of active slots over decode steps
     routed: int = 0
     waiting: List[ClusterRequest] = dataclasses.field(default_factory=list)
-    # rows of the admission currently prefilling: (cluster req, prompt len)
-    prefill_rows: List[tuple] = dataclasses.field(default_factory=list)
-    # admission-time estimate of when each slot frees up (virtual seconds);
-    # drives the router's queue-cost signal
-    slot_avail: List[float] = dataclasses.field(default_factory=list)
+    # rows of the admission currently prefilling, per model:
+    # model -> [(cluster req, prompt len), ...]
+    prefill_rows: Dict[str, List[tuple]] = dataclasses.field(
+        default_factory=dict)
+    # admission-time estimate of when each slot frees up (virtual seconds),
+    # per model; drives the router's queue-cost signal.  Bookings are
+    # released at completion when a request finishes early.
+    slot_avail: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict)
+    # cumulative virtual time released per slot (monotone): bookings that
+    # stacked BEFORE a release measure their remaining overhang against the
+    # delta of this counter, so one request's slack is never released twice
+    slot_released: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict)
+
+    def book(self, model: str, ready: float, service: float):
+        """Reserve the earliest slot of ``model``'s arena for ``service``
+        virtual seconds starting no earlier than ``ready``.  Returns
+        ``(slot, until, released0)`` — the fields a ``ClusterRequest``
+        carries so the booking can be reconciled at completion."""
+        sa = self.slot_avail[model]
+        i = min(range(len(sa)), key=sa.__getitem__)
+        sa[i] = max(ready, sa[i]) + service
+        return i, sa[i], self.slot_released[model][i]
 
     @property
     def utilization(self) -> float:
@@ -120,64 +165,117 @@ class TierRuntime:
 
     @property
     def slot_occupancy(self) -> float:
-        cap = self.sched.cfg.n_slots * self.decode_steps
+        cap = self.slots_total * self.decode_steps
         return self.slot_tokens / cap if cap else 0.0
+
+
+def _pctl(lats: List[float], q: float) -> float:
+    """Percentile over completed-request latencies; ``nan`` when none have
+    completed (never a fake 0.0 a benchmark could silently read)."""
+    return float(np.percentile(np.asarray(lats), q)) if lats \
+        else float("nan")
 
 
 class TieredServingCluster:
     """Cloud/edge/device scheduler pools behind one admission router.
 
-    ``plan_cfg`` (default: the runtime model's config) feeds the router's
-    cost graphs and the per-tier virtual step costs; pass the full-size
-    config when serving a smoke model so tier economics stay realistic.
+    ``model`` is a ``Model`` (single-model cluster, ``params`` required) or
+    a ``ModelGroup`` (multi-model: each tier pool multiplexes one arena per
+    entry; ``params`` is ignored).  ``plan_cfg`` (default: each runtime
+    model's own config) feeds the router's cost graphs and the per-tier
+    virtual step costs; pass the full-size config — or a ``{name: config}``
+    dict for a group — when serving smoke models so tier economics stay
+    realistic.
     """
 
-    def __init__(self, model, params, scenario: Optional[Scenario] = None,
+    def __init__(self, model, params=None,
+                 scenario: Optional[Scenario] = None,
                  plan_cfg=None, cfg: ClusterConfig = ClusterConfig(),
                  router: Optional[AdmissionRouter] = None):
-        self.model = model
-        self.params = params
         self.cfg = cfg
         self.scenario = scenario or Scenario.default()
-        self.plan_cfg = plan_cfg if plan_cfg is not None else model.cfg
-        self.router = router or AdmissionRouter(self.plan_cfg, self.scenario)
-        # per-token compute of the PLANNED model at the pool's context size
-        g = build_cost_graph(self.plan_cfg, 1, cfg.max_len)
-        self._tok_flops = g.total_flops / cfg.max_len
-        kv_slot = kv_cache_bytes_per_token(self.plan_cfg) * cfg.max_len
+        if isinstance(model, ModelGroup):
+            self.group: Optional[ModelGroup] = model
+            self.model = model[model.default].model
+            self.params = model[model.default].params
+            if plan_cfg is None:
+                plan_cfgs = {e.name: e.model.cfg for e in model}
+            elif isinstance(plan_cfg, dict):
+                plan_cfgs = {e.name: plan_cfg.get(e.name, e.model.cfg)
+                             for e in model}
+            else:                      # one plan config for every entry
+                plan_cfgs = {e.name: plan_cfg for e in model}
+            self._model_names = model.names
+            router_cfg = plan_cfgs
+        else:
+            self.group = None
+            self.model = model
+            self.params = params
+            plan_cfgs = {"": plan_cfg if plan_cfg is not None else model.cfg}
+            self._model_names = [""]
+            router_cfg = plan_cfgs[""]
+        self.plan_cfgs = plan_cfgs
+        self.plan_cfg = plan_cfgs[self._model_names[0]]
+        self.router = router or AdmissionRouter(router_cfg, self.scenario)
+        # per-token compute of each PLANNED model at the pool's context size
+        self._tok_flops: Dict[str, float] = {}
+        kv_slot: Dict[str, float] = {}
+        for name, pc in plan_cfgs.items():
+            g = build_cost_graph(pc, 1, cfg.max_len)
+            self._tok_flops[name] = g.total_flops / cfg.max_len
+            kv_slot[name] = kv_cache_bytes_per_token(pc) * cfg.max_len
 
         sc = self.scenario
+        scfg = SchedulerConfig(
+            n_slots=cfg.base_slots, max_len=cfg.max_len,
+            prefill_chunk=cfg.prefill_chunk,
+            exit_threshold=cfg.exit_threshold,
+            temperature=cfg.temperature, long_mode=cfg.long_mode,
+            flush_every=cfg.flush_every,
+            max_prefill_chunks_per_step=cfg.max_prefill_chunks_per_step)
         self.tiers: Dict[str, TierRuntime] = {}
         for name, uplink in (("device", None), ("edge", sc.dev_edge),
                              ("cloud", sc.dev_cloud)):
             prof = _tier_profile(sc, name)
-            slots = derive_tier_slots(prof, sc.cloud, cfg.base_slots, kv_slot)
-            sched = ContinuousBatchScheduler(
-                model, params,
-                SchedulerConfig(
-                    n_slots=slots, max_len=cfg.max_len,
-                    prefill_chunk=cfg.prefill_chunk,
-                    exit_threshold=cfg.exit_threshold,
-                    temperature=cfg.temperature, long_mode=cfg.long_mode,
-                    flush_every=cfg.flush_every,
-                    max_prefill_chunks_per_step=cfg.max_prefill_chunks_per_step))
+            slots = {m: derive_tier_slots(prof, sc.cloud, cfg.base_slots,
+                                          kv_slot[m])
+                     for m in self._model_names}
+            if self.group is not None:
+                sched: Union[ContinuousBatchScheduler, MultiModelScheduler] \
+                    = MultiModelScheduler(self.group, scfg,
+                                          slots_per_model=slots)
+            else:
+                sched = ContinuousBatchScheduler(
+                    self.model, self.params,
+                    dataclasses.replace(scfg, n_slots=slots[""]))
             self.tiers[name] = TierRuntime(
                 name, prof, uplink, sched,
-                tok_cost=compute_time(self._tok_flops, prof),
-                slot_avail=[0.0] * slots)
+                tok_cost={m: compute_time(self._tok_flops[m], prof)
+                          for m in self._model_names},
+                slots_total=sum(slots.values()),
+                slot_avail={m: [0.0] * n for m, n in slots.items()},
+                slot_released={m: [0.0] * n for m, n in slots.items()})
         self.requests: List[ClusterRequest] = []
         self._cr_of: Dict[int, ClusterRequest] = {}   # id(Request) -> wrapper
+
+    def _resolve_model(self, model: Optional[str]) -> str:
+        if self.group is not None:
+            return self.group.resolve(model or "")
+        return ""
 
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
-    def queue_costs(self, arrival: float = 0.0) -> Dict[str, float]:
-        """Estimated queueing delay per tier for a request arriving at
-        ``arrival`` on the virtual clock: how long past its arrival the
-        tier's earliest slot frees up (an earliest-available-slot estimate,
-        so a trace submitted up front is still judged by when each request
-        actually lands, not by the whole future backlog)."""
-        return {name: max(0.0, min(tr.slot_avail) - arrival)
+    def queue_costs(self, arrival: float = 0.0,
+                    model: Optional[str] = None) -> Dict[str, float]:
+        """Estimated queueing delay per tier for a ``model`` request arriving
+        at ``arrival`` on the virtual clock: how long past its arrival the
+        tier's earliest slot of that model's arena frees up (an
+        earliest-available-slot estimate, so a trace submitted up front is
+        still judged by when each request actually lands, not by the whole
+        future backlog)."""
+        m = self._resolve_model(model)
+        return {name: max(0.0, min(tr.slot_avail[m]) - arrival)
                 for name, tr in self.tiers.items()}
 
     def virtual_now(self) -> float:
@@ -188,15 +286,23 @@ class TieredServingCluster:
 
     def submit(self, tokens, *, max_new: int = 32,
                deadline: Optional[float] = None, arrival: float = 0.0,
-               eos_id: Optional[int] = None, frames=None) -> ClusterRequest:
+               eos_id: Optional[int] = None, frames=None,
+               model: Optional[str] = None) -> ClusterRequest:
         """Route one request and enqueue it at the chosen tier.  ``arrival``
-        is the request's birth on the virtual clock (e.g. a Poisson trace)."""
+        is the request's birth on the virtual clock (e.g. a Poisson trace);
+        ``model`` names the group entry to serve it with (multi-model
+        clusters; None = the default entry)."""
+        m = self._resolve_model(model)
         toks = np.asarray(tokens).reshape(-1)
         assert toks.size + max_new <= self.cfg.max_len, \
             f"prompt {toks.size} + max_new {max_new} exceeds cluster " \
             f"max_len {self.cfg.max_len}"
+        # single-model clusters omit the model kwarg so pre-multi-model
+        # router subclasses (e.g. benchmark baselines) keep working
+        route_kw = {"model": m} if self.group is not None else {}
         d = self.router.route(toks.size, max_new, deadline=deadline,
-                              queue_cost=self.queue_costs(arrival))
+                              queue_cost=self.queue_costs(arrival, model=m),
+                              **route_kw)
         tr = self.tiers[d.tier]
         prompt_bytes = float(toks.size * 4)
         if d.is_split:
@@ -205,7 +311,7 @@ class TieredServingCluster:
             # decode pool only sees the request after that handoff
             pf = self.tiers[d.prefill_tier]
             pf_up = pf.uplink.tx_time(prompt_bytes) if pf.uplink else 0.0
-            pf_cost = toks.size * pf.tok_cost
+            pf_cost = toks.size * pf.tok_cost[m]
             pf.busy += pf_cost              # remote prefill occupies its tier
             ready = arrival + pf_up + pf_cost + d.transfer_delay
         else:
@@ -213,13 +319,15 @@ class TieredServingCluster:
             ready = arrival + up
         cr = ClusterRequest(
             Request(tokens=toks, max_new=max_new, eos_id=eos_id,
-                    frames=frames),
+                    frames=frames, model=m),
             arrival, deadline, d, ready)
-        # book the earliest slot so later arrivals see this commitment
-        i = min(range(len(tr.slot_avail)), key=tr.slot_avail.__getitem__)
+        # book the earliest slot so later arrivals see this commitment; the
+        # booking is released at completion if the request finishes early
         service = (max_new if d.is_split else toks.size + max_new) \
-            * tr.tok_cost
-        tr.slot_avail[i] = max(ready, tr.slot_avail[i]) + service
+            * tr.tok_cost[m]
+        cr.booked_model = m
+        cr.booked_slot, cr.booked_until, cr.booked_released0 = \
+            tr.book(m, ready, service)
         tr.waiting.append(cr)
         tr.routed += 1
         self.requests.append(cr)
@@ -244,38 +352,68 @@ class TieredServingCluster:
                 still.append(cr)
         tr.waiting = still
 
+    def _reconcile_booking(self, tr: TierRuntime, cr: ClusterRequest):
+        """Release the unused tail of the admission-time slot booking.  The
+        booking assumed full ``max_new`` decode at full depth; EOS or depth
+        truncation can finish the request well before ``booked_until``, and
+        without this release ``queue_costs()`` drifts pessimistic over a
+        long trace (bookings stack on estimates that never came true).
+
+        When several bookings stack on one slot, earlier releases already
+        pulled this request's effective end time forward: measure the
+        remaining overhang against the slot's released-time delta since
+        booking, so the same slack is never subtracted twice (which would
+        flip the drift optimistic instead)."""
+        if cr.booked_slot < 0:
+            return
+        m, i = cr.booked_model, cr.booked_slot
+        sa, rel = tr.slot_avail[m], tr.slot_released[m]
+        overhang = (cr.booked_until
+                    - (rel[i] - cr.booked_released0)) - tr.vclock
+        if overhang > 0.0:
+            new = max(tr.vclock, sa[i] - overhang)
+            rel[i] += sa[i] - new      # record what actually came back
+            sa[i] = new
+        cr.booked_slot = -1            # released exactly once
+
     def _poll_tier(self, tr: TierRuntime):
         self._release_ready(tr)
         if not tr.sched.has_work:
             return False
         rep = tr.sched.poll()
-        if rep.admitted:
-            tr.prefill_rows = [(self._cr_of[id(r)], r.tokens.size)
-                               for r in rep.admitted]
-        if rep.prefill_chunks:
-            # charge replayed prompt tokens to this tier — except rows whose
-            # prefill was already paid for remotely (split decisions)
-            chunk = tr.sched.cfg.prefill_chunk
-            lo = rep.prefill_chunk_start * chunk
-            hi = lo + rep.prefill_chunks * chunk
-            cost = 0.0
-            for cr, plen in tr.prefill_rows:
-                if cr.decision.is_split:
-                    continue
-                cost += min(max(plen - lo, 0), hi - lo) * tr.tok_cost
-            tr.vclock += cost
-            tr.busy += cost
-        if rep.prefill_done:
-            tr.prefill_rows = []
+        # normalize: a single-model pool's report is its own (sole) sub-report
+        subs = rep.per_model if rep.per_model else {"": rep}
+        decode_cost = 0.0
+        for m, sub in subs.items():
+            if sub.admitted:
+                tr.prefill_rows[m] = [(self._cr_of[id(r)], r.tokens.size)
+                                      for r in sub.admitted]
+            if sub.prefill_chunks:
+                # charge replayed prompt tokens to this tier at the model's
+                # rate — except rows whose prefill was already paid for
+                # remotely (split decisions)
+                chunk = self.cfg.prefill_chunk
+                lo = sub.prefill_chunk_start * chunk
+                hi = lo + sub.prefill_chunks * chunk
+                cost = 0.0
+                for cr, plen in tr.prefill_rows.get(m, ()):
+                    if cr.decision.is_split:
+                        continue
+                    cost += min(max(plen - lo, 0), hi - lo) * tr.tok_cost[m]
+                tr.vclock += cost
+                tr.busy += cost
+            if sub.prefill_done:
+                tr.prefill_rows[m] = []
+            if sub.decode_stepped:
+                # charge the *truncated* step cost: the scheduler reports
+                # the layer-weighted fraction of the stack its segment
+                # stages dispatched (1.0 when nothing exited / monolithic)
+                depth = sub.decode_depth_frac \
+                    if sub.decode_depth_frac > 0.0 else 1.0
+                decode_cost += tr.tok_cost[m] * depth
         if rep.decode_stepped:
-            # charge the *truncated* step cost: the scheduler reports the
-            # layer-weighted fraction of the stack its segment stages
-            # dispatched (1.0 when nothing exited / monolithic mode)
-            depth = rep.decode_depth_frac if rep.decode_depth_frac > 0.0 \
-                else 1.0
-            cost = tr.tok_cost * depth
-            tr.vclock += cost
-            tr.busy += cost
+            tr.vclock += decode_cost
+            tr.busy += decode_cost
             tr.decode_steps += 1
             tr.slot_tokens += rep.n_active
         for r in rep.completed:
@@ -283,6 +421,7 @@ class TieredServingCluster:
             down = (tr.uplink.tx_time(len(r.out_tokens) * 4.0)
                     if tr.uplink else 0.0)
             cr.t_done_v = tr.vclock + down
+            self._reconcile_booking(tr, cr)
         return rep.worked
 
     def poll(self) -> bool:
@@ -306,17 +445,20 @@ class TieredServingCluster:
             tr.sched.flush_counters()
 
     def clear_completed(self):
-        """Drop completed requests from the cluster's retention (and the
-        pools' completed lists) so a long-lived cluster reused across many
-        batches doesn't grow without bound.  Router counts and tier
-        clocks/utilization survive; ``stats()`` afterwards covers only
-        still-tracked requests."""
+        """Drop completed requests from the cluster's retention (the pools'
+        completed lists and the router's decision log included) so a
+        long-lived cluster reused across many batches doesn't grow without
+        bound.  Router counts and tier clocks/utilization survive;
+        ``stats()`` afterwards covers only still-tracked requests."""
         done = [cr for cr in self.requests if cr.done]
         for cr in done:
             self._cr_of.pop(id(cr.req), None)
         self.requests = [cr for cr in self.requests if not cr.done]
+        self.router.decisions.clear()
         for tr in self.tiers.values():
             tr.sched.completed.clear()
+            for pool in getattr(tr.sched, "pools", {}).values():
+                pool.completed.clear()
 
     # ------------------------------------------------------------------
     # reporting
@@ -326,30 +468,46 @@ class TieredServingCluster:
 
     def stats(self) -> Dict[str, object]:
         done = [cr for cr in self.requests if cr.done]
-        lats = np.asarray([cr.latency for cr in done]) if done else np.zeros(1)
+        lats = [cr.latency for cr in done]
         per_tier = {}
         for name, tr in self.tiers.items():
             tl = [cr.latency for cr in done if cr.decision.tier == name]
             per_tier[name] = {
                 "routed": tr.routed,
-                "n_slots": tr.sched.cfg.n_slots,
+                "n_slots": tr.slots_total,
                 "vclock_s": tr.vclock,
                 "utilization": tr.utilization,
                 "slot_occupancy": tr.slot_occupancy,
                 "tokens": tr.sched.tokens_served,
                 "measured_depth": tr.sched.measured_depth_fraction(),
-                "p50_latency_s": float(np.percentile(tl, 50)) if tl else 0.0,
-                "p95_latency_s": float(np.percentile(tl, 95)) if tl else 0.0,
+                "p50_latency_s": _pctl(tl, 50),
+                "p95_latency_s": _pctl(tl, 95),
             }
-        return {
+        out: Dict[str, object] = {
             "requests": len(self.requests),
             "completed": len(done),
             "splits": self.router.split_count,
             "route_counts": dict(self.router.route_counts),
-            "p50_latency_s": float(np.percentile(lats, 50)),
-            "p95_latency_s": float(np.percentile(lats, 95)),
+            "p50_latency_s": _pctl(lats, 50),
+            "p95_latency_s": _pctl(lats, 95),
             "deadline_hit_rate": (sum(cr.met_deadline for cr in done)
                                   / len(done) if done else 1.0),
             "tiers": per_tier,
             "jit_cache_sizes": self.jit_cache_sizes(),
         }
+        if self.group is not None:
+            per_model = {}
+            for m in self._model_names:
+                ml = [cr.latency for cr in done if cr.req.model == m]
+                per_model[m] = {
+                    "routed": sum(
+                        self.router.route_counts_by_model[m].values()),
+                    "route_counts": dict(
+                        self.router.route_counts_by_model[m]),
+                    "tokens": sum(tr.sched.pools[m].tokens_served
+                                  for tr in self.tiers.values()),
+                    "p50_latency_s": _pctl(ml, 50),
+                    "p95_latency_s": _pctl(ml, 95),
+                }
+            out["models"] = per_model
+        return out

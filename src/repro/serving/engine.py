@@ -15,17 +15,25 @@ instead submits every row through a ``TieredServingCluster``: the admission
 router spreads the batch over cloud/edge/device pools and
 ``engine.route_counts`` reports where rows landed.  Outputs are identical
 either way — tiers differ in virtual cost, not in arithmetic.
+
+Constructed with a ``ModelGroup`` instead of one model, the engine serves
+heterogeneous models through one multiplexed pool:
+``generate_multi({name: prompts})`` decodes every model's batch in the same
+poll loop (or routes per (model, row) across the tiered cluster when a
+scenario is set), with per-model exit counters and outputs bit-identical to
+dedicated single-model engines.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.early_exit import exit_stats_dict
+from repro.serving.multipool import ModelGroup, MultiModelScheduler
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
                                      SchedulerConfig)
 
@@ -95,19 +103,31 @@ class ServingEngine:
     (survey §7.3) is driven from those flushed counters.
     """
 
-    def __init__(self, model, params, scfg: ServeConfig = ServeConfig(),
+    def __init__(self, model, params=None, scfg: ServeConfig = ServeConfig(),
                  scenario=None, plan_cfg=None):
-        self.model = model
-        self.params = params
+        if isinstance(model, ModelGroup):
+            self.group: Optional[ModelGroup] = model
+            self.model = model[model.default].model
+            self.params = model[model.default].params
+            self.exit_counts_by_model = {
+                e.name: np.zeros(e.model.n_exits + 1, np.int64)
+                for e in model}
+            self.tokens_served_by_model = {e.name: 0 for e in model}
+        else:
+            self.group = None
+            self.model = model
+            self.params = params
+            self.exit_counts_by_model = {}
+            self.tokens_served_by_model = {}
         self.scfg = scfg
         self.scenario = scenario           # set -> route through tier pools
-        self.plan_cfg = plan_cfg
-        self.exit_counts = np.zeros(model.n_exits + 1, np.int64)
+        self.plan_cfg = plan_cfg           # config or {name: config} (group)
+        self.exit_counts = np.zeros(self.model.n_exits + 1, np.int64)
         self.tokens_served = 0
         self.depth_weighted_tokens = 0.0   # measured truncated depth x tokens
         self.controller = None
         self._adaptive_every = 64
-        self._scheds: Dict[Tuple[int, int], Any] = {}
+        self._scheds: Dict[Tuple, Any] = {}
         self._cluster = None
         self.route_counts: Dict[str, int] = {}
 
@@ -149,6 +169,8 @@ class ServingEngine:
         With a ``scenario`` configured, rows are routed per request across
         the cloud/edge/device pools (``deadline`` feeds the router);
         otherwise one local pool serves the whole batch."""
+        assert self.group is None, \
+            "multi-model engine: use generate_multi({model: prompts}, ...)"
         cfg = self.model.cfg
         b, s0 = prompt_tokens.shape
         if cfg.family == "encdec":
@@ -177,26 +199,59 @@ class ServingEngine:
         out = np.stack([np.asarray(r.out_tokens, np.int32) for r in reqs])
         return jnp.asarray(out)
 
-    def _generate_tiered(self, prompt_tokens, max_new, frames, rng, deadline):
-        """Batch generation through the tiered cluster: one routed request
-        per row, exit counters aggregated over all tier pools."""
+    # --- shared tiered/multi bookkeeping -------------------------------
+    @staticmethod
+    def _snapshot_pools(pools: Dict[Any, Any]) -> Dict[Any, Tuple]:
+        """Per-pool (exit counters, tokens served, depth) before a batch."""
+        return {k: (p.flush_counters().copy(), p.tokens_served,
+                    p.depth_weighted_tokens) for k, p in pools.items()}
+
+    def _absorb_pool_deltas(self, pools, before, model_of=None):
+        """Fold each pool's exit/token/depth deltas into the engine's
+        accumulators.  ``model_of(key)`` selects the per-model sinks (group
+        engines); None targets the single-model aggregate counters."""
+        for k, p in pools.items():
+            counts0, tokens0, depth0 = before[k]
+            delta = p.flush_counters() - counts0
+            if model_of is None:
+                self.exit_counts += delta
+            else:
+                m = model_of(k)
+                self.exit_counts_by_model[m] += delta
+                self.tokens_served_by_model[m] += p.tokens_served - tokens0
+            self.tokens_served += p.tokens_served - tokens0
+            self.depth_weighted_tokens += p.depth_weighted_tokens - depth0
+
+    def _ensure_cluster(self, need: int):
+        """Lazily (re)build the tiered cluster once the needed context
+        outgrows it — same growth rule for single-model and group engines."""
         from repro.serving.cluster import ClusterConfig, TieredServingCluster
-        b, s0 = prompt_tokens.shape
-        need = s0 + max_new
         if self._cluster is None or self._cluster.cfg.max_len < need:
             max_len = max(self.scfg.max_len, 1 << (need - 1).bit_length())
+            target = self.group if self.group is not None else self.model
             self._cluster = TieredServingCluster(
-                self.model, self.params, self.scenario,
-                plan_cfg=self.plan_cfg,
+                target, None if self.group is not None else self.params,
+                scenario=self.scenario, plan_cfg=self.plan_cfg,
                 cfg=ClusterConfig(max_len=max_len,
                                   exit_threshold=self.scfg.exit_threshold,
                                   temperature=self.scfg.temperature,
                                   long_mode=self.scfg.long_mode))
-        cl = self._cluster
-        before = {n: (tr.sched.flush_counters().copy(),
-                      tr.sched.tokens_served,
-                      tr.sched.depth_weighted_tokens)
-                  for n, tr in cl.tiers.items()}
+        return self._cluster
+
+    def _finish_cluster_batch(self, cl, routes_before):
+        """This batch's placement (per-call delta, stable across cluster
+        rebuilds); requests are returned, not retained by the cluster."""
+        self.route_counts = {t: c - routes_before.get(t, 0)
+                             for t, c in cl.router.route_counts.items()}
+        cl.clear_completed()
+
+    def _generate_tiered(self, prompt_tokens, max_new, frames, rng, deadline):
+        """Batch generation through the tiered cluster: one routed request
+        per row, exit counters aggregated over all tier pools."""
+        b, s0 = prompt_tokens.shape
+        cl = self._ensure_cluster(s0 + max_new)
+        pools = {n: tr.sched for n, tr in cl.tiers.items()}
+        before = self._snapshot_pools(pools)
         routes_before = dict(cl.router.route_counts)
         for tr in cl.tiers.values():
             tr.sched.params = self.params
@@ -210,20 +265,89 @@ class ServingEngine:
                          frames=(frames[i] if frames is not None else None))
                for i in range(b)]
         cl.run()
-        for n, tr in cl.tiers.items():
-            counts0, tokens0, depth0 = before[n]
-            self.exit_counts += tr.sched.flush_counters() - counts0
-            self.tokens_served += tr.sched.tokens_served - tokens0
-            self.depth_weighted_tokens += \
-                tr.sched.depth_weighted_tokens - depth0
-        # this batch's placement (per-call delta, stable across cluster
-        # rebuilds); requests are returned, not retained by the cluster
-        self.route_counts = {t: c - routes_before.get(t, 0)
-                             for t, c in cl.router.route_counts.items()}
-        cl.clear_completed()
+        self._absorb_pool_deltas(pools, before)
+        self._finish_cluster_batch(cl, routes_before)
         out = np.stack([np.asarray(cr.req.out_tokens, np.int32)
                         for cr in crs])
         return jnp.asarray(out)
+
+    # ------------------------------------------------------------------
+    # multi-model entry points (ModelGroup engines)
+    # ------------------------------------------------------------------
+    def generate_multi(self, prompts_by_model: Dict[str, Any], *,
+                       max_new: int = 32, rng=None, deadline=None
+                       ) -> Dict[str, jnp.ndarray]:
+        """``{model_name: prompts [B,S0]}`` -> ``{model_name: [B,max_new]}``.
+
+        Every model's requests share ONE multiplexed pool (or, with a
+        ``scenario``, one multi-model tiered cluster): heterogeneous models
+        decode in the same poll loop instead of serving model-by-model.
+        Per-model outputs are bit-identical to a dedicated single-model
+        engine fed the same prompts."""
+        assert self.group is not None, \
+            "generate_multi needs a ModelGroup engine"
+        batches = {m: np.asarray(p) for m, p in prompts_by_model.items()}
+        for m in batches:
+            assert m in self.group, f"unknown model {m!r}"
+        if self.scenario is not None:
+            return self._generate_multi_tiered(batches, max_new, rng,
+                                               deadline)
+        need = max(p.shape[1] for p in batches.values()) + max_new
+        key = ("multi", need, tuple(sorted(
+            (m, p.shape[0]) for m, p in batches.items())))
+        if key in self._scheds:
+            self._scheds[key] = self._scheds.pop(key)   # LRU refresh
+        else:
+            while len(self._scheds) >= self._MAX_CACHED_SCHEDS:
+                self._scheds.pop(next(iter(self._scheds)))
+            self._scheds[key] = MultiModelScheduler(
+                self.group,
+                SchedulerConfig(n_slots=max(p.shape[0]
+                                            for p in batches.values()),
+                                max_len=need,
+                                exit_threshold=self.scfg.exit_threshold,
+                                temperature=self.scfg.temperature,
+                                long_mode=self.scfg.long_mode),
+                slots_per_model={m: p.shape[0] for m, p in batches.items()})
+        sched = self._scheds[key]
+        before = self._snapshot_pools(sched.pools)
+        reqs = {m: [Request(tokens=p[i], max_new=max_new, model=m)
+                    for i in range(p.shape[0])]
+                for m, p in batches.items()}
+        for rs in reqs.values():
+            for r in rs:
+                sched.submit(r)
+        sched.run(rng=rng)
+        self._absorb_pool_deltas(sched.pools, before, model_of=lambda m: m)
+        for pool in sched.pools.values():
+            pool.completed.clear()
+        sched.completed.clear()
+        return {m: jnp.asarray(np.stack(
+                    [np.asarray(r.out_tokens, np.int32) for r in rs]))
+                for m, rs in reqs.items()}
+
+    def _generate_multi_tiered(self, batches, max_new, rng, deadline):
+        """Multi-model batches through one tiered cluster: per-(model, row)
+        routing over per-model cost graphs."""
+        need = max(p.shape[1] for p in batches.values()) + max_new
+        cl = self._ensure_cluster(need)
+        pools = {(n, m): pool for n, tr in cl.tiers.items()
+                 for m, pool in tr.sched.pools.items()}
+        before = self._snapshot_pools(pools)
+        routes_before = dict(cl.router.route_counts)
+        for tr in cl.tiers.values():
+            tr.sched.set_rng(rng)
+        now = cl.virtual_now()
+        crs = {m: [cl.submit(p[i], max_new=max_new, deadline=deadline,
+                             arrival=now, model=m)
+                   for i in range(p.shape[0])]
+               for m, p in batches.items()}
+        cl.run()
+        self._absorb_pool_deltas(pools, before, model_of=lambda k: k[1])
+        self._finish_cluster_batch(cl, routes_before)
+        return {m: jnp.asarray(np.stack(
+                    [np.asarray(cr.req.out_tokens, np.int32) for cr in rs]))
+                for m, rs in crs.items()}
 
     def measured_depth_fraction(self) -> float:
         """Layer-weighted fraction of the stack dispatched per served token,
@@ -232,7 +356,17 @@ class ServingEngine:
             return 1.0
         return self.depth_weighted_tokens / self.tokens_served
 
-    def exit_stats(self) -> Dict[str, float]:
+    def exit_stats(self) -> Dict[str, Any]:
+        """Exit-fraction statistics.  Single-model engines return one flat
+        dict; ``ModelGroup`` engines return ``{model_name: stats}`` — the
+        counters are per-model by construction (arena isolation)."""
+        if self.group is not None:
+            out: Dict[str, Any] = {}
+            for m, counts in self.exit_counts_by_model.items():
+                out[m] = exit_stats_dict(counts,
+                                         self.tokens_served_by_model[m])
+            out["measured_depth"] = self.measured_depth_fraction()
+            return out
         st = exit_stats_dict(self.exit_counts, self.tokens_served)
         st["measured_depth"] = self.measured_depth_fraction()
         return st

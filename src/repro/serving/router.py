@@ -10,14 +10,28 @@ execution, and prefill/decode disaggregation splits all compete on the
 scenario's measured cost profiles — and returns the winning
 ``AdmissionDecision``.
 
-Cost graphs are cached per prompt-length bucket so routing is O(planner)
-only on the first request of each bucket; every later request in the bucket
-is a dictionary lookup plus a handful of float comparisons.  Nothing here
-touches jitted code, so routing decisions can never trigger a recompile.
+Multi-model serving routes per **(model, request)**: construct the router
+with a ``{model_name: plan_cfg}`` dict and pass ``model=`` to ``route`` —
+each model gets its own cost graphs (and KV footprint), so a heavy model's
+request lands on the cloud pool while a light model's stays on device
+within the same trace.  A single plan config keeps the old single-model
+behaviour.
+
+Cost graphs are cached per (model, prompt-length bucket) so routing is
+O(planner) only on the first request of each bucket; every later request in
+the bucket is a dictionary lookup plus a handful of float comparisons.
+Nothing here touches jitted code, so routing decisions can never trigger a
+recompile.
+
+The ``decisions`` log is a bounded deque (``decision_log`` entries): a
+long-lived router on a cluster reused across many batches must not grow
+without bound, and ``TieredServingCluster.clear_completed()`` additionally
+empties it.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, Optional, Tuple, Union
 
 from repro.core.cost_model import (CostGraph, build_cost_graph,
                                    kv_cache_bytes_per_token)
@@ -31,37 +45,62 @@ class AdmissionRouter:
     ``plan_cfg`` is the model config the cost graphs are built from — for a
     smoke-model runtime this is typically the *full-size* variant, so tier
     economics reflect the real model while execution stays cheap (the same
-    planner/runtime split the rest of the repo uses).
+    planner/runtime split the rest of the repo uses).  Pass a
+    ``{name: config}`` dict to plan per model for a multi-model pool.
     """
 
-    def __init__(self, plan_cfg, scenario: Optional[Scenario] = None, *,
-                 bucket: int = 16, allow_split: bool = True):
-        self.plan_cfg = plan_cfg
+    def __init__(self, plan_cfg: Union[object, Dict[str, object]],
+                 scenario: Optional[Scenario] = None, *,
+                 bucket: int = 16, allow_split: bool = True,
+                 decision_log: int = 256):
+        if isinstance(plan_cfg, dict):
+            assert plan_cfg, "empty plan_cfg dict"
+            self.plan_cfgs: Dict[str, object] = dict(plan_cfg)
+        else:
+            self.plan_cfgs = {"": plan_cfg}
+        self._default_model = next(iter(self.plan_cfgs))
+        # single-model compatibility attribute (the default entry's config)
+        self.plan_cfg = self.plan_cfgs[self._default_model]
         self.scenario = scenario or Scenario.default()
         self.bucket = max(1, bucket)
         self.allow_split = allow_split
-        self._kv_tok = kv_cache_bytes_per_token(plan_cfg)
-        self._graphs: Dict[int, CostGraph] = {}
+        self._kv_tok = {n: kv_cache_bytes_per_token(c)
+                        for n, c in self.plan_cfgs.items()}
+        self._graphs: Dict[Tuple[str, int], CostGraph] = {}
         self.route_counts: Dict[str, int] = {t: 0 for t in TIERS}
+        self.route_counts_by_model: Dict[str, Dict[str, int]] = {
+            n: {t: 0 for t in TIERS} for n in self.plan_cfgs}
         self.split_count = 0
-        self.decisions: List[AdmissionDecision] = []
+        # bounded: a long-lived cluster reuses its router across batches
+        self.decisions: Deque[AdmissionDecision] = deque(maxlen=decision_log)
 
-    def _graph(self, total_tokens: int) -> CostGraph:
+    def _resolve(self, model: Optional[str]) -> str:
+        if not model:
+            return self._default_model
+        assert model in self.plan_cfgs, \
+            f"unknown model {model!r} (router plans {list(self.plan_cfgs)})"
+        return model
+
+    def _graph(self, model: str, total_tokens: int) -> CostGraph:
         b = -(-max(1, total_tokens) // self.bucket) * self.bucket
-        if b not in self._graphs:
-            self._graphs[b] = build_cost_graph(self.plan_cfg, 1, b)
-        return self._graphs[b]
+        if (model, b) not in self._graphs:
+            self._graphs[(model, b)] = build_cost_graph(
+                self.plan_cfgs[model], 1, b)
+        return self._graphs[(model, b)]
 
     def route(self, prompt_len: int, max_new: int, *,
               deadline: Optional[float] = None,
-              queue_cost: Optional[Dict[str, float]] = None
-              ) -> AdmissionDecision:
+              queue_cost: Optional[Dict[str, float]] = None,
+              model: Optional[str] = None) -> AdmissionDecision:
+        model = self._resolve(model)
         d = admission_decision(
-            self._graph(prompt_len + max_new), self.scenario,
+            self._graph(model, prompt_len + max_new), self.scenario,
             deadline=deadline, queue_cost=queue_cost,
             prefill_tokens=prompt_len, decode_tokens=max_new,
-            kv_bytes_per_token=self._kv_tok, allow_split=self.allow_split)
+            kv_bytes_per_token=self._kv_tok[model],
+            allow_split=self.allow_split)
         self.route_counts[d.tier] += 1
+        self.route_counts_by_model[model][d.tier] += 1
         self.split_count += int(d.is_split)
         self.decisions.append(d)
         return d

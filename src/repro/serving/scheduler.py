@@ -46,6 +46,14 @@ serving cluster (``repro.serving.cluster``) instantiates one scheduler per
 cloud/edge/device tier and drives all pools via ``poll()``, using the
 reports for virtual-time accounting.
 
+This class is the **single-model arena**: one model, one fixed-shape cache
+pool, one set of jitted stages.  ``repro.serving.multipool`` multiplexes
+several of these arenas — one per named ``(model, params)`` entry of a
+``ModelGroup`` — behind one queue and one ``poll()`` loop
+(``MultiModelScheduler``), with ``Request.model`` selecting the arena and
+``poll(prefill_budget=...)`` sharing the prefill-fairness budget across
+models.
+
 Typical use::
 
     sched = ContinuousBatchScheduler(model, params, SchedulerConfig(
@@ -79,6 +87,9 @@ class Request:
     eos_id: Optional[int] = None
     frames: Any = None                 # [Tenc, D] for encdec (whisper) archs
     req_id: int = -1
+    # model name for multi-model pools ("" = the pool's default model);
+    # a single-model ContinuousBatchScheduler ignores it
+    model: str = ""
     # --- filled by the scheduler ---
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
@@ -126,6 +137,12 @@ class StepReport:
     decode_segments_run: int = 0
     decode_depth_frac: float = 0.0
     completed: List[Request] = dataclasses.field(default_factory=list)
+    # multi-model pools (repro.serving.multipool): the per-model sub-reports
+    # behind this aggregate, keyed by model name.  Empty for a single-model
+    # scheduler.  External drivers that charge per-model costs (the tiered
+    # cluster) consume these instead of the aggregate fields.
+    per_model: Dict[str, "StepReport"] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def worked(self) -> bool:
@@ -395,17 +412,27 @@ class ContinuousBatchScheduler:
         work happened (False = idle)."""
         return self.poll().worked
 
-    def poll(self) -> StepReport:
+    def poll(self, prefill_budget: Optional[int] = None) -> StepReport:
         """One scheduler round: begin an admission if slots are free, advance
         at most ``max_prefill_chunks_per_step`` prefill chunks, then run one
         pool decode step.  Returns a ``StepReport`` of the work done — the
-        external-driver API the tiered cluster steps pools through."""
+        external-driver API the tiered cluster steps pools through.
+
+        ``prefill_budget`` overrides the config cap for this poll only:
+        ``None`` uses ``cfg.max_prefill_chunks_per_step``; an int >= 1 runs
+        at most that many chunks; 0 runs none (decode still steps, and an
+        admission may still be *staged* — chunks replay on a later poll).
+        Multi-model pools use this to enforce one prefill-fairness budget
+        across every per-model arena."""
         rep = StepReport()
         done_before = len(self.completed)   # before prefill: an eos on the
         if self._pending is None:           # first sampled token completes
             rep.admitted = self._begin_admit()   # a request at admission
-        if self._pending is not None:
-            self._advance_prefill(self.cfg.max_prefill_chunks_per_step, rep)
+        if self._pending is not None and (prefill_budget is None
+                                          or prefill_budget > 0):
+            cap = self.cfg.max_prefill_chunks_per_step \
+                if prefill_budget is None else prefill_budget
+            self._advance_prefill(cap, rep)
         rep.decode_stepped = self.step()
         rep.n_active = self._last_step_active
         if rep.decode_stepped:

@@ -9,6 +9,7 @@ functions (per-pool jit caches stay at one entry)."""
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -276,6 +277,125 @@ def test_engine_tiered_adaptive_and_sampling(granite, plan_cfg):
     # repeated use must not retain completed requests in the cluster
     e1.generate(prompts, max_new=12, rng=rng)
     assert e1._cluster.requests == []
+
+
+# ---------------------------------------------------------------------------
+# accounting regressions (bounded decision log, booking release, nan stats)
+# ---------------------------------------------------------------------------
+
+def test_router_decision_log_is_bounded(plan_cfg):
+    """A long-lived router must not grow without bound: the decisions log
+    is a deque capped at ``decision_log`` entries."""
+    r = AdmissionRouter(plan_cfg, Scenario.default(), decision_log=64)
+    for _ in range(300):
+        r.route(8, 4, deadline=0.5)
+    assert len(r.decisions) == 64
+    assert sum(r.route_counts.values()) == 300   # counts still exact
+
+
+def test_cluster_clear_completed_prunes_decision_log(granite, plan_cfg):
+    """``clear_completed`` empties the router's decision log too — an
+    engine reusing its cluster across many batches retains nothing
+    per-request."""
+    cfg, m, params = granite
+    cluster = TieredServingCluster(
+        m, params, Scenario.default(), plan_cfg=plan_cfg,
+        cfg=ClusterConfig(base_slots=2, max_len=32))
+    rs = np.random.RandomState(0)
+    for _ in range(5):
+        cluster.submit(rs.randint(0, cfg.vocab_size, 6), max_new=4)
+    assert len(cluster.router.decisions) == 5
+    cluster.clear_completed()            # nothing done yet: log still clears
+    assert len(cluster.router.decisions) == 0
+    assert sum(cluster.router.route_counts.values()) == 5
+
+
+def test_stats_nan_before_any_completion(granite, plan_cfg):
+    """No completed requests -> latency percentiles are nan (never the
+    fake 0.0 the old np.zeros(1) placeholder produced), aggregate and
+    per-tier alike."""
+    import math
+    cfg, m, params = granite
+    cluster = TieredServingCluster(
+        m, params, Scenario.default(), plan_cfg=plan_cfg,
+        cfg=ClusterConfig(base_slots=2, max_len=32))
+    st = cluster.stats()
+    assert math.isnan(st["p50_latency_s"])
+    assert math.isnan(st["p95_latency_s"])
+    for ts in st["tiers"].values():
+        assert math.isnan(ts["p50_latency_s"])
+        assert math.isnan(ts["p95_latency_s"])
+    # a routed-but-incomplete request must not unmask the percentiles
+    rs = np.random.RandomState(0)
+    cluster.submit(rs.randint(0, cfg.vocab_size, 6), max_new=4)
+    assert math.isnan(cluster.stats()["p50_latency_s"])
+
+
+def test_slot_avail_booking_released_on_early_eos(granite, plan_cfg):
+    """The admission-time slot booking assumes full ``max_new`` decode; a
+    request that stops at its first token (EOS) must release the unused
+    reservation so ``queue_costs`` doesn't drift pessimistic."""
+    cfg, m, params = granite
+    rs = np.random.RandomState(5)
+    prompt = rs.randint(0, cfg.vocab_size, 5).astype(np.int32)
+    logits, _ = m.prefill(params, {"tokens": jnp.asarray(prompt)[None]})
+    eos = int(jnp.argmax(logits[0, -1]))     # the first sampled token
+    cluster = TieredServingCluster(
+        m, params, Scenario.default(), plan_cfg=plan_cfg,
+        cfg=ClusterConfig(base_slots=2, max_len=64))
+    cr = cluster.submit(prompt, max_new=32, eos_id=eos)
+    tr = cluster.tiers[cr.decision.tier]
+    tok = tr.tok_cost[""]
+    booked = cr.booked_until
+    assert booked >= (prompt.size + 32) * tok    # full-service reservation
+    cluster.run()
+    assert cr.done and cr.req.out_tokens == [eos]
+    # the unused decode tail came back: the earliest slot frees at the tier
+    # clock, not 32 tokens later
+    sa = tr.slot_avail[""]
+    assert min(sa) <= tr.vclock + 1e-9
+    assert booked - tr.vclock > 5 * tok          # the release was material
+    assert cluster.queue_costs(arrival=tr.vclock)[tr.name] < 1e-9
+
+
+def test_stacked_bookings_release_without_double_counting(granite, plan_cfg):
+    """Three bookings stacked on ONE slot, each completing early: every
+    release must subtract only the releasing request's own remaining slack.
+    Re-deriving overhang from the raw ``booked_until`` would subtract
+    earlier releases again and turn ``queue_costs`` optimistic."""
+    from repro.core.paradigms import AdmissionDecision
+    from repro.serving import ClusterRequest, Request
+    cfg, m, params = granite
+    cluster = TieredServingCluster(
+        m, params, Scenario.default(), plan_cfg=plan_cfg,
+        cfg=ClusterConfig(base_slots=1, max_len=32))
+    tr = cluster.tiers["device"]
+    assert len(tr.slot_avail[""]) == 1           # everything stacks
+
+    def booked(service):
+        cr = ClusterRequest(Request(tokens=np.zeros(1, np.int32)), 0.0,
+                            None,
+                            AdmissionDecision("device", "device",
+                                              "device-local", 0.0, 0.0),
+                            0.0)
+        cr.booked_model = ""
+        cr.booked_slot, cr.booked_until, cr.booked_released0 = \
+            tr.book("", 0.0, service)
+        return cr
+
+    a, b, c = booked(10.0), booked(10.0), booked(10.0)
+    assert tr.slot_avail[""] == [30.0]
+    tr.vclock = 2.0                              # A finishes 8 early
+    cluster._reconcile_booking(tr, a)
+    assert tr.slot_avail[""] == [22.0]           # B@12, C@22
+    tr.vclock = 4.0                              # B finishes at 4 (end 12)
+    cluster._reconcile_booking(tr, b)
+    assert tr.slot_avail[""] == [14.0], \
+        "B must release only its own 8s of slack (double-counting A's " \
+        "release would leave 6.0)"
+    tr.vclock = 6.0                              # C finishes at 6 (end 14)
+    cluster._reconcile_booking(tr, c)
+    assert tr.slot_avail[""] == [6.0]            # slot free at the clock
 
 
 def test_serve_tiered_poisson_smoke():

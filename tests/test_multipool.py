@@ -1,0 +1,239 @@
+"""Multi-model slot-pool invariants.
+
+The multi-model serving PR's acceptance claims: a multiplexed pool's
+per-model outputs are bit-identical to dedicated single-model schedulers
+(greedy and rng-seeded sampling), per-model jit caches stay <= 1 per stage
+under slot churn, the prefill-fairness budget is enforced across models,
+exit counters are isolated per model, and the router/cluster place a heavy
+and a light model on different tiers within the same trace."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Scenario
+from repro.models import Model
+from repro.serving import (ClusterConfig, ContinuousBatchScheduler,
+                           AdmissionRouter, ModelGroup, MultiModelScheduler,
+                           Request, SchedulerConfig, ServeConfig,
+                           ServingEngine, TieredServingCluster)
+
+# an attention arch, an SSM arch, and a shared-attention hybrid
+TRIO = ("granite-3-2b-smoke", "xlstm-350m-smoke", "zamba2-1.2b-smoke")
+
+
+@pytest.fixture(scope="module")
+def trio():
+    out = []
+    for i, arch in enumerate(TRIO):
+        cfg = get_config(arch)
+        m = Model(cfg)
+        out.append((arch, m, m.init(jax.random.PRNGKey(i))))
+    return out
+
+
+def _mixed_requests(entries, rs, per_model=2, max_new=6):
+    """Alternating-model request list with mixed prompt lengths."""
+    reqs = []
+    for j in range(per_model):
+        for name, m, _ in entries:
+            plen = int(rs.randint(3, 12))
+            reqs.append(Request(
+                tokens=rs.randint(0, m.cfg.vocab_size, plen).astype(np.int32),
+                max_new=max_new, model=name))
+    return reqs
+
+
+def _clone(reqs):
+    return [Request(tokens=r.tokens.copy(), max_new=r.max_new,
+                    model=r.model) for r in reqs]
+
+
+def _sched_cfg(**kw):
+    base = dict(n_slots=2, max_len=24, prefill_chunk=4)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def test_multi_pool_matches_dedicated_greedy(trio):
+    """All three families through ONE pool: per-model outputs bit-identical
+    to dedicated single-model schedulers fed the same requests, per-model
+    jit caches <= 1 per stage despite slot churn, and per-model exit-counter
+    totals matching per-model tokens served."""
+    rs = np.random.RandomState(0)
+    reqs = _mixed_requests(trio, rs, per_model=2)
+    pool = MultiModelScheduler(ModelGroup(trio), _sched_cfg())
+    for r in _clone(reqs):
+        pool.submit(r)
+    pool.run()
+    assert len(pool.completed) == len(reqs)
+    got = {name: [r.out_tokens for r in pool.completed if r.model == name]
+           for name, _, _ in trio}
+
+    for name, m, params in trio:
+        ded = ContinuousBatchScheduler(m, params, _sched_cfg())
+        for r in _clone([r for r in reqs if r.model == name]):
+            ded.submit(r)
+        ded.run()
+        want = [r.out_tokens for r in ded.completed]
+        assert got[name] == want, f"{name}: multiplexing changed outputs"
+
+    sizes = pool.jit_cache_sizes()
+    if -1 not in sizes.values():
+        assert all(v <= 1 for v in sizes.values()), sizes
+        for name, _, _ in trio:
+            assert sizes[f"{name}/prefill"] == 1
+    for name, _, _ in trio:
+        arena = pool.pools[name]
+        assert arena.flush_counters().sum() == arena.tokens_served == 12
+
+
+def test_multi_pool_matches_dedicated_sampled(trio):
+    """rng-seeded sampling: the multiplexed pool's per-arena fold counters
+    advance exactly as a dedicated scheduler's, so the sampled tokens are
+    identical too."""
+    entries = trio[:2]
+    rs = np.random.RandomState(1)
+    reqs = _mixed_requests(entries, rs, per_model=2)
+    rng = jax.random.PRNGKey(7)
+    pool = MultiModelScheduler(ModelGroup(entries),
+                               _sched_cfg(temperature=0.8))
+    for r in _clone(reqs):
+        pool.submit(r)
+    pool.run(rng=rng)
+    got = {name: [r.out_tokens for r in pool.completed if r.model == name]
+           for name, _, _ in entries}
+    for name, m, params in entries:
+        ded = ContinuousBatchScheduler(m, params,
+                                       _sched_cfg(temperature=0.8))
+        for r in _clone([r for r in reqs if r.model == name]):
+            ded.submit(r)
+        ded.run(rng=rng)
+        assert got[name] == [r.out_tokens for r in ded.completed], \
+            f"{name}: sampled outputs diverged"
+
+
+def test_multi_pool_cross_model_prefill_fairness(trio):
+    """The prefill budget is pool-wide: with max_prefill_chunks_per_step=1,
+    one model's long admission spreads over many polls while the OTHER
+    model's decode keeps stepping underneath it, and no poll ever runs more
+    than the budgeted chunk count summed across models."""
+    (name_a, ma, pa), (name_b, mb, pb) = trio[:2]
+    pool = MultiModelScheduler(
+        ModelGroup(trio[:2]),
+        _sched_cfg(max_len=48, max_prefill_chunks_per_step=1))
+    rs = np.random.RandomState(2)
+    pool.submit(Request(tokens=rs.randint(0, ma.cfg.vocab_size, 4),
+                        max_new=16, model=name_a))
+    while not pool.pools[name_a].active.any():   # A admits and starts decode
+        pool.poll()
+    pool.submit(Request(tokens=rs.randint(0, mb.cfg.vocab_size, 16),
+                        max_new=4, model=name_b))  # 16 tokens = 4 chunks
+    reports = []
+    while pool.has_work:
+        reports.append(pool.poll())
+    pool.flush_counters()
+    b_prefill = [r for r in reports
+                 if r.per_model.get(name_b)
+                 and r.per_model[name_b].prefill_chunks]
+    assert len(b_prefill) >= 4                  # spread over >= 4 polls
+    assert all(r.prefill_chunks <= 1 for r in reports)   # pool-wide budget
+    # A's decode kept running under B's admission
+    assert all(r.per_model[name_a].decode_stepped for r in b_prefill
+               if name_a in r.per_model)
+    assert any(r.per_model.get(name_a) and r.per_model[name_a].decode_stepped
+               for r in b_prefill)
+
+
+def test_multi_pool_exit_counter_isolation(trio):
+    """Serving one model must not touch another model's exit counters: the
+    arenas' device-side histograms are disjoint buffers."""
+    (name_a, ma, _), (name_b, mb, _) = trio[:2]
+    pool = MultiModelScheduler(ModelGroup(trio[:2]), _sched_cfg())
+    rs = np.random.RandomState(3)
+    pool.submit(Request(tokens=rs.randint(0, ma.cfg.vocab_size, 5),
+                        max_new=7, model=name_a))
+    pool.run()
+    counts = pool.flush_counters()
+    assert counts[name_a].sum() == 7
+    assert counts[name_b].sum() == 0            # untouched arena
+    pool.submit(Request(tokens=rs.randint(0, mb.cfg.vocab_size, 4),
+                        max_new=5, model=name_b))
+    pool.run()
+    counts = pool.flush_counters()
+    assert counts[name_a].sum() == 7            # A unchanged by B's trace
+    assert counts[name_b].sum() == 5
+    st = pool.exit_stats()
+    assert abs(sum(v for k, v in st[name_a].items()
+                   if k.endswith("_frac")) - 1.0) < 1e-9
+
+
+def test_router_routes_heavy_and_light_models_apart():
+    """Per-model cost graphs: the same prompt routes a heavy model's
+    request to the cloud pool and a light model's to a lightweight tier
+    within the same trace (no model execution involved)."""
+    r = AdmissionRouter({"heavy": get_config("yi-6b"),
+                         "light": get_config("xlstm-350m")},
+                        Scenario.default())
+    d_heavy = r.route(512, 32, model="heavy")
+    d_light = r.route(512, 32, model="light")
+    assert d_heavy.tier == "cloud"
+    assert d_light.tier in ("device", "edge")
+    assert r.route_counts_by_model["heavy"]["cloud"] == 1
+    assert sum(r.route_counts_by_model["light"].values()) == 1
+
+
+def test_cluster_multi_model_trace(trio):
+    """A mixed-model trace through the tiered cluster: every request
+    completes on its own model's arena, per-model stats add up, and no
+    arena retraces."""
+    entries = trio[:2]
+    group = ModelGroup(entries)
+    plan = {entries[0][0]: get_config("yi-6b"),
+            entries[1][0]: get_config("xlstm-350m")}
+    cluster = TieredServingCluster(
+        group, scenario=Scenario.default(), plan_cfg=plan,
+        cfg=ClusterConfig(base_slots=2, max_len=48, prefill_chunk=8))
+    rs = np.random.RandomState(4)
+    max_new = 4
+    for i in range(6):
+        name, m, _ = entries[i % 2]
+        cluster.submit(rs.randint(0, m.cfg.vocab_size, int(rs.randint(3, 9))),
+                       max_new=max_new, arrival=0.05 * i, model=name)
+    cluster.run()
+    st = cluster.stats()
+    assert st["completed"] == 6
+    assert not math.isnan(st["p50_latency_s"])
+    for name, _, _ in entries:
+        ms = st["models"][name]
+        assert ms["routed"] == 3
+        assert ms["tokens"] == 3 * max_new
+        assert sum(ms["route_counts"].values()) == 3
+    for cr in cluster.requests:
+        assert cr.done and len(cr.req.out_tokens) == max_new
+    for tier, sizes in cluster.jit_cache_sizes().items():
+        if -1 not in sizes.values():
+            assert all(v <= 1 for v in sizes.values()), (tier, sizes)
+
+
+def test_engine_generate_multi_matches_single_engines(trio):
+    """The engine's multi-model entry point reproduces per-model outputs of
+    dedicated single-model engines (greedy), with per-model exit counters
+    adding up."""
+    entries = trio[:2]
+    group = ModelGroup(entries)
+    eng = ServingEngine(group, scfg=ServeConfig(exit_threshold=0.6))
+    prompts = {name: np.asarray(jax.random.randint(
+                   jax.random.PRNGKey(i), (2, 5), 0, m.cfg.vocab_size))
+               for i, (name, m, _) in enumerate(entries)}
+    out = eng.generate_multi(prompts, max_new=6)
+    assert set(out) == set(prompts)
+    for name, m, params in entries:
+        single = ServingEngine(m, params, ServeConfig(exit_threshold=0.6))
+        want = np.asarray(single.generate(prompts[name], max_new=6))
+        assert (np.asarray(out[name]) == want).all(), name
+        assert eng.exit_counts_by_model[name].sum() == 12
+        assert eng.tokens_served_by_model[name] == 12
+    assert eng.tokens_served == 24
