@@ -7,8 +7,10 @@
 #   make bench-smoke tiered (cloud/edge/device) serving benchmark, tiny trace
 #   make bench-exit  early-exit threshold sweep (tok/s + p50 vs threshold)
 #   make bench-multi multi-model pool vs swap-serving (mixed-model trace)
+#   make bench-migrate  executed prefill/decode splits + tier-outage
+#                    failover-by-migration vs requeue-and-recompute
 .PHONY: test test-fast lint check serve-bench bench-smoke bench-exit \
-	bench-multi
+	bench-multi bench-migrate
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -33,3 +35,6 @@ bench-exit:
 
 bench-multi:
 	python benchmarks/multi_model_bench.py
+
+bench-migrate:
+	python benchmarks/migration_bench.py

@@ -1,0 +1,216 @@
+"""Cross-tier migration: executed splits + failover-by-migration.
+
+Two claims, both on the virtual (scenario) clocks with REAL execution:
+
+* **Splits execute.**  Under a split-friendly scenario (fat device<->edge
+  LAN, dead WAN, congested edge) a long request's prefill runs in the edge
+  pool, its slot snapshot crosses the LAN (int8-quantized when
+  ``compression_decision`` says the link pays for it), and the device pool
+  decodes it — the transfer charged from the snapshot's MEASURED bytes.
+  Raw-handoff outputs are asserted bit-identical to an unsplit pool.
+
+* **Failover beats recompute.**  The edge tier dies mid-trace
+  (``Scenario.tier_outage`` at a CALIBRATED moment: a dry run pins the
+  virtual timestamp where the edge slots are mid-decode).  Draining the
+  in-flight slots by export -> handoff -> import finishes the trace with
+  lower p50 than the requeue-and-recompute baseline, which pays every
+  drained request's prompt prefill again and regenerates from token zero.
+
+    PYTHONPATH=src python benchmarks/migration_bench.py \\
+        [--requests 8] [--max-new 12]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0])           # repo root
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from benchmarks.common import record                     # noqa: E402
+from repro.configs import get_config                     # noqa: E402
+from repro.core import LINKS, Scenario                   # noqa: E402
+from repro.core.cost_model import LinkProfile            # noqa: E402
+from repro.models import Model                           # noqa: E402
+from repro.serving import (ClusterConfig,                # noqa: E402
+                           ContinuousBatchScheduler, Request,
+                           SchedulerConfig, TieredServingCluster)
+
+RUN_ARCH = "granite-3-2b-smoke"
+PLAN_ARCH = "granite-3-2b"
+
+
+def _split_scenario() -> Scenario:
+    """LAN-class device<->edge link, unusable WAN: the prefill/decode split
+    candidate wins for long prompts once the edge pool is congested."""
+    return dataclasses.replace(
+        Scenario.default(),
+        dev_edge=LINKS["lan"],
+        dev_cloud=LinkProfile("wan-down", 1e3, 10.0),
+        edge_cloud=LinkProfile("wan-down", 1e3, 10.0))
+
+
+def split_section(m, params, plan_cfg, kv_handoff: str, seed: int):
+    """One congested-edge trace with a split-routed long prompt; returns
+    (split request, cluster stats)."""
+    cluster = TieredServingCluster(
+        m, params, _split_scenario(), plan_cfg=plan_cfg,
+        cfg=ClusterConfig(base_slots=2, max_len=192, prefill_chunk=16,
+                          kv_handoff=kv_handoff))
+    rs = np.random.RandomState(seed)
+    for _ in range(3):                 # congest the edge pool
+        cluster.submit(rs.randint(0, plan_cfg.vocab_size, 150), max_new=4,
+                       arrival=0.0)
+    prompt = rs.randint(0, plan_cfg.vocab_size, 128)
+    cr = cluster.submit(prompt, max_new=4, arrival=0.0)
+    assert cr.decision.is_split, "scenario must elicit a split decision"
+    cluster.run()
+    assert cr.done and cr.migrations == 1
+    # unsplit reference: the same request alone on a dedicated pool
+    ref = ContinuousBatchScheduler(
+        m, params, SchedulerConfig(n_slots=2, max_len=192,
+                                   prefill_chunk=16))
+    r0 = Request(tokens=prompt.copy(), max_new=4)
+    ref.submit(r0)
+    ref.run()
+    if kv_handoff == "raw":
+        assert r0.out_tokens == cr.req.out_tokens, \
+            "raw split handoff changed the greedy output"
+    return cr, cluster.stats()
+
+
+def failover_section(m, params, plan_cfg, *, requests: int, max_new: int,
+                     seed: int):
+    """Same trace, edge dies mid-decode: migrate vs requeue.
+
+    The outage time is CALIBRATED, not guessed: a dry run (identical up to
+    the outage — same scenario hardware, same deterministic poll sequence)
+    finds the virtual timestamp at which the edge pool's slots are all
+    mid-request; the replay kills the tier there, so the drain provably
+    catches in-flight decode state — the case the two failover policies
+    disagree on."""
+    rs = np.random.RandomState(seed)
+    prompts = [rs.randint(0, plan_cfg.vocab_size, int(rs.randint(6, 13)))
+               for _ in range(requests)]
+
+    def make(scenario, migrate):
+        cl = TieredServingCluster(
+            m, params, scenario, plan_cfg=plan_cfg,
+            cfg=ClusterConfig(base_slots=8, max_len=64, prefill_chunk=8,
+                              kv_handoff="raw", migrate_on_outage=migrate))
+        crs = [cl.submit(p.copy(), max_new=max_new, deadline=0.1,
+                         arrival=i * 0.002)
+               for i, p in enumerate(prompts)]
+        return cl, crs
+
+    # dry run: find the edge pool mid-decode with as many in-flight slots
+    # as the trace ever gives it (every active slot past its first token,
+    # none near completion) — the drain then has real state to move
+    cl, _ = make(Scenario.default(), True)
+    at, best = None, 0
+    while cl.has_work:
+        cl.poll()
+        sched = cl.tiers["edge"].sched
+        act = sched.active
+        if act.sum() > best:
+            steps = sched.steps_taken[act]
+            if steps.min() >= 1 and steps.max() <= max_new // 2:
+                at, best = float(cl.virtual_now()), int(act.sum())
+    assert at is not None, "trace never decodes on the edge tier"
+
+    def run(migrate: bool):
+        cl, crs = make(Scenario.tier_outage("edge", at=at), migrate)
+        cl.run()
+        st = cl.stats()
+        assert st["completed"] == requests
+        return crs, st
+
+    crs_m, st_m = run(True)
+    crs_r, st_r = run(False)
+    assert st_m["migration"]["outage_migrations"] >= 1, \
+        "calibrated outage must catch in-flight decode slots"
+    assert st_r["migration"]["requeued"] >= 1
+    return at, crs_m, st_m, crs_r, st_r
+
+
+def run(requests: int = 8, max_new: int = 12, seed: int = 0) -> dict:
+    plan_cfg = get_config(PLAN_ARCH)
+    cfg = get_config(RUN_ARCH)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(seed))
+
+    print("split-executed serving (prefill edge -> handoff -> decode "
+          "device):")
+    cr_raw, _ = split_section(m, params, plan_cfg, "raw", seed)
+    cr_auto, st_auto = split_section(m, params, plan_cfg, "auto", seed)
+    mig = st_auto["migration"]
+    ratio = mig["bytes_raw"] / max(mig["bytes_moved"], 1.0)
+    print(f"  raw handoff : {cr_raw.handoff_bytes / 1024:7.1f} KiB "
+          f"transfer {cr_raw.handoff_time * 1e3:6.2f} ms "
+          f"(outputs == unsplit pool)")
+    print(f"  auto handoff: {cr_auto.handoff_bytes / 1024:7.1f} KiB "
+          f"transfer {cr_auto.handoff_time * 1e3:6.2f} ms "
+          f"(int8={cr_auto.handoff_compressed}, {ratio:.2f}x smaller)")
+
+    at, crs_m, st_m, crs_r, st_r = failover_section(
+        m, params, plan_cfg, requests=requests, max_new=max_new, seed=seed)
+    print(f"\nfailover: edge dies at t={at * 1e3:.1f}ms (calibrated "
+          f"mid-decode; {requests} requests, max_new={max_new}):")
+    p50_m, p50_r = st_m["p50_latency_s"], st_r["p50_latency_s"]
+    moved = [i for i, cr in enumerate(crs_m) if cr.migrations]
+    drain_m = float(np.mean([crs_m[i].latency for i in moved]))
+    drain_r = float(np.mean([crs_r[i].latency for i in moved]))
+    print(f"  migrate : p50 {p50_m * 1e3:7.2f} ms   drained-req mean "
+          f"{drain_m * 1e3:7.2f} ms  "
+          f"({st_m['migration']['outage_migrations']} slots moved, "
+          f"{st_m['migration']['bytes_moved'] / 1024:.0f} KiB)")
+    print(f"  requeue : p50 {p50_r * 1e3:7.2f} ms   drained-req mean "
+          f"{drain_r * 1e3:7.2f} ms  "
+          f"({st_r['migration']['requeued']} recomputed from scratch)")
+    print(f"  failover-by-migration p50 {p50_r / p50_m:.2f}x lower, "
+          f"drained requests {drain_r / drain_m:.2f}x faster; resilience "
+          f"gain {st_m['resilience']['gain']:+.2f}")
+    assert p50_m < p50_r, \
+        f"migration must beat requeue-and-recompute (p50 {p50_m} vs {p50_r})"
+    assert drain_m < drain_r
+    # outputs of the migrated run match the requeued run token-for-token:
+    # both are greedy over the same prompts, whatever the failover path
+    match = sum(a.req.out_tokens == b.req.out_tokens
+                for a, b in zip(crs_m, crs_r))
+    assert match == requests, f"failover changed outputs ({match}/{requests})"
+
+    record("serving/migration_failover_p50",
+           p50_m * 1e6, derived=f"vs_requeue={p50_r / p50_m:.2f}x")
+    record("serving/migration_requeue_baseline_p50", p50_r * 1e6)
+    record("serving/migration_split_handoff",
+           cr_auto.handoff_time * 1e6,
+           derived=f"bytes={cr_auto.handoff_bytes:.0f}")
+    return {
+        "split_handoff_bytes_raw": cr_raw.handoff_bytes,
+        "split_handoff_bytes_auto": cr_auto.handoff_bytes,
+        "split_handoff_compressed": bool(cr_auto.handoff_compressed),
+        "failover_p50_s": p50_m,
+        "requeue_p50_s": p50_r,
+        "failover_speedup_p50": p50_r / p50_m,
+        "drained_mean_s": drain_m,
+        "drained_requeue_mean_s": drain_r,
+        "outage_migrations": st_m["migration"]["outage_migrations"],
+        "bytes_moved": st_m["migration"]["bytes_moved"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(args.requests, args.max_new, args.seed)
+
+
+if __name__ == "__main__":
+    main()

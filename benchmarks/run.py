@@ -1,18 +1,56 @@
 """Benchmark runner — one function per survey table + runtime micros.
 
 Prints per-table reproductions (with survey-band assertions), ends with the
-``name,us_per_call,derived`` CSV, and writes ``BENCH_serving.json``: the
-serving perf-trajectory artifact (decode tok/s, p50, deadline-hit-rate for
-the smoke serving benches) that CI archives so regressions across PRs show
-up as a number, not a vibe.
+``name,us_per_call,derived`` CSV, and maintains ``BENCH_serving.json``: the
+serving perf-trajectory artifact.  The file is APPENDED, not overwritten —
+each run upserts one trajectory entry keyed by the git SHA (so re-runs on
+the same commit replace their own entry instead of duplicating it) and
+``latest`` mirrors the newest entry.  CI archives the file, so regressions
+across PRs show up as a number series, not a vibe.
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 
 sys.path.insert(0, __file__.rsplit("/", 2)[0])           # repo root
 sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+ARTIFACT = "BENCH_serving.json"
+
+
+def _git_sha() -> str:
+    """Short HEAD sha, suffixed ``-dirty`` when the tree has local edits —
+    a dirty-tree run must not overwrite the committed sha's entry with
+    numbers produced by different code."""
+    try:
+        sha = subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], text=True,
+            stderr=subprocess.DEVNULL).strip()
+        dirty = subprocess.check_output(
+            ["git", "status", "--porcelain"], text=True,
+            stderr=subprocess.DEVNULL).strip()
+        return sha + ("-dirty" if dirty else "")
+    except Exception:                  # pragma: no cover - no git in env
+        return "unknown"
+
+
+def _load_trajectory() -> list:
+    """Prior entries; a pre-trajectory flat artifact becomes the first."""
+    if not os.path.exists(ARTIFACT):
+        return []
+    try:
+        with open(ARTIFACT) as f:
+            prev = json.load(f)
+    except (OSError, ValueError):      # pragma: no cover - corrupt artifact
+        return []
+    if isinstance(prev, dict) and "trajectory" in prev:
+        return list(prev["trajectory"])
+    if isinstance(prev, dict) and prev:
+        return [dict(prev, sha="pre-trajectory")]
+    return []
 
 
 def main() -> None:
@@ -21,7 +59,7 @@ def main() -> None:
                             table5_cloud_edge_device, table6_device_device,
                             runtime_micro, serving_bench,
                             tiered_serving_bench, exit_bench,
-                            multi_model_bench)
+                            multi_model_bench, migration_bench)
     from benchmarks.common import emit_csv
 
     table1_models.run()
@@ -34,8 +72,9 @@ def main() -> None:
     # serving benchmarks, smoke-sized so the runner stays CI-friendly:
     # single-pool continuous batching vs sequential, paradigm-aware tiered
     # routing vs a cloud-only pool, the early-exit threshold sweep
-    # (depth-segmented decode: tok/s rises as exits truncate compute), then
-    # the multi-model pool vs swap-serving
+    # (depth-segmented decode: tok/s rises as exits truncate compute), the
+    # multi-model pool vs swap-serving, then real cross-tier migration
+    # (executed splits + failover-by-migration vs requeue-and-recompute)
     print()
     serving = serving_bench.run(requests=6, slots=2, prompt_len=8, max_new=8)
     print()
@@ -47,9 +86,12 @@ def main() -> None:
     multi = multi_model_bench.run(requests=8, slots=4, prompt_len=8,
                                   max_new=8)
     print()
+    migration = migration_bench.run(requests=8, max_new=12)
+    print()
     emit_csv()
 
-    artifact = {
+    entry = {
+        "sha": _git_sha(),
         "continuous_batching": serving,
         "tiered": {
             "p50_s": st_def["p50_latency_s"],
@@ -61,11 +103,16 @@ def main() -> None:
         },
         "exit_sweep": exits,
         "multi_model": multi,
+        "migration": migration,
     }
-    with open("BENCH_serving.json", "w") as f:
-        json.dump(artifact, f, indent=2)
+    trajectory = [e for e in _load_trajectory()
+                  if e.get("sha") != entry["sha"]]
+    trajectory.append(entry)
+    with open(ARTIFACT, "w") as f:
+        json.dump({"latest": entry, "trajectory": trajectory}, f, indent=2)
         f.write("\n")
-    print("wrote BENCH_serving.json")
+    print(f"wrote {ARTIFACT} ({len(trajectory)} trajectory entries, "
+          f"latest sha {entry['sha']})")
 
 
 if __name__ == '__main__':

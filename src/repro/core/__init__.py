@@ -2,14 +2,15 @@ from repro.core.cost_model import (TABLE2, LINKS, TPU_V5E, CostGraph,
                                    DeviceProfile, LinkProfile,
                                    build_cost_graph, kv_cache_bytes_per_token)
 from repro.core.paradigms import (AdmissionDecision, CollaborationPlan,
-                                  Scenario, admission_decision, plan_all,
-                                  plan_cloud_device, plan_edge_device,
-                                  plan_cloud_edge_device, plan_device_device)
+                                  Scenario, TierOutage, admission_decision,
+                                  plan_all, plan_cloud_device,
+                                  plan_edge_device, plan_cloud_edge_device,
+                                  plan_device_device)
 
 __all__ = [
     "TABLE2", "LINKS", "TPU_V5E", "CostGraph", "DeviceProfile", "LinkProfile",
     "build_cost_graph", "kv_cache_bytes_per_token", "AdmissionDecision",
-    "CollaborationPlan", "Scenario", "admission_decision", "plan_all",
-    "plan_cloud_device", "plan_edge_device", "plan_cloud_edge_device",
-    "plan_device_device",
+    "CollaborationPlan", "Scenario", "TierOutage", "admission_decision",
+    "plan_all", "plan_cloud_device", "plan_edge_device",
+    "plan_cloud_edge_device", "plan_device_device",
 ]

@@ -72,3 +72,16 @@ def compression_decision(boundary_bytes: float, device: DeviceProfile,
     total_comp = comp_t + overhead
     return CompressionDecision(total_comp < raw_t, bits, raw_t, total_comp,
                                overhead, raw_t / max(total_comp, 1e-12))
+
+
+def measured_tx_time(payload_bytes: float, link: LinkProfile, *,
+                     quant_overhead: float = 0.0) -> float:
+    """Transfer time of an ACTUAL payload.
+
+    ``compression_decision`` predicts from an analytic byte estimate; once
+    the payload exists (e.g. an exported ``SlotSnapshot``) the link must be
+    charged for the bytes it really carries — ``payload_bytes`` summed over
+    the shipped arrays — plus the quantization compute the sender spent
+    producing them (0 for a raw handoff).  This is the virtual/real-gap
+    closure: planners estimate, clocks pay measured."""
+    return link.tx_time(payload_bytes) + quant_overhead

@@ -36,6 +36,16 @@ from repro.core.resilience import ResilienceReport, resilience_report
 
 
 @dataclass(frozen=True)
+class TierOutage:
+    """A scheduled tier failure: ``tier`` goes dark once the serving
+    cluster's virtual clock reaches ``at`` seconds.  The runtime response
+    (deepFogGuard-style graceful degradation, survey §5) is a drain: the
+    dead tier's in-flight slots are exported and re-imported elsewhere."""
+    tier: str
+    at: float
+
+
+@dataclass(frozen=True)
 class Scenario:
     """A hardware scenario the paradigms plan against."""
     device: DeviceProfile
@@ -46,6 +56,8 @@ class Scenario:
     edge_cloud: LinkProfile
     d2d: LinkProfile
     peers: Tuple[DeviceProfile, ...] = ()
+    # scheduled tier failures the serving cluster reacts to mid-trace
+    outages: Tuple[TierOutage, ...] = ()
 
     @staticmethod
     def default() -> "Scenario":
@@ -78,6 +90,16 @@ class Scenario:
         sc = Scenario.default()
         return dataclasses.replace(
             sc, dev_cloud=LinkProfile("wan-degraded", 1 * 1e6 / 8, 0.5))
+
+    @staticmethod
+    def tier_outage(tier: str = "edge", at: float = 0.05) -> "Scenario":
+        """Default hardware, but ``tier`` dies once the serving cluster's
+        virtual clock reaches ``at`` seconds (mid-trace for the smoke
+        workloads) — the survey's resilience scenario (§5, deepFogGuard/
+        ResiliNet): in-flight requests on the dead tier must be drained to
+        the surviving tiers without recomputing their prefill."""
+        sc = Scenario.default()
+        return dataclasses.replace(sc, outages=(TierOutage(tier, at),))
 
 
 @dataclass
@@ -232,7 +254,9 @@ def admission_decision(graph: CostGraph, sc: Scenario, *,
                        prefill_tokens: Optional[int] = None,
                        decode_tokens: int = 0,
                        kv_bytes_per_token: float = 0.0,
-                       allow_split: bool = True) -> AdmissionDecision:
+                       allow_split: bool = True,
+                       exclude: Optional[frozenset] = None
+                       ) -> AdmissionDecision:
     """Pick the serving tier for ONE request at admission time.
 
     Candidates come from the paradigm planners over ``graph`` (the request's
@@ -243,12 +267,17 @@ def admission_decision(graph: CostGraph, sc: Scenario, *,
     inter-tier link, decode on a cheaper tier.  ``queue_cost[tier]`` is the
     router's estimate of queueing delay at each tier's slot pool and is
     charged to the candidate's decode tier, so a congested pool sheds load.
+    ``exclude`` drops every candidate touching a named tier (prefill or
+    decode side) — dead tiers after an outage must not win placement.
     """
     qc = queue_cost or {}
+    dead = exclude or frozenset()
     dl = float("inf") if deadline is None else deadline
     cands: List[AdmissionDecision] = []
 
     def add(tier, paradigm, lat, *, prefill_tier=None, transfer=0.0, **det):
+        if tier in dead or (prefill_tier or tier) in dead:
+            return
         eff = lat + qc.get(tier, 0.0)
         cands.append(AdmissionDecision(
             tier, prefill_tier or tier, paradigm, lat, eff,
@@ -303,6 +332,7 @@ def admission_decision(graph: CostGraph, sc: Scenario, *,
                 lat, prefill_tier=pf_tier, transfer=transfer,
                 kv_bytes=kv_bytes)
 
+    assert cands, f"no admissible tier (excluded: {sorted(dead)})"
     feas = [c for c in cands if c.feasible]
     pool = feas or cands
     return min(pool, key=lambda c: c.effective_latency)

@@ -29,8 +29,16 @@ def _dequant_kernel(q_ref, scale_ref, x_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
-def quantize_rows(x, *, block_t: int = 256, interpret: bool = True):
-    """x [T, D] -> (q int8 [T, D], scale fp32 [T, 1]).  T % block_t == 0."""
+def quantize_rows(x, *, block_t: int = 256, interpret: bool | None = None):
+    """x [T, D] -> (q int8 [T, D], scale fp32 [T, 1]).  T % block_t == 0.
+
+    T, D padded to MXU-legal multiples by the wrapper in ops.py; this
+    function requires exact tiling.  ``interpret=None`` auto-detects the
+    backend: the kernel body runs interpreted everywhere except on a real
+    TPU, where the same call compiles to Mosaic.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     tsz, d = x.shape
     assert tsz % block_t == 0
     q, scale = pl.pallas_call(
@@ -48,8 +56,13 @@ def quantize_rows(x, *, block_t: int = 256, interpret: bool = True):
 
 @functools.partial(jax.jit, static_argnames=("block_t", "dtype", "interpret"))
 def dequantize_rows(q, scale, *, block_t: int = 256, dtype=jnp.bfloat16,
-                    interpret: bool = True):
-    """(q int8 [T, D], scale [T, 1]) -> x [T, D] `dtype`."""
+                    interpret: bool | None = None):
+    """(q int8 [T, D], scale [T, 1]) -> x [T, D] `dtype`.
+
+    ``interpret=None`` auto-detects the backend like ``quantize_rows``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     tsz, d = q.shape
     assert tsz % block_t == 0
     return pl.pallas_call(

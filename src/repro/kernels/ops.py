@@ -68,36 +68,51 @@ def exit_head_entropy(x, w, *, block_t: int = 128, block_v: int = 512,
 
 
 def compress_rows(x, *, interpret: bool | None = None):
-    """x [..., D] -> (q int8 [..., D], scale fp32 [..., 1])."""
-    interpret = _on_cpu() if interpret is None else interpret
+    """x [..., D] -> (q int8 [..., D], scale fp32 [..., 1]).
+
+    ``interpret=None`` auto-detects the backend (interpret only off-TPU,
+    the same way ``exit_head_entropy`` does).  On the compiled TPU path the
+    tiling is forced MXU-legal: T is padded to full 256-row tiles and D to
+    a multiple of 128.  Zero padding is exact — padded feature columns do
+    not move a row's abs-max, so scales and quantized values are unchanged.
+    """
+    interpret = _off_tpu() if interpret is None else interpret
     lead = x.shape[:-1]
     d = x.shape[-1]
     x2 = x.reshape(-1, d)
     t = x2.shape[0]
-    bt = min(256, max(8, t))
+    bt = 256 if not interpret else min(256, max(8, t))
     pad = (-t) % bt
     if pad:
         x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    if not interpret and d % 128:
+        x2 = jnp.pad(x2, ((0, 0), (0, (-d) % 128)))
     q, s = _fc.quantize_rows(x2, block_t=bt, interpret=interpret)
-    return q[:t].reshape(*lead, d), s[:t].reshape(*lead, 1)
+    return q[:t, :d].reshape(*lead, d), s[:t].reshape(*lead, 1)
 
 
 def decompress_rows(q, scale, *, dtype=jnp.bfloat16,
                     interpret: bool | None = None):
-    interpret = _on_cpu() if interpret is None else interpret
+    """(q int8 [..., D], scale [..., 1]) -> x [..., D] ``dtype``.
+
+    Backend detection and MXU-legal padding mirror ``compress_rows``
+    (padded int8 zeros dequantize to zeros and are sliced off)."""
+    interpret = _off_tpu() if interpret is None else interpret
     lead = q.shape[:-1]
     d = q.shape[-1]
     q2 = q.reshape(-1, d)
     s2 = scale.reshape(-1, 1)
     t = q2.shape[0]
-    bt = min(256, max(8, t))
+    bt = 256 if not interpret else min(256, max(8, t))
     pad = (-t) % bt
     if pad:
         q2 = jnp.pad(q2, ((0, pad), (0, 0)))
         s2 = jnp.pad(s2, ((0, pad), (0, 0)))
+    if not interpret and d % 128:
+        q2 = jnp.pad(q2, ((0, 0), (0, (-d) % 128)))
     x = _fc.dequantize_rows(q2, s2, block_t=bt, dtype=dtype,
                             interpret=interpret)
-    return x[:t].reshape(*lead, d)
+    return x[:t, :d].reshape(*lead, d)
 
 
 def flash_attention_bshd(q, k, v, *, causal: bool = True, window: int = 0,

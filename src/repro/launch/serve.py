@@ -25,7 +25,10 @@ Two modes:
   (``TieredServingCluster``); arrivals become virtual-clock timestamps and
   the report adds per-tier routed counts, utilization, and p50/p95 latency
   under the chosen ``--scenario`` (default | degraded-wan |
-  neurosurgeon-era).  ``--plan-arch``
+  neurosurgeon-era | tier-outage).  ``tier-outage`` kills the edge tier
+  mid-trace: the cluster drains its in-flight slots to the surviving
+  tiers via exported KV snapshots (no prefill re-run) and the report adds
+  the migration ledger and resilience numbers.  ``--plan-arch``
   names the config the router plans against (defaults to ``--arch`` with a
   ``-smoke`` suffix stripped, so smoke runtimes route like the real model).
 
@@ -58,8 +61,8 @@ Flags:
     --requests    [poisson] total requests in the trace
     --prefill-chunk  tokens per jitted prefill dispatch
     --tiered      [poisson] route through cloud/edge/device pools
-    --scenario    [tiered] hardware scenario preset
-                  (default | degraded-wan | neurosurgeon-era)
+    --scenario    [tiered] hardware scenario preset (default |
+                  degraded-wan | neurosurgeon-era | tier-outage)
     --plan-arch   [tiered] config the admission router plans against
     --deadline    [tiered] per-request deadline in seconds (0 = none)
     --seed        RNG seed for prompts/arrivals
@@ -84,7 +87,29 @@ from repro.serving import (ClusterConfig, ContinuousBatchScheduler,
 
 SCENARIOS = {"default": Scenario.default,
              "degraded-wan": Scenario.degraded_wan,
-             "neurosurgeon-era": Scenario.neurosurgeon_era}
+             "neurosurgeon-era": Scenario.neurosurgeon_era,
+             "tier-outage": Scenario.tier_outage}
+
+
+def _print_migration(stats):
+    """Migration/resilience lines shared by the tiered drivers."""
+    mig = stats.get("migration", {})
+    if mig.get("split_handoffs") or mig.get("outage_migrations") \
+            or mig.get("requeued"):
+        print(f"  migration: splits={mig['split_handoffs']} "
+              f"outage={mig['outage_migrations']} "
+              f"requeued={mig['requeued']} "
+              f"moved={mig['bytes_moved'] / 1024:.0f}KiB "
+              f"(raw {mig['bytes_raw'] / 1024:.0f}KiB, "
+              f"{mig['compressed']} int8) "
+              f"transfer={mig['transfer_s'] * 1e3:.1f}ms")
+    res = stats.get("resilience")
+    if res is not None:
+        print(f"  resilience: dead={stats.get('dead_tiers', [])} "
+              f"survive_prob={res['survive_prob']:.2f} "
+              f"acc_with_drain={res['expected_accuracy_with_skip']:.2f} "
+              f"vs_collapse={res['expected_accuracy_without_skip']:.2f} "
+              f"(gain {res['gain']:+.2f})")
 
 
 def _poisson_trace(rs, rate: float, n_requests: int, prompt_len: int):
@@ -353,7 +378,9 @@ def serve_multi_tiered_poisson(archs, *, rate: float = 4.0,
         for name, ts in stats["tiers"].items():
             print(f"  {name:6s} slots={ts['n_slots']} "
                   f"routed={ts['routed']:3d} util={ts['utilization']:.2f} "
-                  f"p95={ts['p95_latency_s']*1e3:.0f}ms")
+                  f"p95={ts['p95_latency_s']*1e3:.0f}ms"
+                  + (" DEAD" if ts.get("dead") else ""))
+        _print_migration(stats)
     return stats
 
 
@@ -405,7 +432,9 @@ def serve_tiered_poisson(arch: str, *, rate: float = 4.0,
                   f"util={ts['utilization']:.2f} "
                   f"occupancy={ts['slot_occupancy']:.2f} "
                   f"depth={ts['measured_depth']:.2f} "
-                  f"p95={ts['p95_latency_s']*1e3:.0f}ms")
+                  f"p95={ts['p95_latency_s']*1e3:.0f}ms"
+                  + (" DEAD" if ts.get("dead") else ""))
+        _print_migration(stats)
         print(f"  jit cache sizes (must stay 1 per pool): "
               f"{stats['jit_cache_sizes']}")
     return stats

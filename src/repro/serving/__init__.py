@@ -1,4 +1,5 @@
-"""Serving runtime: continuous-batching pools, paradigm-aware routing.
+"""Serving runtime: continuous-batching pools, paradigm-aware routing,
+real cross-tier migration.
 
 Architecture (survey §2.3 made runtime):
 
@@ -7,20 +8,36 @@ Architecture (survey §2.3 made runtime):
   (per-segment jitted stages bounded by exit heads; early exits truncate
   compute and the measured depth is reported per step), device-side exit
   counters, and a ``poll()``/``StepReport`` API so external drivers can
-  step many pools.
+  step many pools.  ``export_slot``/``import_slot`` lift one slot's
+  serving state (cache rows truncated to the written prefix, position,
+  pending token, request) out of an arena as a ``SlotSnapshot`` and
+  restore it into any same-model arena — fixed-shape jitted gather/scatter
+  over a traced slot index, so migration never recompiles, and greedy
+  decoding continues bit-identically mid-flight.
 * ``multipool``  — ``ModelGroup`` + ``MultiModelScheduler``: one pool
   multiplexing heterogeneous models (§6.3 multi-tenant edge serving) — one
   arena (cache + jitted stages + counters) per named model behind one
   queue, one ``poll()``, and a cross-model prefill-fairness budget.
 * ``router``     — ``AdmissionRouter``: per-(model, request) tier selection
   from the paradigm planners (Neurosurgeon / Edgent / DDNN / device-local /
-  prefill-decode splits) over cached per-model cost graphs.
+  prefill-decode splits) over cached per-model cost graphs; ``exclude``
+  keeps dead tiers out of the candidate set.
 * ``cluster``    — ``TieredServingCluster``: one scheduler pool per
   cloud/edge/device tier (slots derived from ``DeviceProfile``s and each
   model's KV footprint), virtual tier clocks for link/compute delays,
-  per-tier utilization and latency stats.
+  per-tier utilization and latency stats.  Splits EXECUTE instead of being
+  simulated: a split-routed request prefills in the prefill tier's pool,
+  its exported snapshot crosses the inter-tier link — int8-quantized
+  through ``kernels/feature_compress`` when
+  ``core.offload.compression_decision`` says the link pays for it — and
+  imports into the decode tier's pool, with the link clock charged the
+  snapshot's MEASURED payload bytes.  A ``Scenario.tier_outage`` drains a
+  dead tier the same way: in-flight slots migrate to survivors without
+  re-running prefill, and ``stats()`` carries the migration ledger plus
+  ``core.resilience`` numbers.
 * ``engine``     — ``ServingEngine``: the batch front-end; single-pool by
-  default, routed through the tiered cluster when given a ``Scenario``,
+  default, routed through the tiered cluster when given a ``Scenario``
+  (raw handoff, so outputs stay bit-identical to the single pool),
   multi-model via ``generate_multi`` when given a ``ModelGroup``.
 * ``adaptive``   — closed-loop exit-threshold control from flushed counters.
 """
@@ -32,11 +49,12 @@ from repro.serving.multipool import (ModelEntry, ModelGroup,
                                      MultiModelScheduler)
 from repro.serving.router import AdmissionRouter
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
-                                     SchedulerConfig, StepReport)
+                                     SchedulerConfig, SlotSnapshot,
+                                     StepReport)
 
 __all__ = ["ServeConfig", "ServingEngine", "make_serve_step",
            "prime_whisper_cross_cache", "ContinuousBatchScheduler",
-           "Request", "SchedulerConfig", "StepReport", "AdmissionRouter",
-           "ClusterConfig", "ClusterRequest", "TieredServingCluster",
-           "derive_tier_slots", "ModelEntry", "ModelGroup",
-           "MultiModelScheduler"]
+           "Request", "SchedulerConfig", "SlotSnapshot", "StepReport",
+           "AdmissionRouter", "ClusterConfig", "ClusterRequest",
+           "TieredServingCluster", "derive_tier_slots", "ModelEntry",
+           "ModelGroup", "MultiModelScheduler"]

@@ -29,14 +29,28 @@ tier:
 * prefill chunks advance it by the replayed prompt tokens' compute cost at
   the prefilling model's rate;
 * a request becomes admissible only after its uplink transfer delay
-  (``LinkProfile.tx_time`` of the prompt bytes), and a prefill/decode split
-  additionally waits out the remote prefill plus the simulated KV-cache
-  transfer delay injected between prefill and decode;
+  (``LinkProfile.tx_time`` of the prompt bytes);
 * completion stamps the tier clock plus the downlink result transfer, and
   **releases the admission-time slot booking**: a request that finishes
   early (EOS before ``max_new``, truncated depth) returns its unused
   reservation, so ``queue_costs()`` tracks reality instead of drifting
   pessimistic over a long trace.
+
+**Cross-tier migration is real, not simulated.**  A prefill/decode split
+executes in two arenas: the request prefills in the *prefill tier's* pool,
+its slot is lifted out with ``ContinuousBatchScheduler.export_slot``
+(KV/SSM rows truncated to the written prefix), the payload crosses the
+inter-tier link — int8-quantized through ``kernels/feature_compress`` when
+``core.offload.compression_decision`` says the link is slow enough to pay
+for it (``ClusterConfig.kv_handoff``) — and ``import_slot`` restores it
+into the decode tier's pool mid-flight, where greedy decoding continues
+bit-identically (raw handoff).  The link clock is charged the **measured
+payload bytes** of the exported snapshot, not an analytic estimate.  The
+same primitive powers failure handling: a ``Scenario.tier_outage`` kills a
+tier mid-trace and the cluster drains it — in-flight slots migrate to
+surviving tiers *without re-running prefill* (queued / still-prefilling
+requests are re-routed and restart), and ``stats()`` reports the
+migration ledger plus ``core.resilience.resilience_report`` numbers.
 
 Reported per-tier utilization and request p50/p95 latencies are therefore in
 virtual (scenario) time — the quantity the survey's planners predict — while
@@ -46,19 +60,23 @@ are ``nan`` until a request has completed (never a fake 0.0).
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Set, Union
 
 import numpy as np
 
 from repro.core.cost_model import (DeviceProfile, LinkProfile,
                                    build_cost_graph, compute_time,
                                    kv_cache_bytes_per_token)
+from repro.core.offload import compression_decision, measured_tx_time
 from repro.core.paradigms import AdmissionDecision, Scenario, _tier_profile
+from repro.core.resilience import resilience_report
 from repro.serving.multipool import ModelGroup, MultiModelScheduler
 from repro.serving.router import AdmissionRouter
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
-                                     SchedulerConfig, StepReport)
+                                     SchedulerConfig, SlotSnapshot,
+                                     StepReport)
 
 
 @dataclasses.dataclass
@@ -73,6 +91,17 @@ class ClusterConfig:
     # with in-flight decode instead of pausing it
     max_prefill_chunks_per_step: int = 1
     flush_every: int = 32
+    # cross-tier KV handoff encoding for split/failover migration:
+    #   "auto" — per-link compression_decision (int8 when the link is slow
+    #            enough to pay for quantization; lossy but negligibly so);
+    #   "raw"  — always ship bf16/fp32 rows (bit-identical continuation —
+    #            what the engine uses to keep its output-parity contract);
+    #   "int8" — always quantize (the compression stress path).
+    kv_handoff: str = "auto"
+    # tier outage response: True drains in-flight slots via export/import
+    # (no prefill re-run); False requeues them from the prompt — the
+    # recompute baseline benchmarks/migration_bench.py measures against.
+    migrate_on_outage: bool = True
 
 
 @dataclasses.dataclass
@@ -89,9 +118,28 @@ class ClusterRequest:
     # booked_released0 snapshots the slot's cumulative released time at
     # booking, so stacked bookings don't re-release earlier requests' slack
     booked_model: str = ""
+    booked_tier: str = ""
     booked_slot: int = -1
     booked_until: float = 0.0
     booked_released0: float = 0.0
+    # split decisions additionally book their PREFILL tier's slot for the
+    # estimated prompt replay, released the moment the prefill lands (or
+    # the request completes/re-routes) — without it the prefill pool's real
+    # occupancy is invisible to queue_costs()
+    pf_booked_tier: str = ""
+    pf_booked_slot: int = -1
+    pf_booked_until: float = 0.0
+    pf_booked_released0: float = 0.0
+    # migration ledger: how the request moved between arenas.  final_tier is
+    # the tier whose pool actually completed it (== decision.tier unless an
+    # outage rerouted the request); handoff_* are MEASURED — bytes summed
+    # over the exported snapshot arrays, time as charged to the link clock.
+    final_tier: str = ""
+    migrations: int = 0
+    requeues: int = 0
+    handoff_bytes: float = 0.0
+    handoff_time: float = 0.0
+    handoff_compressed: bool = False
 
     @property
     def done(self) -> bool:
@@ -146,6 +194,14 @@ class TierRuntime:
     # delta of this counter, so one request's slack is never released twice
     slot_released: Dict[str, List[float]] = dataclasses.field(
         default_factory=dict)
+    # migrated slots in flight TO this tier:
+    # (ready_at, SlotSnapshot, ClusterRequest, source tier name) —
+    # imported once the tier clock reaches ready_at and a slot of the
+    # snapshot's arena frees up; the source name prices any re-send if
+    # THIS tier dies while the payload is still in flight
+    inbound: List["tuple[float, SlotSnapshot, ClusterRequest, str]"] = \
+        dataclasses.field(default_factory=list)
+    dead: bool = False                 # tier outage fired (Scenario.outages)
 
     def book(self, model: str, ready: float, service: float):
         """Reserve the earliest slot of ``model``'s arena for ``service``
@@ -257,6 +313,18 @@ class TieredServingCluster:
                 slot_released={m: [0.0] * n for m, n in slots.items()})
         self.requests: List[ClusterRequest] = []
         self._cr_of: Dict[int, ClusterRequest] = {}   # id(Request) -> wrapper
+        self.dead: Set[str] = set()    # tiers lost to a Scenario outage
+        # pre-multi-model router subclasses (benchmark baselines) predate
+        # the exclude kwarg; only pass it to routers that take it
+        params_ = inspect.signature(self.router.route).parameters
+        self._router_takes_exclude = "exclude" in params_ or any(
+            p.kind is inspect.Parameter.VAR_KEYWORD
+            for p in params_.values())
+        # cluster-wide migration ledger (bytes are MEASURED payload bytes)
+        self.migration_stats: Dict[str, float] = {
+            "split_handoffs": 0, "outage_migrations": 0, "requeued": 0,
+            "compressed": 0, "bytes_moved": 0.0, "bytes_raw": 0.0,
+            "transfer_s": 0.0}
 
     def _resolve_model(self, model: Optional[str]) -> str:
         if self.group is not None:
@@ -300,50 +368,89 @@ class TieredServingCluster:
         # single-model clusters omit the model kwarg so pre-multi-model
         # router subclasses (e.g. benchmark baselines) keep working
         route_kw = {"model": m} if self.group is not None else {}
+        if self.dead and self._router_takes_exclude:
+            route_kw["exclude"] = self.dead
         d = self.router.route(toks.size, max_new, deadline=deadline,
                               queue_cost=self.queue_costs(arrival, model=m),
                               **route_kw)
-        tr = self.tiers[d.tier]
-        prompt_bytes = float(toks.size * 4)
-        if d.is_split:
-            # prefill runs remotely: input up to the prefill tier, compute
-            # there, then the KV cache crosses to the decode tier — the
-            # decode pool only sees the request after that handoff
-            pf = self.tiers[d.prefill_tier]
-            pf_up = pf.uplink.tx_time(prompt_bytes) if pf.uplink else 0.0
-            pf_cost = toks.size * pf.tok_cost[m]
-            pf.busy += pf_cost              # remote prefill occupies its tier
-            ready = arrival + pf_up + pf_cost + d.transfer_delay
-        else:
-            up = tr.uplink.tx_time(prompt_bytes) if tr.uplink else 0.0
-            ready = arrival + up
         cr = ClusterRequest(
             Request(tokens=toks, max_new=max_new, eos_id=eos_id,
                     frames=frames, model=m),
-            arrival, deadline, d, ready)
-        # book the earliest slot so later arrivals see this commitment; the
-        # booking is released at completion if the request finishes early
-        service = (max_new if d.is_split else toks.size + max_new) \
-            * tr.tok_cost[m]
+            arrival, deadline, d, ready_at=arrival)
         cr.booked_model = m
-        cr.booked_slot, cr.booked_until, cr.booked_released0 = \
-            tr.book(m, ready, service)
-        tr.waiting.append(cr)
-        tr.routed += 1
+        if d.tier in self.dead or d.prefill_tier in self.dead:
+            # a legacy router couldn't exclude the dead tier: remap to the
+            # cheapest survivor rather than stranding the request
+            alive = self._failover_tier(cr, arrival)
+            cr.decision = dataclasses.replace(
+                d, tier=alive.name, prefill_tier=alive.name)
+        self._place(cr, arrival)
+        self.tiers[cr.decision.tier].routed += 1
         self.requests.append(cr)
         self._cr_of[id(cr.req)] = cr
         return cr
+
+    def _place(self, cr: ClusterRequest, arrival: float):
+        """Stage a routed request at its starting tier and book the decode
+        slot.  A split decision starts in the PREFILL tier's pool — the
+        chunked prefill runs there for real, and the request migrates to
+        the decode tier's pool via export/import once its prefill lands
+        (``_migrate_split_ready``).  Shared by ``submit`` and the outage
+        re-route path."""
+        d, m = cr.decision, cr.booked_model
+        tr = self.tiers[d.tier]
+        prompt_bytes = float(cr.req.tokens.size * 4)
+        home = self.tiers[d.prefill_tier] if d.is_split else tr
+        up = home.uplink.tx_time(prompt_bytes) if home.uplink else 0.0
+        cr.ready_at = arrival + up
+        # book the earliest decode-tier slot so later arrivals see this
+        # commitment; released at completion if the request finishes early.
+        # An outage re-route arrives here with live bookings — release
+        # them first so the old tiers' slot_avail don't keep phantoms.
+        if cr.booked_slot >= 0 and cr.booked_tier:
+            self._reconcile_booking(self.tiers[cr.booked_tier], cr)
+        self._release_pf_booking(cr)
+        dec_ready = cr.ready_at
+        if d.is_split:
+            # the prefill tier's slot is genuinely occupied while the
+            # prompt replays there: book it for the estimated replay, and
+            # push the decode booking past prefill + the planned handoff
+            # (estimates admission acts on; the link is later CHARGED the
+            # measured payload, not this estimate)
+            est_pf = cr.req.tokens.size * home.tok_cost[m]
+            cr.pf_booked_tier = home.name
+            (cr.pf_booked_slot, cr.pf_booked_until,
+             cr.pf_booked_released0) = home.book(m, cr.ready_at, est_pf)
+            dec_ready += est_pf + d.transfer_delay
+        service = (cr.req.max_new if d.is_split
+                   else cr.req.tokens.size + cr.req.max_new) * tr.tok_cost[m]
+        cr.booked_tier = tr.name
+        cr.booked_slot, cr.booked_until, cr.booked_released0 = \
+            tr.book(m, dec_ready, service)
+        home.waiting.append(cr)
 
     # ------------------------------------------------------------------
     # pool stepping + virtual-time accounting
     # ------------------------------------------------------------------
     def _release_ready(self, tr: TierRuntime):
         """Move waiting requests whose transfers have landed into the pool
-        queue; fast-forward an idle tier's clock to the next arrival."""
-        if not tr.waiting:
+        queue and import inbound migrated slots whose handoff has landed
+        (and a slot of their arena is free); fast-forward an idle tier's
+        clock to the next arrival/handoff."""
+        if not tr.waiting and not tr.inbound:
             return
         if not tr.sched.has_work:
-            tr.vclock = max(tr.vclock, min(c.ready_at for c in tr.waiting))
+            pend = [c.ready_at for c in tr.waiting] \
+                + [t for t, _, _, _ in tr.inbound]
+            tr.vclock = max(tr.vclock, min(pend))
+        still_in = []
+        for item in tr.inbound:
+            ready, snap, _, _ = item
+            if ready <= tr.vclock and tr.sched.free_slots(model=snap.model):
+                tr.sched.import_slot(snap)
+            else:
+                still_in.append(item)
+        tr.inbound = still_in
         still = []
         for cr in tr.waiting:
             if cr.ready_at <= tr.vclock:
@@ -366,17 +473,36 @@ class TieredServingCluster:
         flip the drift optimistic instead)."""
         if cr.booked_slot < 0:
             return
-        m, i = cr.booked_model, cr.booked_slot
+        self._release_slot_booking(tr, cr.booked_model, cr.booked_slot,
+                                   cr.booked_until, cr.booked_released0)
+        cr.booked_slot = -1            # released exactly once
+
+    @staticmethod
+    def _release_slot_booking(tr: TierRuntime, m: str, i: int,
+                              until: float, released0: float):
+        """Return a booking's unused tail to ``slot_avail`` (shared by the
+        decode-slot and split-prefill bookings)."""
         sa, rel = tr.slot_avail[m], tr.slot_released[m]
-        overhang = (cr.booked_until
-                    - (rel[i] - cr.booked_released0)) - tr.vclock
+        overhang = (until - (rel[i] - released0)) - tr.vclock
         if overhang > 0.0:
             new = max(tr.vclock, sa[i] - overhang)
             rel[i] += sa[i] - new      # record what actually came back
             sa[i] = new
-        cr.booked_slot = -1            # released exactly once
+
+    def _release_pf_booking(self, cr: ClusterRequest):
+        """Release a split request's prefill-tier slot booking — called
+        the moment its prompt replay ends (prefill done, completion, or an
+        outage re-route)."""
+        if cr.pf_booked_slot < 0:
+            return
+        self._release_slot_booking(
+            self.tiers[cr.pf_booked_tier], cr.booked_model,
+            cr.pf_booked_slot, cr.pf_booked_until, cr.pf_booked_released0)
+        cr.pf_booked_slot = -1
 
     def _poll_tier(self, tr: TierRuntime):
+        if tr.dead:
+            return False
         self._release_ready(tr)
         if not tr.sched.has_work:
             return False
@@ -384,25 +510,25 @@ class TieredServingCluster:
         # normalize: a single-model pool's report is its own (sole) sub-report
         subs = rep.per_model if rep.per_model else {"": rep}
         decode_cost = 0.0
+        went_live: List[ClusterRequest] = []
         for m, sub in subs.items():
             if sub.admitted:
                 tr.prefill_rows[m] = [(self._cr_of[id(r)], r.tokens.size)
                                       for r in sub.admitted]
             if sub.prefill_chunks:
                 # charge replayed prompt tokens to this tier at the model's
-                # rate — except rows whose prefill was already paid for
-                # remotely (split decisions)
+                # rate (split requests prefill HERE for real — the pf tier
+                # pays its own chunks, nothing is charged analytically)
                 chunk = self.cfg.prefill_chunk
                 lo = sub.prefill_chunk_start * chunk
                 hi = lo + sub.prefill_chunks * chunk
                 cost = 0.0
                 for cr, plen in tr.prefill_rows.get(m, ()):
-                    if cr.decision.is_split:
-                        continue
                     cost += min(max(plen - lo, 0), hi - lo) * tr.tok_cost[m]
                 tr.vclock += cost
                 tr.busy += cost
             if sub.prefill_done:
+                went_live += [cr for cr, _ in tr.prefill_rows.get(m, ())]
                 tr.prefill_rows[m] = []
             if sub.decode_stepped:
                 # charge the *truncated* step cost: the scheduler reports
@@ -421,11 +547,219 @@ class TieredServingCluster:
             down = (tr.uplink.tx_time(len(r.out_tokens) * 4.0)
                     if tr.uplink else 0.0)
             cr.t_done_v = tr.vclock + down
-            self._reconcile_booking(tr, cr)
+            cr.final_tier = tr.name
+            self._release_pf_booking(cr)   # EOS at admission on the pf tier
+            self._reconcile_booking(self.tiers[cr.booked_tier or tr.name],
+                                    cr)
+        # split decisions whose prefill just landed leave for their decode
+        # tier (the poll above already ran this tier's decode step, so the
+        # handoff happens at a clean token boundary).  If the decode tier
+        # died while the prefill was running, fail over to a survivor —
+        # possibly this very tier, in which case the slot simply stays.
+        for cr in went_live:
+            self._release_pf_booking(cr)   # prompt replay is over
+            if (cr.decision.is_split and cr.decision.tier != tr.name
+                    and not cr.req.done):
+                dst = self.tiers[cr.decision.tier]
+                if dst.dead:
+                    dst = self._failover_tier(cr, tr.vclock)
+                if dst is tr:
+                    self._rebook(cr, tr, tr.vclock,
+                                 max(1, cr.req.max_new
+                                     - len(cr.req.out_tokens)))
+                    continue
+                self._migrate_one(tr, dst, cr, count_key="split_handoffs")
+                if dst.name != cr.booked_tier:
+                    self._rebook(cr, dst, tr.vclock,
+                                 max(1, cr.req.max_new
+                                     - len(cr.req.out_tokens)))
         return rep.worked
 
+    # ------------------------------------------------------------------
+    # cross-tier migration (real export -> link -> import)
+    # ------------------------------------------------------------------
+    def _kv_link(self, a: str, b: str) -> LinkProfile:
+        """The link a slot snapshot crosses between two tiers."""
+        sc = self.scenario
+        return {frozenset(("device", "edge")): sc.dev_edge,
+                frozenset(("edge", "cloud")): sc.edge_cloud,
+                frozenset(("device", "cloud")): sc.dev_cloud}[
+                    frozenset((a, b))]
+
+    def _migrate_one(self, src: TierRuntime, dst: TierRuntime,
+                     cr: ClusterRequest, *, count_key: str,
+                     depart: Optional[float] = None):
+        """Move one in-flight slot from ``src``'s pool to ``dst``'s: export
+        the snapshot, pick raw-vs-int8 per the link
+        (``compression_decision`` under ``cfg.kv_handoff="auto"``), charge
+        the link the snapshot's MEASURED payload bytes (plus the quantize
+        compute on the source tier), and queue the import at ``dst``.
+
+        ``depart`` is when the payload leaves ``src`` (default: its tier
+        clock — right for splits, where the handoff starts the moment the
+        prefill tier finishes its work).  Outage drains pass the outage
+        timestamp instead: the dead tier's clock may lag the cluster, and
+        departing from the lagging clock would hand migration a free
+        virtual-time head start over the requeue baseline.
+
+        Note the int8 path quantizes the FULL fixed-shape rows on device
+        and truncates on host: quantizing only the written prefix would
+        retrace the kernel per position (the no-recompile invariant is
+        worth more than the wasted smoke-scale FLOPs), and the charged
+        ``quant_overhead`` is scaled to the shipped bytes accordingly."""
+        m, slot = cr.booked_model, cr.req.slot
+        link = self._kv_link(src.name, dst.name)
+        # decide raw-vs-int8 from the layout-derived raw size BEFORE
+        # exporting, so the slot is snapshotted exactly once
+        raw_bytes = src.sched.slot_payload_bytes(slot, model=m)
+        dec = compression_decision(raw_bytes, src.profile, link)
+        use_int8 = self.cfg.kv_handoff == "int8" or (
+            self.cfg.kv_handoff == "auto" and dec.compress)
+        snap = src.sched.export_slot(slot, model=m, compress=use_int8)
+        overhead = 0.0
+        if use_int8:
+            overhead = dec.quant_overhead
+            src.busy += overhead       # the sender quantizes on its silicon
+        src.sched.release_slot(slot, model=m)
+        t_tx = measured_tx_time(snap.payload_bytes, link,
+                                quant_overhead=overhead)
+        t0 = src.vclock if depart is None else max(depart, src.vclock)
+        dst.inbound.append((t0 + t_tx, snap, cr, src.name))
+        cr.migrations += 1
+        cr.handoff_bytes += snap.payload_bytes
+        cr.handoff_time += t_tx
+        cr.handoff_compressed = cr.handoff_compressed or use_int8
+        ms = self.migration_stats
+        ms[count_key] += 1
+        ms["compressed"] += int(use_int8)
+        ms["bytes_moved"] += snap.payload_bytes
+        ms["bytes_raw"] += raw_bytes
+        ms["transfer_s"] += t_tx
+
+    # ------------------------------------------------------------------
+    # tier outages: drain the dead tier (Scenario.outages)
+    # ------------------------------------------------------------------
+    def _check_outages(self):
+        for o in getattr(self.scenario, "outages", ()):
+            tr = self.tiers.get(o.tier)
+            if tr is None or tr.dead:
+                continue
+            if self.virtual_now() >= o.at:
+                self._drain_tier(tr)
+
+    def _failover_tier(self, cr: ClusterRequest, now: float) -> TierRuntime:
+        """Cheapest surviving tier for an in-flight request: queueing delay
+        of its model's arena plus the remaining decode at that tier's
+        rate."""
+        m = cr.booked_model
+        remaining = max(1, cr.req.max_new - len(cr.req.out_tokens))
+        alive = [t for t in self.tiers.values() if not t.dead]
+        assert alive, "every tier is dead"
+        return min(alive, key=lambda t: max(
+            0.0, min(t.slot_avail[m]) - now) + remaining * t.tok_cost[m])
+
+    def _rebook(self, cr: ClusterRequest, dst: TierRuntime, ready: float,
+                tokens: int):
+        """Move a request's slot booking to ``dst``, first releasing any
+        prior booking (a booking left on a surviving tier would sit in its
+        ``slot_avail`` forever and drift ``queue_costs`` pessimistic —
+        completion only reconciles the booking it finds)."""
+        if cr.booked_slot >= 0 and cr.booked_tier:
+            self._reconcile_booking(self.tiers[cr.booked_tier], cr)
+        cr.booked_tier = dst.name
+        cr.booked_slot, cr.booked_until, cr.booked_released0 = \
+            dst.book(cr.booked_model, ready, tokens
+                     * dst.tok_cost[cr.booked_model])
+
+    def _drain_tier(self, tr: TierRuntime):
+        """Tier outage: mark ``tr`` dead and move every in-flight request
+        off it.  Active decode slots migrate via export -> compressed
+        handoff -> import — their prefill is NOT re-run (with
+        ``cfg.migrate_on_outage=False`` they are instead requeued and
+        recomputed from the prompt, the baseline the migration benchmark
+        beats).  Queued / still-prefilling / waiting requests are re-routed
+        from scratch (their prefill never finished), and snapshots already
+        in flight toward the dead tier are redirected to a survivor."""
+        tr.dead = True
+        self.dead.add(tr.name)
+        now = self.virtual_now()
+        redo = list(tr.waiting)
+        tr.waiting = []
+        for r in tr.sched.drain_queue() + tr.sched.cancel_pending():
+            redo.append(self._cr_of[id(r)])
+        inbound, tr.inbound = tr.inbound, []
+        for m, slot, r in tr.sched.active_requests():
+            cr = self._cr_of[id(r)]
+            dst = self._failover_tier(cr, now)
+            if self.cfg.migrate_on_outage:
+                # depart at the outage moment, not this tier's (possibly
+                # lagging) clock — the requeue baseline is priced from
+                # `now` too, so the comparison stays fair
+                self._migrate_one(tr, dst, cr,
+                                  count_key="outage_migrations",
+                                  depart=now)
+                self._rebook(cr, dst, now,
+                             max(1, r.max_new - len(r.out_tokens)))
+            else:
+                tr.sched.release_slot(slot, model=m)
+                r.out_tokens, r.slot, r.done = [], -1, False
+                prompt_bytes = float(r.tokens.size * 4)
+                cr.ready_at = now + (dst.uplink.tx_time(prompt_bytes)
+                                     if dst.uplink else 0.0)
+                # the restart is a fresh placement: keep decision/routed
+                # consistent with the queued-request redo path below
+                cr.decision = dataclasses.replace(
+                    cr.decision, tier=dst.name, prefill_tier=dst.name)
+                dst.routed += 1
+                cr.requeues += 1
+                self.migration_stats["requeued"] += 1
+                self._release_pf_booking(cr)
+                self._rebook(cr, dst, cr.ready_at,
+                             r.tokens.size + r.max_new)
+                dst.waiting.append(cr)
+        for ready, snap, cr, src_name in inbound:
+            # a handoff still in flight toward the dead tier: the source
+            # re-sends it to a survivor, and the NEW hop is charged — a
+            # redirected payload must not teleport across a slow link free
+            dst = self._failover_tier(cr, now)
+            if dst.name == src_name:
+                arrive = now           # back home: the rows never left
+            else:
+                t_tx = measured_tx_time(snap.payload_bytes,
+                                        self._kv_link(src_name, dst.name))
+                arrive = now + t_tx
+                cr.handoff_bytes += snap.payload_bytes
+                cr.handoff_time += t_tx
+                self.migration_stats["bytes_moved"] += snap.payload_bytes
+                self.migration_stats["transfer_s"] += t_tx
+            dst.inbound.append((arrive, snap, cr, src_name))
+            self._rebook(cr, dst, arrive,
+                         max(1, cr.req.max_new - len(cr.req.out_tokens)))
+        for cr in redo:
+            # never admitted here: re-route among the survivors and start
+            # over (nothing to migrate — no prefill has completed)
+            route_kw = ({"model": cr.booked_model}
+                        if self.group is not None else {})
+            if self._router_takes_exclude:
+                route_kw["exclude"] = self.dead
+            d = self.router.route(
+                cr.req.tokens.size, cr.req.max_new, deadline=cr.deadline,
+                queue_cost=self.queue_costs(now, model=cr.booked_model),
+                **route_kw)
+            if d.tier in self.dead or d.prefill_tier in self.dead:
+                alive = self._failover_tier(cr, now)
+                d = dataclasses.replace(d, tier=alive.name,
+                                        prefill_tier=alive.name)
+            cr.decision = d
+            cr.requeues += 1
+            self.migration_stats["requeued"] += 1
+            self.tiers[cr.decision.tier].routed += 1
+            self._place(cr, now)
+
     def poll(self) -> bool:
-        """One round over all tier pools.  Returns whether any worked."""
+        """One round over all tier pools (scheduled outages fire first).
+        Returns whether any worked."""
+        self._check_outages()
         worked = False
         for tr in self.tiers.values():
             worked = self._poll_tier(tr) or worked
@@ -433,8 +767,8 @@ class TieredServingCluster:
 
     @property
     def has_work(self) -> bool:
-        return any(tr.waiting or tr.sched.has_work
-                   for tr in self.tiers.values())
+        return any(tr.waiting or tr.inbound or tr.sched.has_work
+                   for tr in self.tiers.values() if not tr.dead)
 
     def run(self):
         """Drain every pool (all submitted requests complete)."""
@@ -471,9 +805,11 @@ class TieredServingCluster:
         lats = [cr.latency for cr in done]
         per_tier = {}
         for name, tr in self.tiers.items():
-            tl = [cr.latency for cr in done if cr.decision.tier == name]
+            tl = [cr.latency for cr in done
+                  if (cr.final_tier or cr.decision.tier) == name]
             per_tier[name] = {
                 "routed": tr.routed,
+                "dead": tr.dead,
                 "n_slots": tr.slots_total,
                 "vclock_s": tr.vclock,
                 "utilization": tr.utilization,
@@ -492,9 +828,25 @@ class TieredServingCluster:
             "p95_latency_s": _pctl(lats, 95),
             "deadline_hit_rate": (sum(cr.met_deadline for cr in done)
                                   / len(done) if done else 1.0),
+            "migration": dict(self.migration_stats),
             "tiers": per_tier,
             "jit_cache_sizes": self.jit_cache_sizes(),
         }
+        if self.dead or getattr(self.scenario, "outages", ()):
+            # survey §5 resilience accounting: expected accuracy with the
+            # drain (skip-hyperconnection analogue: requests survive the
+            # dead stage) vs a pipeline that collapses with any dead tier
+            rr = resilience_report(len(self.tiers),
+                                   len(self.dead) / len(self.tiers))
+            out["dead_tiers"] = sorted(self.dead)
+            out["resilience"] = {
+                "survive_prob": rr.survive_prob,
+                "expected_accuracy_with_skip":
+                    rr.expected_accuracy_with_skip,
+                "expected_accuracy_without_skip":
+                    rr.expected_accuracy_without_skip,
+                "gain": rr.gain,
+            }
         if self.group is not None:
             per_model = {}
             for m in self._model_names:

@@ -13,8 +13,11 @@ edge-device paradigm planner consumes), and whisper cross-cache priming.
 Given a ``scenario`` (and optionally a full-size ``plan_cfg``), the engine
 instead submits every row through a ``TieredServingCluster``: the admission
 router spreads the batch over cloud/edge/device pools and
-``engine.route_counts`` reports where rows landed.  Outputs are identical
-either way — tiers differ in virtual cost, not in arithmetic.
+``engine.route_counts`` reports where rows landed.  Split-routed rows
+really execute in two arenas (prefill-tier pool -> exported slot snapshot
+-> decode-tier pool); the engine pins the handoff to the raw encoding so
+outputs stay identical either way — tiers differ in virtual cost, not in
+arithmetic.
 
 Constructed with a ``ModelGroup`` instead of one model, the engine serves
 heterogeneous models through one multiplexed pool:
@@ -224,7 +227,13 @@ class ServingEngine:
 
     def _ensure_cluster(self, need: int):
         """Lazily (re)build the tiered cluster once the needed context
-        outgrows it — same growth rule for single-model and group engines."""
+        outgrows it — same growth rule for single-model and group engines.
+
+        The engine pins ``kv_handoff="raw"``: a split-routed row really
+        prefills in one tier's arena and decodes in another's (migrated via
+        export/import), and the raw payload keeps the engine's contract
+        that tiered outputs are bit-identical to the single-pool path —
+        lossy int8 handoff is a cluster-level opt-in."""
         from repro.serving.cluster import ClusterConfig, TieredServingCluster
         if self._cluster is None or self._cluster.cfg.max_len < need:
             max_len = max(self.scfg.max_len, 1 << (need - 1).bit_length())
@@ -235,7 +244,8 @@ class ServingEngine:
                 cfg=ClusterConfig(max_len=max_len,
                                   exit_threshold=self.scfg.exit_threshold,
                                   temperature=self.scfg.temperature,
-                                  long_mode=self.scfg.long_mode))
+                                  long_mode=self.scfg.long_mode,
+                                  kv_handoff="raw"))
         return self._cluster
 
     def _finish_cluster_batch(self, cl, routes_before):

@@ -204,6 +204,46 @@ class MultiModelScheduler:
     def tick(self) -> bool:
         return self.poll().worked
 
+    # ------------------------------------------------------------------
+    # slot migration (delegates to the named arena — snapshots carry their
+    # model name, so import routes itself)
+    # ------------------------------------------------------------------
+    def export_slot(self, slot: int, *, model: str = "",
+                    compress: bool = False):
+        return self.pools[self.group.resolve(model)].export_slot(
+            slot, compress=compress)
+
+    def import_slot(self, snap) -> int:
+        return self.pools[self.group.resolve(snap.model)].import_slot(snap)
+
+    def slot_payload_bytes(self, slot: int, *, model: str = "") -> int:
+        return self.pools[self.group.resolve(model)].slot_payload_bytes(slot)
+
+    def free_slots(self, model: str = ""):
+        return self.pools[self.group.resolve(model)].free_slots()
+
+    def active_requests(self):
+        """``[(model, slot, request)]`` across every arena."""
+        out = []
+        for name, pool in self.pools.items():
+            out += [(name, slot, r) for _, slot, r in pool.active_requests()]
+        return out
+
+    def release_slot(self, slot: int, *, model: str = ""):
+        return self.pools[self.group.resolve(model)].release_slot(slot)
+
+    def drain_queue(self):
+        out = []
+        for pool in self.pools.values():
+            out += pool.drain_queue()
+        return out
+
+    def cancel_pending(self):
+        out = []
+        for pool in self.pools.values():
+            out += pool.cancel_pending()
+        return out
+
     def run(self, rng=None):
         """Drain the queue and every arena to completion."""
         self.set_rng(rng)

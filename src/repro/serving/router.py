@@ -91,14 +91,18 @@ class AdmissionRouter:
     def route(self, prompt_len: int, max_new: int, *,
               deadline: Optional[float] = None,
               queue_cost: Optional[Dict[str, float]] = None,
-              model: Optional[str] = None) -> AdmissionDecision:
+              model: Optional[str] = None,
+              exclude=None) -> AdmissionDecision:
+        """``exclude`` names tiers no candidate may touch (prefill or decode
+        side) — the cluster passes its dead-tier set after an outage."""
         model = self._resolve(model)
         d = admission_decision(
             self._graph(model, prompt_len + max_new), self.scenario,
             deadline=deadline, queue_cost=queue_cost,
             prefill_tokens=prompt_len, decode_tokens=max_new,
             kv_bytes_per_token=self._kv_tok[model],
-            allow_split=self.allow_split)
+            allow_split=self.allow_split,
+            exclude=frozenset(exclude) if exclude else None)
         self.route_counts[d.tier] += 1
         self.route_counts_by_model[model][d.tier] += 1
         self.split_count += int(d.is_split)

@@ -38,6 +38,17 @@ runtime:
   in an on-device int32 vector and are flushed to host every
   ``flush_every`` steps (or when the adaptive controller needs them) —
   not synced every token like the old engine.
+* **Slot migration**: ``export_slot`` lifts one slot's serving state (cache
+  rows truncated to the written prefix, position, pending token, request)
+  out of the arena as a ``SlotSnapshot``; ``import_slot`` restores it into
+  any same-model arena — even one with a different slot count — and greedy
+  decoding continues bit-identically mid-flight, with no prefill replay.
+  Both directions are single fixed-shape jitted calls over a traced slot
+  index (no per-request recompiles), and the snapshot's measured
+  ``payload_bytes`` (optionally int8-quantized through
+  ``kernels/feature_compress``) is what external drivers charge link
+  transfer time from.  This is the primitive behind the tiered cluster's
+  real prefill/decode splits and tier-outage failover.
 
 The scheduler is pool-instantiable and externally steppable: ``run()`` is a
 thin drain loop over ``poll()``, which performs one admission/prefill/decode
@@ -151,6 +162,49 @@ class StepReport:
 
 
 @dataclasses.dataclass
+class SlotSnapshot:
+    """One slot's serving state, lifted out of an arena by ``export_slot``
+    and restorable into ANY same-model arena by ``import_slot`` (the two
+    arenas may have different slot counts — the payload is one batch row).
+
+    ``payload`` is the flat list of the slot's cache-row leaves (KV rows,
+    SSM/conv states, shared-attn rows) with each leaf's time axis truncated
+    to the ``filled`` prefix the request has actually written — the bytes a
+    migration really ships.  With ``compressed`` the float leaves are int8
+    rows + per-row fp32 scales from ``kernels/feature_compress``
+    (``scales[i]`` is None for leaves shipped raw).  ``payload_bytes`` is
+    the measured size of exactly those arrays: external drivers (the tiered
+    cluster) charge link transfer time from it instead of an analytic
+    estimate.
+
+    Host-side per-request state rides along (position, pending token,
+    decode steps taken, the live ``Request`` with its ``out_tokens``), plus
+    provenance: the exporting arena's sampling tick and cumulative exit
+    histogram at export time (per-token exit counts accrue in whichever
+    arena served the token; they are not transferred twice).
+
+    Parity contract: GREEDY continuation is bit-identical after a raw
+    import.  Sampled (temperature > 0) continuation is NOT stream-stable
+    across a migration — the rng fold counter is arena-global (every
+    pooled request advances it), so the destination arena necessarily
+    samples from its own stream; ``rng_tick`` is diagnostic provenance,
+    deliberately not restored by ``import_slot``.
+    """
+    req: Request
+    model: str
+    position: int
+    filled: int                       # time-axis rows actually shipped
+    current_tok: int
+    steps_taken: int
+    compressed: bool
+    payload: List[Any]                # np leaves, time axes truncated
+    scales: List[Optional[Any]]       # per-leaf fp32 scales (compressed)
+    payload_bytes: int
+    rng_tick: int = 0                 # exporting arena's sampling tick
+    exit_counts: Any = None           # exporting arena's histogram (copy)
+
+
+@dataclasses.dataclass
 class _PendingPrefill:
     """An admission whose chunked prompt replay is still in flight.  The
     fresh cache is private to the admission, so in-flight decode slots keep
@@ -253,6 +307,14 @@ class ContinuousBatchScheduler:
             from repro.serving.engine import prime_whisper_cross_cache
             self._prime = jax.jit(
                 lambda p, c, f: prime_whisper_cross_cache(model, p, c, f))
+        # --- slot migration: fixed-shape export/import (slot is a traced
+        # index, so snapshotting/restoring ANY slot reuses one compile) ---
+        self._export_rows = jax.jit(self._gather_slot)
+        self._import_rows = jax.jit(self._scatter_slot, donate_argnums=(0,))
+        (self._row_struct_flat, self._row_axes_flat,
+         self._row_treedef) = self._detect_row_layout()
+        self.n_imported = 0
+        self.n_exported = 0
         self.cache = self._init_cache()
 
     # ------------------------------------------------------------------
@@ -645,6 +707,223 @@ class ContinuousBatchScheduler:
         self.active[slot] = False
 
     # ------------------------------------------------------------------
+    # slot migration: fixed-shape export/import of one slot's serving state
+    # ------------------------------------------------------------------
+    def _gather_slot(self, cache, slot):
+        """Lift slot ``slot``'s batch row out of every cache leaf.  Block
+        caches are stacked [n_layers, B, ...] (batch axis 1); shared-attn
+        caches are [B, ...] (batch axis 0).  ``slot`` is traced, so one
+        compile covers every slot."""
+        def take(axis):
+            return lambda a: jax.lax.dynamic_index_in_dim(
+                a, slot, axis, keepdims=False)
+        out = {"blocks": [jax.tree.map(take(1), c)
+                          for c in cache["blocks"]]}
+        if "shared_attn" in cache:
+            out["shared_attn"] = [jax.tree.map(take(0), c)
+                                  for c in cache["shared_attn"]]
+        return out
+
+    def _scatter_slot(self, cache, rows, slot):
+        """Inverse of ``_gather_slot``: write one exported row set into
+        slot ``slot`` of this arena (the cache buffer is donated)."""
+        def put(axis):
+            return lambda a, r: jax.lax.dynamic_update_index_in_dim(
+                a, r.astype(a.dtype), slot, axis)
+        out = {"blocks": [jax.tree.map(put(1), c, r)
+                          for c, r in zip(cache["blocks"], rows["blocks"])]}
+        if "shared_attn" in cache:
+            out["shared_attn"] = [
+                jax.tree.map(put(0), c, r)
+                for c, r in zip(cache["shared_attn"], rows["shared_attn"])]
+        return out
+
+    def _detect_row_layout(self):
+        """Per-leaf layout of one exported slot row: the full (abstract)
+        shapes plus which axis is the time axis, found structurally by
+        diffing the row shapes at ``max_len`` vs ``max_len + 1`` — leaves
+        whose shape is independent of the context length (SSM/conv states,
+        ring-buffer windows, encdec cross caches) get -1 and always ship
+        whole; the rest are truncated to the written prefix on export."""
+        b, lm = self.cfg.n_slots, self.cfg.long_mode
+
+        def rows_struct(seq_len):
+            cache = jax.eval_shape(
+                lambda: self.model.init_decode_cache(b, seq_len,
+                                                     long_mode=lm))
+            return jax.eval_shape(self._gather_slot, cache,
+                                  jax.ShapeDtypeStruct((), jnp.int32))
+
+        flat, treedef = jax.tree.flatten(rows_struct(self.cfg.max_len))
+        flat2 = jax.tree.leaves(rows_struct(self.cfg.max_len + 1))
+        axes = []
+        for a, c in zip(flat, flat2):
+            ax = -1
+            for i, (x, y) in enumerate(zip(a.shape, c.shape)):
+                if x != y:
+                    ax = i
+                    break
+            # quantization scales replace the last (feature) axis with 1:
+            # a time axis in last position would make them unsliceable
+            assert ax < a.ndim - 1, "time axis must not be the row axis"
+            axes.append(ax)
+        return flat, axes, treedef
+
+    def export_slot(self, slot: int, *, model: str = "",
+                    compress: bool = False) -> SlotSnapshot:
+        """Snapshot one active slot out of the arena as a ``SlotSnapshot``.
+
+        The row gather is one fixed-shape jitted call (traced slot index);
+        each leaf's time axis is then truncated on host to the prefix the
+        request has actually written, so ``payload_bytes`` measures the
+        bytes a migration really ships.  ``compress=True`` routes every
+        float leaf through the ``kernels/feature_compress`` int8 row
+        quantizer (per-row fp32 scales ride along).  The slot itself is
+        left untouched — pair with ``release_slot`` to evict, or discard
+        the snapshot to abort a migration.  ``model`` is accepted for
+        interface uniformity with ``MultiModelScheduler`` and ignored.
+        """
+        del model                      # single-model arena: one namespace
+        from repro.kernels import ops as kops
+        r = self.slot_req[slot]
+        assert r is not None and self.active[slot], f"slot {slot} not active"
+        rows = self._export_rows(self.cache, jnp.int32(slot))
+        position = int(self.positions[slot])
+        payload: List[Any] = []
+        scales: List[Optional[Any]] = []
+        nbytes = 0
+        for a, ax in zip(jax.tree.leaves(rows), self._row_axes_flat):
+            s = None
+            if compress and jnp.issubdtype(a.dtype, jnp.floating):
+                a, s = kops.compress_rows(a)
+            ah = np.asarray(a)
+            sh = None if s is None else np.asarray(s)
+            if ax >= 0:
+                cut = [slice(None)] * ah.ndim
+                cut[ax] = slice(0, min(position, ah.shape[ax]))
+                ah = ah[tuple(cut)]
+                if sh is not None:
+                    sh = sh[tuple(cut)]
+            payload.append(ah)
+            scales.append(sh)
+            nbytes += ah.nbytes + (0 if sh is None else sh.nbytes)
+        self.n_exported += 1
+        return SlotSnapshot(
+            req=r, model=r.model, position=position,
+            filled=min(position, self._clen),
+            current_tok=int(self.current_tok[slot]),
+            steps_taken=int(self.steps_taken[slot]),
+            compressed=compress, payload=payload, scales=scales,
+            payload_bytes=int(nbytes), rng_tick=self._rng_tick,
+            exit_counts=self.flush_counters().copy())
+
+    def slot_payload_bytes(self, slot: int, *, model: str = "") -> int:
+        """Size of the raw payload ``export_slot(slot)`` would ship, from
+        the row layout and the slot's position alone (no device work) —
+        what a driver feeds ``compression_decision`` BEFORE exporting, so
+        choosing int8 doesn't cost a throwaway raw export.  Matches the
+        exported snapshot's measured ``payload_bytes`` exactly."""
+        del model
+        position = int(self.positions[slot])
+        total = 0
+        for ref, ax in zip(self._row_struct_flat, self._row_axes_flat):
+            shape = list(ref.shape)
+            if ax >= 0:
+                shape[ax] = min(position, shape[ax])
+            total += int(np.prod(shape)) * ref.dtype.itemsize
+        return total
+
+    def import_slot(self, snap: SlotSnapshot) -> int:
+        """Restore an exported snapshot into a free slot of THIS arena and
+        resume decoding mid-flight (no prefill replay).  Truncated time
+        axes are zero-padded back to the arena's fixed shape — unwritten
+        rows are zero in an unmigrated arena too, and reads are masked by
+        position, so a raw-payload import continues bit-identically.
+        Compressed payloads are dequantized through the
+        ``kernels/feature_compress`` kernel first.  The scatter is one
+        fixed-shape jitted call (traced slot index): importing never adds
+        per-request recompiles.  Returns the slot used."""
+        from repro.kernels import ops as kops
+        free = self.free_slots()
+        assert free, "import_slot: no free slot in this arena"
+        r = snap.req
+        assert not r.done and snap.steps_taken < r.max_new, \
+            "import_slot: request already finished"
+
+        def pad_full(x, shape):
+            if x.shape == tuple(shape):
+                return x
+            full = np.zeros(shape, x.dtype)
+            full[tuple(slice(0, n) for n in x.shape)] = x
+            return full
+
+        slot = free[0]
+        leaves = []
+        for ah, sh, ref in zip(snap.payload, snap.scales,
+                               self._row_struct_flat):
+            if sh is not None:
+                a = kops.decompress_rows(
+                    jnp.asarray(pad_full(ah, ref.shape)),
+                    jnp.asarray(pad_full(sh, ref.shape[:-1] + (1,))),
+                    dtype=ref.dtype)
+            else:
+                a = jnp.asarray(pad_full(ah, ref.shape))
+            leaves.append(a)
+        rows = jax.tree.unflatten(self._row_treedef, leaves)
+        self.cache = self._import_rows(self.cache, rows, jnp.int32(slot))
+        r.slot = slot
+        self.slot_req[slot] = r
+        self.positions[slot] = snap.position
+        self.current_tok[slot] = snap.current_tok
+        self.steps_taken[slot] = snap.steps_taken
+        self.active[slot] = True
+        self.n_imported += 1
+        return slot
+
+    def free_slots(self, model: str = "") -> List[int]:
+        """Slots with no request bound (staged admissions count as bound)."""
+        del model
+        return [i for i in range(self.cfg.n_slots)
+                if self.slot_req[i] is None]
+
+    def active_requests(self) -> List[tuple]:
+        """``[(model, slot, request)]`` for every in-flight decode slot."""
+        return [(r.model, i, r) for i, r in enumerate(self.slot_req)
+                if r is not None and self.active[i]]
+
+    def release_slot(self, slot: int, *, model: str = "") -> Request:
+        """Evict a slot WITHOUT completing its request — the migration
+        path: the request continues in another arena from its exported
+        snapshot.  The cache rows are left stale; admission merge or
+        ``import_slot`` overwrites them before the slot is read again."""
+        del model
+        r = self.slot_req[slot]
+        assert r is not None, f"slot {slot} empty"
+        self.slot_req[slot] = None
+        self.active[slot] = False
+        r.slot = -1
+        return r
+
+    def drain_queue(self) -> List[Request]:
+        """Pop every not-yet-admitted request (tier drain on an outage)."""
+        out = list(self.queue)
+        self.queue.clear()
+        return out
+
+    def cancel_pending(self) -> List[Request]:
+        """Abandon an in-flight chunked admission and return its requests
+        (their prefill restarts wherever they are resubmitted)."""
+        if self._pending is None:
+            return []
+        reqs = list(self._pending.reqs)
+        for slot in self._pending.slots:
+            self.slot_req[slot] = None
+        for r in reqs:
+            r.slot = -1
+        self._pending = None
+        return reqs
+
+    # ------------------------------------------------------------------
     # exit statistics: device counters, periodic flush, adaptive control
     # ------------------------------------------------------------------
     def _maybe_flush(self):
@@ -704,7 +983,9 @@ class ContinuousBatchScheduler:
                 return fn._cache_size()
             except AttributeError:      # pragma: no cover - future JAX
                 return -1
-        sizes = {"prefill": size(self._prefill_chunk)}
+        sizes = {"prefill": size(self._prefill_chunk),
+                 "export_rows": size(self._export_rows),
+                 "import_rows": size(self._import_rows)}
         if self.cfg.segmented:
             for seg in self._segments:
                 sizes[f"segment{seg.index}"] = size(

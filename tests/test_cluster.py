@@ -203,9 +203,13 @@ def test_cluster_degraded_wan_reroutes_execution(granite, plan_cfg):
     assert routed(Scenario.degraded_wan()) < routed(Scenario.default())
 
 
-def test_cluster_split_injects_transfer_delay(granite, plan_cfg):
-    """A split-routed request waits out remote prefill + the KV handoff on
-    the virtual clock before its decode tier admits it."""
+def test_cluster_split_executes_and_charges_measured_bytes(granite,
+                                                           plan_cfg):
+    """A split-routed request EXECUTES in two arenas: it prefills in the
+    prefill tier's pool, its exported slot snapshot crosses the link, and
+    the decode tier's pool imports it mid-flight.  The link clock is
+    charged the snapshot's measured payload bytes, not the planner's
+    analytic estimate."""
     cfg, m, params = granite
     sc = dataclasses.replace(
         Scenario.default(),
@@ -214,7 +218,8 @@ def test_cluster_split_injects_transfer_delay(granite, plan_cfg):
         edge_cloud=LinkProfile("wan-down", 1e3, 10.0))
     cluster = TieredServingCluster(
         m, params, sc, plan_cfg=plan_cfg,
-        cfg=ClusterConfig(base_slots=2, max_len=192, prefill_chunk=16))
+        cfg=ClusterConfig(base_slots=2, max_len=192, prefill_chunk=16,
+                          kv_handoff="raw"))
     rs = np.random.RandomState(2)
     # congest the edge pool so the split candidate wins for the long prompt
     for _ in range(3):
@@ -223,12 +228,36 @@ def test_cluster_split_injects_transfer_delay(granite, plan_cfg):
     cr = cluster.submit(rs.randint(0, cfg.vocab_size, 128), max_new=4,
                         arrival=0.0)
     assert cr.decision.is_split
-    assert cr.decision.transfer_delay > 0.0
-    assert cr.ready_at >= cr.decision.transfer_delay
+    # admission sees BOTH sides of the split: the prefill tier's slot is
+    # booked for the prompt replay, and the decode-tier booking starts
+    # after the estimated prefill + handoff, not at arrival
+    assert cr.pf_booked_slot >= 0
+    assert cr.pf_booked_tier == cr.decision.prefill_tier
+    assert cr.booked_until >= cr.decision.transfer_delay
     cluster.run()
+    assert cr.pf_booked_slot == -1     # released when the prefill landed
     assert cr.done
-    assert cr.latency >= cr.decision.transfer_delay
     assert len(cr.req.out_tokens) == 4
+    # the migration really happened: one export from the prefill tier's
+    # arena, one import into the decode tier's arena
+    pf = cluster.tiers[cr.decision.prefill_tier]
+    dc = cluster.tiers[cr.decision.tier]
+    assert cr.migrations == 1
+    assert pf.sched.n_exported >= 1
+    assert dc.sched.n_imported >= 1
+    # both arenas dispatched decode stages (two-arena execution observed)
+    assert pf.sched.stage_calls["finalize"] > 0
+    assert dc.sched.stage_calls["finalize"] > 0
+    # measured-bytes charging: the handoff time is the link's tx_time of
+    # the actual exported payload, and the request waited it out
+    kv_link = cluster._kv_link(pf.name, dc.name)
+    assert cr.handoff_bytes > 0
+    assert cr.handoff_time == pytest.approx(
+        kv_link.tx_time(cr.handoff_bytes))
+    assert cr.latency >= cr.handoff_time
+    st = cluster.stats()
+    assert st["migration"]["split_handoffs"] == 1
+    assert st["migration"]["bytes_moved"] == cr.handoff_bytes
 
 
 def test_engine_tiered_matches_single_pool(granite, plan_cfg):

@@ -1,0 +1,392 @@
+"""Cross-tier slot migration: export/import round-trips and real splits.
+
+The acceptance claims of the migration PR:
+
+* **Round-trip bit-parity**: a request exported from one arena mid-decode
+  and imported into another (different slot count) continues its greedy
+  decode bit-identically to an unmigrated run — across attention, SSM, and
+  shared-attn cache families, with raw payloads.
+* **Compressed handoff**: the int8 payload (``kernels/feature_compress``)
+  is materially smaller than raw, the dequantized rows stay within
+  quantization tolerance of the raw rows, and the continuation completes.
+* **No per-request recompiles**: export/import are fixed-shape jitted
+  calls over a traced slot index — repeated migrations keep every jit
+  cache entry <= 1.
+* **Tier outage drain**: ``Scenario.tier_outage`` kills a tier mid-trace;
+  in-flight slots migrate to survivors WITHOUT re-running prefill, outputs
+  match the no-outage run exactly (greedy + raw handoff), and ``stats()``
+  carries the migration ledger and resilience numbers.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core import Scenario
+from repro.models import Model
+from repro.serving import (ClusterConfig, ContinuousBatchScheduler,
+                           ModelGroup, MultiModelScheduler, Request,
+                           SchedulerConfig, TieredServingCluster)
+
+# one attention, one SSM, one shared-attn (hybrid) config — the three cache
+# families the row gather/scatter and time-axis truncation must get right
+PARITY_ARCHS = ("granite-3-2b-smoke", "xlstm-350m-smoke", "zamba2-1.2b-smoke")
+
+_CACHE = {}
+
+
+def _model(arch):
+    if arch not in _CACHE:
+        cfg = get_config(arch)
+        m = Model(cfg)
+        _CACHE[arch] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+    return _CACHE[arch]
+
+
+def _scfg(n_slots=2, **kw):
+    kw.setdefault("max_len", 32)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("exit_threshold", 0.6)
+    return SchedulerConfig(n_slots=n_slots, **kw)
+
+
+def _mid_flight(m, params, prompt, max_new=10, polls=5, n_slots=2):
+    """A scheduler with one request admitted and a few decode steps taken
+    (the state a migration lifts out)."""
+    sched = ContinuousBatchScheduler(m, params, _scfg(n_slots))
+    req = Request(tokens=prompt.copy(), max_new=max_new)
+    sched.submit(req)
+    for _ in range(polls):
+        sched.poll()
+    assert not req.done, "request finished before it could migrate"
+    return sched, req
+
+
+# ---------------------------------------------------------------------------
+# export -> import round-trips (scheduler level)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_export_import_greedy_bit_parity(arch):
+    """Migrating mid-decode into an arena with a DIFFERENT slot count must
+    not change a single greedy token vs the unmigrated run."""
+    cfg, m, params = _model(arch)
+    rs = np.random.RandomState(0)
+    prompt = rs.randint(0, cfg.vocab_size, 9)
+
+    ref = ContinuousBatchScheduler(m, params, _scfg(2))
+    r_ref = Request(tokens=prompt.copy(), max_new=10)
+    ref.submit(r_ref)
+    ref.run()
+
+    src, req = _mid_flight(m, params, prompt)
+    snap = src.export_slot(req.slot)
+    assert snap.position == int(prompt.size) + src.steps_taken.max() - 1 \
+        or snap.position > prompt.size  # advanced past the prompt
+    assert snap.payload_bytes > 0
+    src.release_slot(req.slot)
+    assert not src.has_work            # the source arena is really empty
+
+    dst = ContinuousBatchScheduler(m, params, _scfg(3))
+    slot = dst.import_slot(snap)
+    assert dst.active[slot] and dst.slot_req[slot] is req
+    dst.run()
+    assert req.done
+    assert req.out_tokens == r_ref.out_tokens
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_export_truncates_to_written_prefix(arch):
+    """The payload ships only the written time-axis prefix: a snapshot
+    taken later in the decode is strictly larger (measured bytes grow with
+    the KV prefix), and every leaf with a time axis is cut to position."""
+    cfg, m, params = _model(arch)
+    rs = np.random.RandomState(1)
+    prompt = rs.randint(0, cfg.vocab_size, 9)
+    src, req = _mid_flight(m, params, prompt, polls=3)
+    early = src.export_slot(req.slot)
+    for _ in range(4):
+        src.poll()
+    late = src.export_slot(req.slot)
+    assert late.position > early.position
+    full = sum(int(np.prod(ref.shape)) * ref.dtype.itemsize
+               for ref in src._row_struct_flat)
+    if any(ax >= 0 for ax in src._row_axes_flat):   # KV-bearing families
+        assert late.payload_bytes > early.payload_bytes
+        assert early.payload_bytes < full
+    else:                              # pure-SSM: constant-size state ships
+        assert early.payload_bytes == late.payload_bytes == full
+
+
+def test_ring_buffer_cache_ships_whole_and_stays_bit_identical():
+    """long_mode ring caches (window < context) have no truncatable time
+    axis — the layout probe marks every leaf -1, the WHOLE ring ships, and
+    a migration past the wrap point still continues bit-identically."""
+    cfg, m, params = _model("granite-3-2b-smoke")
+    w = cfg.long_context_window
+    rs = np.random.RandomState(7)
+    prompt = rs.randint(0, cfg.vocab_size, w + 2)   # prompt wraps the ring
+    scfg = SchedulerConfig(n_slots=2, max_len=w + 16, prefill_chunk=4,
+                           long_mode=True)
+    ref = ContinuousBatchScheduler(m, params, scfg)
+    r0 = Request(tokens=prompt.copy(), max_new=10)
+    ref.submit(r0)
+    ref.run()
+    src = ContinuousBatchScheduler(m, params, scfg)
+    r1 = Request(tokens=prompt.copy(), max_new=10)
+    src.submit(r1)
+    for _ in range(6):
+        src.poll()
+    assert not r1.done
+    snap = src.export_slot(r1.slot)
+    assert all(ax == -1 for ax in src._row_axes_flat)
+    assert snap.position > src._clen                # exported past the wrap
+    src.release_slot(r1.slot)
+    dst = ContinuousBatchScheduler(m, params, scfg)
+    dst.import_slot(snap)
+    dst.run()
+    assert r1.done and r1.out_tokens == r0.out_tokens
+
+
+def test_compressed_handoff_tolerance_and_size():
+    """int8 payloads are materially smaller; dequantized rows stay within
+    per-row quantization error of the raw rows; continuation completes."""
+    from repro.kernels import ops as kops
+    cfg, m, params = _model("granite-3-2b-smoke")
+    rs = np.random.RandomState(2)
+    prompt = rs.randint(0, cfg.vocab_size, 9)
+    src, req = _mid_flight(m, params, prompt)
+    raw = src.export_slot(req.slot)
+    q = src.export_slot(req.slot, compress=True)
+    assert q.compressed and not raw.compressed
+    assert q.payload_bytes < 0.7 * raw.payload_bytes
+    # leaf-by-leaf: dequantize and compare against the raw rows
+    checked = 0
+    for a_raw, a_q, s in zip(raw.payload, q.payload, q.scales):
+        if s is None:
+            continue
+        x = np.asarray(kops.decompress_rows(
+            jax.numpy.asarray(a_q), jax.numpy.asarray(s),
+            dtype=jax.numpy.float32))
+        ref = np.asarray(a_raw, np.float32)
+        amax = np.max(np.abs(ref), axis=-1, keepdims=True)
+        assert np.all(np.abs(x - ref) <= amax / 127.0 + 1e-6)
+        checked += 1
+    assert checked > 0
+    src.release_slot(req.slot)
+    dst = ContinuousBatchScheduler(m, params, _scfg(2))
+    dst.import_slot(q)
+    dst.run()
+    assert req.done and len(req.out_tokens) == 10
+
+
+def test_slot_payload_bytes_matches_export():
+    """The layout-derived raw size (what the cluster feeds
+    compression_decision BEFORE exporting) must equal the exported
+    snapshot's measured bytes exactly — otherwise the compress choice and
+    the charged bytes disagree."""
+    cfg, m, params = _model("granite-3-2b-smoke")
+    rs = np.random.RandomState(6)
+    src, req = _mid_flight(m, params, rs.randint(0, cfg.vocab_size, 9))
+    predicted = src.slot_payload_bytes(req.slot)
+    assert predicted == src.export_slot(req.slot).payload_bytes
+
+
+def test_rebook_releases_the_old_booking():
+    """An outage re-route books a new tier; the booking left behind on the
+    old (possibly surviving) tier must be released, not stranded in its
+    slot_avail (which would drift queue_costs pessimistic forever)."""
+    cfg, m, params = _model("granite-3-2b-smoke")
+    plan_cfg = get_config("granite-3-2b")
+    cl = TieredServingCluster(
+        m, params, Scenario.default(), plan_cfg=plan_cfg,
+        cfg=ClusterConfig(base_slots=2, max_len=32))
+    cr = cl.submit(np.zeros(4, np.int32), max_new=16)
+    old = cl.tiers[cr.booked_tier]
+    assert min(old.slot_avail[""]) > 0.0      # the booking is visible
+    dst = next(t for t in cl.tiers.values() if t.name != old.name)
+    cl._rebook(cr, dst, 0.0, 16)
+    assert cr.booked_tier == dst.name
+    assert min(old.slot_avail[""]) <= old.vclock + 1e-9   # released
+    assert min(dst.slot_avail[""]) > 0.0      # and re-booked at dst
+
+
+def test_import_adds_no_per_request_recompiles():
+    """Repeated migrations of different requests/slots reuse one compile
+    per direction: every jit cache entry stays <= 1."""
+    cfg, m, params = _model("granite-3-2b-smoke")
+    rs = np.random.RandomState(3)
+    src = ContinuousBatchScheduler(m, params, _scfg(3))
+    dst = ContinuousBatchScheduler(m, params, _scfg(3))
+    reqs = [Request(tokens=rs.randint(0, cfg.vocab_size, 5 + i), max_new=8)
+            for i in range(3)]
+    for r in reqs:
+        src.submit(r)
+    for _ in range(6):
+        src.poll()
+    for r in reqs:
+        assert not r.done
+        snap = src.export_slot(r.slot)
+        src.release_slot(r.slot)
+        dst.import_slot(snap)
+    dst.run()
+    assert all(r.done for r in reqs)
+    for sched in (src, dst):
+        sizes = sched.jit_cache_sizes()
+        if -1 in sizes.values():        # pragma: no cover - future JAX
+            return
+        assert all(v <= 1 for v in sizes.values()), sizes
+    assert dst.jit_cache_sizes()["import_rows"] == 1
+    assert src.jit_cache_sizes()["export_rows"] == 1
+
+
+def test_multipool_migration_routes_by_model():
+    """Snapshots carry their model name: a multi-model pool imports each
+    into the right arena and per-model outputs stay bit-identical."""
+    _, m_a, p_a = _model("granite-3-2b-smoke")
+    cfg_a = get_config("granite-3-2b-smoke")
+    _, m_b, p_b = _model("xlstm-350m-smoke")
+    cfg_b = get_config("xlstm-350m-smoke")
+    group = ModelGroup([("attn", m_a, p_a), ("ssm", m_b, p_b)])
+    rs = np.random.RandomState(4)
+    pa = rs.randint(0, cfg_a.vocab_size, 7)
+    pb = rs.randint(0, cfg_b.vocab_size, 7)
+
+    def reference(arch_model, params, prompt):
+        sched = ContinuousBatchScheduler(arch_model, params, _scfg(2))
+        r = Request(tokens=prompt.copy(), max_new=8)
+        sched.submit(r)
+        sched.run()
+        return r.out_tokens
+
+    ref_a = reference(m_a, p_a, pa)
+    ref_b = reference(m_b, p_b, pb)
+
+    src = MultiModelScheduler(group, _scfg(2))
+    ra = Request(tokens=pa.copy(), max_new=8, model="attn")
+    rb = Request(tokens=pb.copy(), max_new=8, model="ssm")
+    src.submit(ra)
+    src.submit(rb)
+    for _ in range(5):
+        src.poll()
+    dst = MultiModelScheduler(group, _scfg(2))
+    for r in (ra, rb):
+        assert not r.done
+        snap = src.export_slot(r.slot, model=r.model)
+        src.release_slot(r.slot, model=r.model)
+        dst.import_slot(snap)
+    dst.run()
+    assert ra.out_tokens == ref_a
+    assert rb.out_tokens == ref_b
+
+
+# ---------------------------------------------------------------------------
+# tier outage drain (cluster level)
+# ---------------------------------------------------------------------------
+
+def _outage_trace(cfg, rs, n=6):
+    return [rs.randint(0, cfg.vocab_size, int(rs.randint(6, 13)))
+            for _ in range(n)]
+
+
+def _run_outage(m, params, plan_cfg, prompts, scenario, migrate=True):
+    cl = TieredServingCluster(
+        m, params, scenario, plan_cfg=plan_cfg,
+        cfg=ClusterConfig(base_slots=2, max_len=64, prefill_chunk=8,
+                          kv_handoff="raw", migrate_on_outage=migrate))
+    crs = [cl.submit(p.copy(), max_new=8, deadline=0.05, arrival=i * 0.002)
+           for i, p in enumerate(prompts)]
+    cl.run()
+    return cl, crs
+
+
+def test_tier_outage_drains_without_prefill_rerun():
+    """The edge tier dies mid-trace: in-flight slots migrate to survivors
+    (no prefill replay), everything completes, the outputs equal the
+    no-outage run token-for-token, and stats carry the ledger."""
+    cfg, m, params = _model("granite-3-2b-smoke")
+    plan_cfg = get_config("granite-3-2b")
+    rs = np.random.RandomState(0)
+    prompts = _outage_trace(cfg, rs)
+
+    ref_cl, ref_crs = _run_outage(m, params, plan_cfg, prompts,
+                                  Scenario.default())
+    assert ref_cl.stats()["route_counts"]["edge"] > 0, \
+        "trace must exercise the tier that will die"
+
+    cl, crs = _run_outage(m, params, plan_cfg, prompts,
+                          Scenario.tier_outage("edge", at=0.03))
+    st = cl.stats()
+    assert st["completed"] == len(prompts)
+    assert st["dead_tiers"] == ["edge"]
+    assert cl.tiers["edge"].dead and not cl.tiers["edge"].sched.has_work
+    mig = st["migration"]
+    assert mig["outage_migrations"] >= 1, mig
+    assert mig["bytes_moved"] > 0
+    # greedy + raw handoff: the drain preserves the computation exactly
+    for a, b in zip(ref_crs, crs):
+        assert a.req.out_tokens == b.req.out_tokens
+    # migrated requests finished on a surviving tier, prefill not re-run
+    moved = [cr for cr in crs if cr.migrations]
+    assert moved
+    for cr in moved:
+        assert cr.final_tier != "edge"
+        assert cr.requeues == 0
+    # resilience numbers are wired through
+    res = st["resilience"]
+    assert 0.0 < res["survive_prob"] < 1.0
+    assert res["gain"] > 0.0
+
+
+def test_outage_migration_beats_requeue_recompute():
+    """Failover-by-migration must finish the drained requests faster than
+    requeue-and-recompute: recompute pays prompt prefill again, migration
+    pays only the measured KV handoff."""
+    cfg, m, params = _model("granite-3-2b-smoke")
+    plan_cfg = get_config("granite-3-2b")
+    rs = np.random.RandomState(0)
+    prompts = _outage_trace(cfg, rs)
+    sc = Scenario.tier_outage("edge", at=0.03)
+
+    cl_m, crs_m = _run_outage(m, params, plan_cfg, prompts, sc,
+                              migrate=True)
+    cl_r, crs_r = _run_outage(m, params, plan_cfg, prompts, sc,
+                              migrate=False)
+    assert cl_m.stats()["migration"]["outage_migrations"] >= 1
+    assert cl_r.stats()["migration"]["requeued"] >= 1
+    moved = [i for i, cr in enumerate(crs_m) if cr.migrations]
+    assert moved
+    for i in moved:
+        assert crs_m[i].latency < crs_r[i].latency, \
+            (i, crs_m[i].latency, crs_r[i].latency)
+
+
+def test_router_excludes_dead_tiers():
+    """After an outage, new submissions never land on the dead tier."""
+    cfg, m, params = _model("granite-3-2b-smoke")
+    plan_cfg = get_config("granite-3-2b")
+    rs = np.random.RandomState(5)
+    cl, _ = _run_outage(m, params, plan_cfg, _outage_trace(cfg, rs, 4),
+                        Scenario.tier_outage("edge", at=0.01))
+    assert "edge" in cl.dead
+    late = cl.submit(rs.randint(0, cfg.vocab_size, 8), max_new=4,
+                     deadline=0.05, arrival=cl.virtual_now())
+    assert late.decision.tier != "edge"
+    assert late.decision.prefill_tier != "edge"
+    cl.run()
+    assert late.done
+
+
+def test_serve_tier_outage_smoke():
+    """The launch driver exposes the outage scenario end to end."""
+    from repro.launch.serve import serve_tiered_poisson
+    stats = serve_tiered_poisson(
+        "granite-3-2b-smoke", rate=100.0, n_requests=8, base_slots=2,
+        prompt_len=12, max_new=8, scenario="tier-outage", seed=0,
+        quiet=True)
+    assert stats["completed"] == 8
+    assert stats["tiers"]["edge"]["dead"]
+    assert "resilience" in stats
+    mig = stats["migration"]
+    assert mig["outage_migrations"] + mig["requeued"] >= 1
