@@ -2,15 +2,17 @@
 #   make test        tier-1 verify (ROADMAP.md): the whole suite, fail-fast
 #   make test-fast   suite minus the slow dry-run compile test
 #   make lint        byte-compile src/tests/benchmarks (import/syntax gate)
-#   make check       CI gate: lint + test-fast
+#   make analyze     static invariant analyzer (recompile hazards, Pallas
+#                    tile legality) gated on analysis_baseline.json
+#   make check       CI gate: lint + analyze + test-fast
 #   make serve-bench continuous batching vs sequential serving throughput
 #   make bench-smoke tiered (cloud/edge/device) serving benchmark, tiny trace
 #   make bench-exit  early-exit threshold sweep (tok/s + p50 vs threshold)
 #   make bench-multi multi-model pool vs swap-serving (mixed-model trace)
 #   make bench-migrate  executed prefill/decode splits + tier-outage
 #                    failover-by-migration vs requeue-and-recompute
-.PHONY: test test-fast lint check serve-bench bench-smoke bench-exit \
-	bench-multi bench-migrate
+.PHONY: test test-fast lint analyze check serve-bench bench-smoke \
+	bench-exit bench-multi bench-migrate
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -22,7 +24,10 @@ test-fast:
 lint:
 	python -m compileall -q src tests benchmarks
 
-check: lint test-fast
+analyze:
+	PYTHONPATH=src python -m repro.analysis
+
+check: lint analyze test-fast
 
 serve-bench:
 	python benchmarks/serving_bench.py

@@ -53,6 +53,22 @@ def _load_trajectory() -> list:
     return []
 
 
+def _analysis_violations() -> dict:
+    """Static-analyzer counts for the trajectory entry: total findings and
+    how many are new vs the committed baseline — a perf trajectory where
+    hazard counts creep up is regressing even if tok/s holds."""
+    try:
+        from repro.analysis import (lint_paths, load_baseline, new_findings)
+        root = __file__.rsplit("/", 2)[0]
+        findings = lint_paths([os.path.join(root, "src")], repo_root=root)
+        fresh = new_findings(
+            findings, load_baseline(os.path.join(root,
+                                                 "analysis_baseline.json")))
+        return {"total": len(findings), "new": len(fresh)}
+    except Exception:                  # pragma: no cover - analyzer broken
+        return {"total": -1, "new": -1}
+
+
 def main() -> None:
     from benchmarks import (table1_models, table2_hardware,
                             table3_cloud_device, table4_edge_device,
@@ -104,6 +120,7 @@ def main() -> None:
         "exit_sweep": exits,
         "multi_model": multi,
         "migration": migration,
+        "analysis_violations": _analysis_violations(),
     }
     trajectory = [e for e in _load_trajectory()
                   if e.get("sha") != entry["sha"]]

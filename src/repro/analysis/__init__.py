@@ -1,0 +1,26 @@
+"""Static + runtime invariant analyzer for the serving stack.
+
+* :mod:`repro.analysis.lint` — AST pass over ``src/``: recompile hazards
+  in traced code (TRC rules) and Pallas tile/grid legality (PLT rules).
+* :mod:`repro.analysis.guards` — runtime guards tests attach to live
+  schedulers: ``no_recompile``, ``guard_polling`` and ``SlotAudit``.
+* :mod:`repro.analysis.report` — findings, rendering and the committed
+  baseline (CI gates on NEW violations only).
+
+Run it: ``python -m repro.analysis`` (or ``make analyze``); the gate is
+part of ``make check``.  Invariants are documented in
+``docs/invariants.md``.
+"""
+from repro.analysis.guards import (GuardError, SlotAudit, guard_polling,
+                                   no_recompile, transfer_guard)
+from repro.analysis.lint import lint_file, lint_paths, lint_source
+from repro.analysis.report import (Finding, load_baseline, new_findings,
+                                   save_baseline, sort_findings, to_json)
+from repro.analysis.rules import RULES, Rule
+
+__all__ = [
+    "Finding", "GuardError", "RULES", "Rule", "SlotAudit", "guard_polling",
+    "lint_file", "lint_paths", "lint_source", "load_baseline",
+    "new_findings", "no_recompile", "save_baseline", "sort_findings",
+    "to_json", "transfer_guard",
+]

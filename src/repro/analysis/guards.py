@@ -1,0 +1,264 @@
+"""Runtime invariant guards for the serving stack.
+
+Three guards, all opt-in (tests attach them; production polling pays
+nothing):
+
+* :func:`no_recompile` — context manager asserting that a scheduler /
+  pool / cluster compiled at most ``bound`` new jit entries inside the
+  block (``jit_cache_sizes()`` deltas; the steady-state contract is one
+  compile per stage, forever).
+* :func:`guard_polling` / :func:`transfer_guard` — make *implicit*
+  host<->device transfers inside ``poll()`` hard errors.  Intended syncs
+  in the hot loop must be explicit (``jax.device_get`` /
+  ``jax.device_put``) so every round-trip is visible in the source.
+* :class:`SlotAudit` — wraps ``poll()`` and re-checks slot-accounting
+  invariants after every round: free+staged+live slots partition the
+  pool, positions/steps stay in range, booking ledgers balance, and at
+  completion the exit-counter histogram equals ``tokens_served`` and no
+  orphaned migration state remains.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+
+class GuardError(AssertionError):
+    """A runtime invariant guard tripped."""
+
+
+# ---------------------------------------------------------------------------
+# no_recompile: jit cache deltas
+# ---------------------------------------------------------------------------
+def _flat_cache_sizes(target: Any) -> Dict[str, int]:
+    """Flatten (possibly nested, e.g. cluster tier -> stage) cache-size
+    dicts to ``"tier/stage" -> n``."""
+    out: Dict[str, int] = {}
+
+    def rec(prefix: str, d: Dict[str, Any]) -> None:
+        for k, v in d.items():
+            key = f"{prefix}/{k}" if prefix else str(k)
+            if isinstance(v, dict):
+                rec(key, v)
+            else:
+                out[key] = int(v)
+
+    rec("", target.jit_cache_sizes())
+    return out
+
+
+@contextlib.contextmanager
+def no_recompile(target: Any, *, bound: int = 0) -> Iterator[None]:
+    """Assert ``target`` compiles at most ``bound`` NEW jit entries inside
+    the block.  Stages whose cache size is unreadable (-1, older jaxlib)
+    are skipped rather than guessed."""
+    before = _flat_cache_sizes(target)
+    yield
+    after = _flat_cache_sizes(target)
+    grown: Dict[str, tuple] = {}
+    total = 0
+    for key, n_after in after.items():
+        n_before = before.get(key, 0)
+        if n_after < 0 or n_before < 0:
+            continue                       # cache size probe unsupported
+        delta = n_after - max(0, n_before)
+        if delta > 0:
+            grown[key] = (n_before, n_after)
+            total += delta
+    if total > bound:
+        detail = ", ".join(f"{k}: {a}->{b}" for k, (a, b) in sorted(grown.items()))
+        raise GuardError(
+            f"no_recompile(bound={bound}): {total} new jit compilation(s) "
+            f"inside guarded block ({detail}) — a fixed-shape stage retraced")
+
+
+# ---------------------------------------------------------------------------
+# transfer guard: implicit host<->device syncs become hard errors
+# ---------------------------------------------------------------------------
+@contextlib.contextmanager
+def transfer_guard(mode: str = "disallow") -> Iterator[None]:
+    """Thin canonical wrapper over ``jax.transfer_guard``: under
+    ``"disallow"``, implicit transfers raise while explicit
+    ``jax.device_get`` / ``jax.device_put`` stay legal."""
+    with jax.transfer_guard(mode):
+        yield
+
+
+@contextlib.contextmanager
+def guard_polling(target: Any, mode: str = "disallow") -> Iterator[Any]:
+    """Patch ``target.poll`` so every call runs under ``transfer_guard``:
+    an implicit sync inside the scheduler/cluster hot loop is a hard
+    error, while setup/teardown (submit, flush, result reads) outside
+    ``poll()`` stays unrestricted.  Warm the jit caches with one poll
+    BEFORE entering — compilation itself may transfer."""
+    orig = target.poll
+
+    def guarded(*a: Any, **kw: Any):
+        with jax.transfer_guard(mode):
+            return orig(*a, **kw)
+
+    target.poll = guarded
+    try:
+        yield target
+    finally:
+        target.poll = orig
+
+
+# ---------------------------------------------------------------------------
+# SlotAudit: slot accounting / booking-ledger invariants after every poll
+# ---------------------------------------------------------------------------
+class SlotAudit:
+    """Re-checks pool invariants after every ``poll()``.
+
+    ``SlotAudit(sched).attach()`` wraps the target's ``poll``; call
+    ``detach()`` (or use as a context manager) to restore.  Works on a
+    ``ContinuousBatchScheduler``, a ``MultiModelScheduler`` (audits every
+    per-model arena), or a ``TieredServingCluster`` (audits every tier's
+    pool plus the booking ledgers and migration queues).
+    """
+
+    def __init__(self, target: Any):
+        self.target = target
+        self.polls = 0
+        self._orig_poll: Optional[Any] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def attach(self) -> "SlotAudit":
+        assert self._orig_poll is None, "already attached"
+        orig = self.target.poll
+
+        def audited(*a: Any, **kw: Any):
+            rep = orig(*a, **kw)
+            self.check()
+            return rep
+
+        self._orig_poll = orig
+        self.target.poll = audited
+        return self
+
+    def detach(self) -> None:
+        if self._orig_poll is not None:
+            self.target.poll = self._orig_poll
+            self._orig_poll = None
+
+    def __enter__(self) -> "SlotAudit":
+        return self.attach()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.detach()
+
+    # -- checks -------------------------------------------------------------
+    def check(self) -> None:
+        self.polls += 1
+        violations: List[str] = []
+        t = self.target
+        if hasattr(t, "tiers"):
+            self._check_cluster(t, violations)
+        elif hasattr(t, "pools"):
+            for name, pool in t.pools.items():
+                self._check_pool(pool, violations, prefix=f"pool {name}: ")
+                if not t.has_work:
+                    self._check_pool_idle(pool, violations,
+                                          prefix=f"pool {name}: ")
+        else:
+            self._check_pool(t, violations)
+            if not t.has_work:
+                self._check_pool_idle(t, violations)
+        if violations:
+            raise GuardError(
+                "slot audit failed after poll "
+                f"{self.polls}:\n  " + "\n  ".join(violations))
+
+    # one ContinuousBatchScheduler arena, between polls -----------------
+    @staticmethod
+    def _check_pool(s: Any, out: List[str], prefix: str = "") -> None:
+        n = s.cfg.n_slots
+        staged = set(s._pending.slots) if s._pending is not None else set()
+        for i in range(n):
+            booked = s.slot_req[i] is not None
+            live = bool(s.active[i])
+            if live and not booked:
+                out.append(f"{prefix}slot {i} active without a request "
+                           f"(free+active != slots)")
+            if booked and not live and i not in staged:
+                out.append(f"{prefix}slot {i} holds a request but is neither "
+                           f"live nor staged for prefill (leaked slot)")
+            if live and booked:
+                r = s.slot_req[i]
+                if not (0 <= s.positions[i] <= s.cfg.max_len):
+                    out.append(f"{prefix}slot {i} position "
+                               f"{int(s.positions[i])} outside "
+                               f"[0, {s.cfg.max_len}]")
+                if s.steps_taken[i] > r.max_new:
+                    out.append(f"{prefix}slot {i} ran {int(s.steps_taken[i])} "
+                               f"decode steps > max_new {r.max_new}")
+        for r in s.completed:
+            if not r.done:
+                out.append(f"{prefix}completed request {r.req_id} not "
+                           f"marked done")
+
+    # …and once the pool is fully drained -------------------------------
+    @staticmethod
+    def _check_pool_idle(s: Any, out: List[str], prefix: str = "") -> None:
+        if any(q is not None for q in s.slot_req):
+            return                      # not actually idle (defensive)
+        # the exit histogram must balance the served-token count exactly;
+        # flushing syncs, so explicitly allow the transfer (the audit runs
+        # inside guard_polling's disallow scope in tests)
+        with jax.transfer_guard("allow"):
+            counts = s.flush_counters()
+        total = int(np.sum(counts))
+        if total != s.tokens_served:
+            out.append(f"{prefix}exit-counter histogram sums to {total} but "
+                       f"tokens_served is {s.tokens_served} (alive-mask / "
+                       f"counter drift)")
+
+    # tiered cluster: bookings, ledgers, migration queues ----------------
+    def _check_cluster(self, c: Any, out: List[str]) -> None:
+        for name, tr in c.tiers.items():
+            sched = tr.sched
+            pools = sched.pools.values() if hasattr(sched, "pools") \
+                else [sched]
+            for p in pools:
+                self._check_pool(p, out, prefix=f"tier {name}: ")
+            for m, sa in tr.slot_avail.items():
+                if len(sa) != len(tr.slot_released[m]):
+                    out.append(f"tier {name}: slot_avail/{m} and "
+                               f"slot_released/{m} ledgers diverged "
+                               f"({len(sa)} vs {len(tr.slot_released[m])})")
+        for cr in c.requests:
+            if cr.done and (cr.booked_slot >= 0 or cr.pf_booked_slot >= 0):
+                out.append(f"request {cr.req.req_id} done but still holds a "
+                           f"slot booking (ledger leak)")
+            if cr.booked_slot >= 0 and cr.booked_tier:
+                tr = c.tiers.get(cr.booked_tier)
+                if tr is not None and not tr.dead:
+                    sa = tr.slot_avail.get(cr.booked_model, [])
+                    if not (0 <= cr.booked_slot < len(sa)):
+                        out.append(f"request {cr.req.req_id} booked slot "
+                                   f"{cr.booked_slot} outside tier "
+                                   f"{cr.booked_tier}'s ledger")
+        if not c.has_work:
+            for cr in c.requests:
+                if cr.booked_slot >= 0 or cr.pf_booked_slot >= 0:
+                    out.append(f"idle cluster: request {cr.req.req_id} "
+                               f"still holds a booking")
+            exported = imported = 0
+            for name, tr in c.tiers.items():
+                if tr.inbound:
+                    out.append(f"idle cluster: tier {name} has "
+                               f"{len(tr.inbound)} undelivered inbound "
+                               f"migration(s) (orphaned snapshots)")
+                sched = tr.sched
+                pools = sched.pools.values() if hasattr(sched, "pools") \
+                    else [sched]
+                for p in pools:
+                    exported += p.n_exported
+                    imported += p.n_imported
+                    self._check_pool_idle(p, out, prefix=f"tier {name}: ")
+            if exported != imported:
+                out.append(f"idle cluster: {exported} slots exported but "
+                           f"{imported} imported (orphaned snapshot)")

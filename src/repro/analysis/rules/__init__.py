@@ -1,0 +1,68 @@
+"""Rule registry for the serving-stack analyzer.
+
+Each rule has a stable id (referenced by baselines, docs and tests), a
+severity, and a one-line description.  The ids are grouped:
+
+* ``TRC***`` — recompile / concretization hazards inside traced code
+  (jitted functions, ``lax.scan`` bodies, Pallas kernels).
+* ``PLT***`` — Pallas-specific legality and plumbing rules.
+
+``docs/invariants.md`` lists every rule with its enforced invariant and
+how to run / append the committed baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str
+    severity: str                      # "error" | "warning"
+    description: str
+
+
+_ALL = [
+    Rule("TRC001", "traced-concretization", "error",
+         "int()/float()/bool() on a traced value forces a host sync and "
+         "bakes the value into the compiled graph (recompile per value)"),
+    Rule("TRC002", "traced-item-sync", "error",
+         ".item()/.tolist() on a traced value is a blocking device->host "
+         "sync inside a traced code path"),
+    Rule("TRC003", "traced-len", "warning",
+         "len() on a traced value: static for arrays but an error on "
+         "scalars, and usually feeds shape-dependent host control flow"),
+    Rule("TRC004", "traced-control-flow", "error",
+         "Python if/while/for/assert on a traced value concretizes it at "
+         "trace time — use lax.cond/select/scan instead"),
+    Rule("TRC005", "traced-fstring", "warning",
+         "f-string formatting of a traced value concretizes it (and hides "
+         "a device sync inside logging)"),
+    Rule("TRC006", "jit-closure-capture", "error",
+         "device array captured in a jax.jit closure is baked in as a "
+         "constant: stale values and a silent recompile when replaced"),
+    Rule("TRC007", "host-numpy-on-traced", "error",
+         "np.* call on a traced value concretizes it on host inside a "
+         "traced code path"),
+    Rule("PLT001", "pallas-tile-lane", "error",
+         "pl.BlockSpec/VMEM block's last dim must be a multiple of 128 "
+         "(MXU/VPU lane width) or exactly 1"),
+    Rule("PLT002", "pallas-tile-sublane", "error",
+         "pl.BlockSpec/VMEM block's second-to-last dim must be a multiple "
+         "of 8 (f32 sublane; 16 for bf16, 32 for int8) or exactly 1"),
+    Rule("PLT003", "pallas-missing-interpret", "error",
+         "pl.pallas_call without interpret= plumbing cannot fall back off "
+         "TPU — thread kernels through kernels.backend.resolve_interpret"),
+    Rule("PLT004", "pallas-grid-mismatch", "error",
+         "BlockSpec index_map arity must match the grid rank and return "
+         "one coordinate per block dim"),
+    Rule("PLT005", "backend-detect-dup", "error",
+         "jax.default_backend() probed outside kernels/backend.py: use the "
+         "canonical on_cpu/off_tpu/resolve_interpret helpers"),
+    Rule("PARSE", "unparseable-file", "error",
+         "file failed to parse; the analyzer cannot vouch for it"),
+]
+
+RULES: Dict[str, Rule] = {r.id: r for r in _ALL}

@@ -1,0 +1,39 @@
+"""Canonical backend / interpret-mode auto-detection for the Pallas kernels.
+
+Every kernel wrapper threads an ``interpret`` flag through to
+``pl.pallas_call`` so the same code runs interpreted off-TPU (the kernel
+body executes in Python) and compiles to Mosaic on a real TPU.  The
+auto-detection lived copy-pasted in ``exit_head.py``, ``feature_compress.py``
+and ``ops.py``; this module is now the single definition, and the
+``repro.analysis`` lint pass (rule PLT005) flags any new
+``jax.default_backend()`` call outside this file so the pattern cannot
+fork again.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_cpu() -> bool:
+    """True when the default backend is CPU (interpret for CPU only —
+    the flash-attention path, which has a compiled GPU lowering)."""
+    return jax.default_backend() == "cpu"
+
+
+def off_tpu() -> bool:
+    """True when the default backend is anything but a real TPU (the
+    Mosaic target) — the default auto-detection for the MXU kernels."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None, *,
+                      tpu_only: bool = True) -> bool:
+    """Resolve an ``interpret=None`` auto flag to a concrete bool.
+
+    ``tpu_only=True`` (default): interpret everywhere except a real TPU.
+    ``tpu_only=False``: interpret only on CPU (kernels with a non-Mosaic
+    compiled lowering, e.g. flash attention via Triton).
+    """
+    if interpret is not None:
+        return interpret
+    return off_tpu() if tpu_only else on_cpu()

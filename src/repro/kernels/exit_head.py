@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _exit_head_kernel(x_ref, w_ref, m_ref, s_ref, t_ref):
     vj = pl.program_id(1)
@@ -55,12 +57,11 @@ def exit_head_entropy(x, w, *, block_t: int = 128, block_v: int = 512,
     """x [T, D] (any float dtype), w [D, V] -> entropy [T] fp32.
 
     T, V padded to block multiples by the wrapper in ops.py; this function
-    requires exact tiling.  ``interpret=None`` auto-detects the backend:
-    the kernel body runs interpreted everywhere except on a real TPU,
-    where the same call compiles to Mosaic.
+    requires exact tiling.  ``interpret=None`` auto-detects the backend
+    (``kernels.backend``): the kernel body runs interpreted everywhere
+    except on a real TPU, where the same call compiles to Mosaic.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     tsz, d = x.shape
     d2, v = w.shape
     assert d == d2 and tsz % block_t == 0 and v % block_v == 0

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _quant_kernel(x_ref, q_ref, scale_ref):
     x = x_ref[...].astype(jnp.float32)                     # [bt, D]
@@ -34,11 +36,11 @@ def quantize_rows(x, *, block_t: int = 256, interpret: bool | None = None):
 
     T, D padded to MXU-legal multiples by the wrapper in ops.py; this
     function requires exact tiling.  ``interpret=None`` auto-detects the
-    backend: the kernel body runs interpreted everywhere except on a real
-    TPU, where the same call compiles to Mosaic.
+    backend (``kernels.backend``): the kernel body runs interpreted
+    everywhere except on a real TPU, where the same call compiles to
+    Mosaic.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     tsz, d = x.shape
     assert tsz % block_t == 0
     q, scale = pl.pallas_call(
@@ -61,8 +63,7 @@ def dequantize_rows(q, scale, *, block_t: int = 256, dtype=jnp.bfloat16,
 
     ``interpret=None`` auto-detects the backend like ``quantize_rows``.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     tsz, d = q.shape
     assert tsz % block_t == 0
     return pl.pallas_call(

@@ -6,23 +6,12 @@ on CPU; on a real TPU backend the same call compiles to Mosaic).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import attention as _attn
 from repro.kernels import exit_head as _exit
 from repro.kernels import feature_compress as _fc
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
-
-
-def _off_tpu() -> bool:
-    """Interpret everywhere except a real TPU (Mosaic target)."""
-    return jax.default_backend() != "tpu"
+from repro.kernels.backend import resolve_interpret as _resolve_interpret
 
 
 def exit_head_entropy(x, w, *, block_t: int = 128, block_v: int = 512,
@@ -36,7 +25,7 @@ def exit_head_entropy(x, w, *, block_t: int = 128, block_v: int = 512,
     multiple of 128 — zero feature columns/rows contribute nothing to the
     logits, so the entropy is unchanged.
     """
-    interpret = _off_tpu() if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
     align = (not interpret) if align_128 is None else align_128
     lead = x.shape[:-1]
     d = x.shape[-1]
@@ -76,7 +65,7 @@ def compress_rows(x, *, interpret: bool | None = None):
     a multiple of 128.  Zero padding is exact — padded feature columns do
     not move a row's abs-max, so scales and quantized values are unchanged.
     """
-    interpret = _off_tpu() if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
     lead = x.shape[:-1]
     d = x.shape[-1]
     x2 = x.reshape(-1, d)
@@ -97,7 +86,7 @@ def decompress_rows(q, scale, *, dtype=jnp.bfloat16,
 
     Backend detection and MXU-legal padding mirror ``compress_rows``
     (padded int8 zeros dequantize to zeros and are sliced off)."""
-    interpret = _off_tpu() if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
     lead = q.shape[:-1]
     d = q.shape[-1]
     q2 = q.reshape(-1, d)
@@ -119,7 +108,7 @@ def flash_attention_bshd(q, k, v, *, causal: bool = True, window: int = 0,
                          block_q: int = 128, block_k: int = 128,
                          interpret: bool | None = None):
     """q [B, Sq, Nq, H], k/v [B, Skv, Nkv, H] (GQA expanded here)."""
-    interpret = _on_cpu() if interpret is None else interpret
+    interpret = _resolve_interpret(interpret, tpu_only=False)
     b, sq, nq, h = q.shape
     nkv = k.shape[2]
     if nkv != nq:

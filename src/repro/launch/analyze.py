@@ -1,0 +1,79 @@
+"""CLI for the static analyzer: ``python -m repro.analysis``.
+
+Walks ``src/`` (or the given paths), prints findings, and gates on the
+committed baseline (``analysis_baseline.json`` at the repo root): the
+exit code is non-zero only for violations NOT in the baseline, so CI
+fails on new hazards without forcing a big-bang cleanup.  Run with
+``--update-baseline`` to accept the current state.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Optional, Sequence
+
+from repro.analysis.lint import lint_paths
+from repro.analysis.report import (load_baseline, new_findings,
+                                   save_baseline, sort_findings, to_json)
+
+
+def find_repo_root(start: Optional[str] = None) -> str:
+    cur = os.path.abspath(start or os.getcwd())
+    while True:
+        if os.path.isdir(os.path.join(cur, ".git")) \
+                or os.path.isfile(os.path.join(cur, "ROADMAP.md")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return os.path.abspath(start or os.getcwd())
+        cur = parent
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static invariant analyzer: recompile hazards, Pallas "
+                    "tile legality, backend-probe hygiene")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: <repo>/src)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline json (default: "
+                         "<repo>/analysis_baseline.json)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write the current findings as the new baseline")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit machine-readable findings json")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; always exit 0")
+    args = ap.parse_args(argv)
+
+    root = find_repo_root()
+    paths = list(args.paths) or [os.path.join(root, "src")]
+    baseline_path = args.baseline or os.path.join(root,
+                                                  "analysis_baseline.json")
+
+    findings = lint_paths(paths, repo_root=root)
+    if args.as_json:
+        print(to_json(findings))
+    if args.update_baseline:
+        save_baseline(baseline_path, findings)
+        print(f"baseline updated: {len(findings)} finding(s) -> "
+              f"{os.path.relpath(baseline_path, root)}")
+        return 0
+
+    fresh = new_findings(findings, load_baseline(baseline_path))
+    known = len(findings) - len(fresh)
+    if not args.as_json:
+        for f in sort_findings(fresh):
+            print(f.render())
+    n_err = sum(1 for f in fresh if f.severity == "error")
+    print(f"analysis: {len(findings)} finding(s), {known} baselined, "
+          f"{len(fresh)} new ({n_err} error(s))", file=sys.stderr)
+    if args.no_gate:
+        return 0
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -271,13 +271,29 @@ class ContinuousBatchScheduler:
         # reproduce identical samples across calls (seed-engine semantics)
         self._rng_tick = 0
         self._admit_tick = 0
+        # host scalars fed to jitted stages are uploaded explicitly
+        # (jax.device_put) and cached where the value repeats, so poll()
+        # runs clean under jax.transfer_guard("disallow") — see
+        # analysis.guards.guard_polling and docs/invariants.md
+        self._t0_cache: Dict[int, Any] = {}
+        self._thr_cache: tuple = (None, None)   # (host value, device scalar)
 
         # --- jitted, fixed-shape device functions ---
         self._counters = jnp.zeros(self._n_exits + 1, jnp.int32)
         self._zero_key = jax.random.PRNGKey(0)
+        # fixed per-step initial masks, built once: eager jnp.ones/full
+        # upload their fill scalar (an implicit h2d the transfer guard
+        # rejects) and re-allocating them every decode step is waste
+        self._alive0 = jnp.ones((b,), bool)
+        self._first_exit0 = jnp.full((b,), self._n_exits, jnp.int32)
         self._init_cache = jax.jit(
             lambda: model.init_decode_cache(b, self._clen,
                                             long_mode=cfg.long_mode))
+        # fresh carried-logits buffer per admission, filled ON device: the
+        # buffer is donated chunk-to-chunk so it can't be cached, and eager
+        # jnp.zeros would implicitly upload its fill scalar every admission
+        self._fresh_last = jax.jit(
+            lambda: jnp.zeros((b, self._vocab), jnp.float32))
         # donate dead-after-call buffers (caches, counters, carried logits)
         # so XLA aliases them in place instead of copying the KV arena
         # every token; merge donates only the old pool (the output can alias
@@ -561,9 +577,29 @@ class ContinuousBatchScheduler:
         self._pending = _PendingPrefill(
             reqs=reqs, slots=take, tokens=tokens, lengths=lengths,
             lengths_d=jnp.asarray(lengths), admit=admit, cache=fresh,
-            last=jnp.zeros((b, self._vocab), jnp.float32),
+            last=self._fresh_last(),
             next_chunk=0, n_chunks=n_chunks)
         return reqs
+
+    def _chunk_t0(self, ci: int):
+        """Device scalar for chunk offset ``ci * prefill_chunk``, uploaded
+        once per distinct chunk index (explicit h2d; amortized across every
+        later admission reusing the same offset)."""
+        t0 = self._t0_cache.get(ci)
+        if t0 is None:
+            t0 = jax.device_put(
+                np.asarray(ci * self.cfg.prefill_chunk, np.int32))
+            self._t0_cache[ci] = t0
+        return t0
+
+    def _thr_device(self, thr: float):
+        """Device scalar for the exit threshold, re-uploaded only when the
+        adaptive controller actually moves it (explicit h2d; steady-state
+        polls reuse the cached upload)."""
+        if self._thr_cache[0] != thr:
+            self._thr_cache = (thr, jax.device_put(
+                np.asarray(thr, np.float32)))
+        return self._thr_cache[1]
 
     def _advance_prefill(self, max_chunks: int, rep: StepReport):
         """Run up to ``max_chunks`` pending prefill chunks (<=0 = all); merge
@@ -578,7 +614,7 @@ class ContinuousBatchScheduler:
             p.cache, p.last = self._prefill_chunk(
                 self.params, p.cache,
                 jnp.asarray(p.tokens[:, ci * chunk:(ci + 1) * chunk]),
-                jnp.int32(ci * chunk), p.lengths_d, p.last)
+                self._chunk_t0(ci), p.lengths_d, p.last)
             rep.prefill_chunks += 1
             lo, hi = ci * chunk, (ci + 1) * chunk
             rep.prefill_tokens += int(
@@ -588,7 +624,7 @@ class ContinuousBatchScheduler:
             return
         # last chunk replayed: merge rows into the pool and go live
         self.cache = self._merge(jnp.asarray(p.admit), p.cache, self.cache)
-        logits_np = np.asarray(p.last)
+        logits_np = np.asarray(jax.device_get(p.last))
         for slot, r in zip(p.slots, p.reqs):
             tok0 = self._sample_first(logits_np[slot])
             r.out_tokens.append(tok0)
@@ -607,9 +643,14 @@ class ContinuousBatchScheduler:
         if self.cfg.temperature <= 0.0 or self._rng is None:
             return int(np.argmax(logits_row))
         self._admit_tick += 1
-        key = jax.random.fold_in(self._rng, 1_000_003 + self._admit_tick)
-        return int(jax.random.categorical(
-            key, jnp.asarray(logits_row) / self.cfg.temperature))
+        # fold in a 0-d array (a bare python int is an implicit h2d upload)
+        # and divide by temperature on host — logits_row is already host-side
+        key = jax.random.fold_in(
+            self._rng,
+            jnp.asarray(np.asarray(1_000_003 + self._admit_tick, np.uint32)))
+        scaled = np.asarray(logits_row, np.float32) / self.cfg.temperature
+        return int(jax.device_get(
+            jax.random.categorical(key, jnp.asarray(scaled))))
 
     # ------------------------------------------------------------------
     # decode: one fixed-shape step over the whole pool
@@ -620,14 +661,13 @@ class ContinuousBatchScheduler:
         dispatching segments once no *active* slot is still alive — that
         host-side short-circuit is where early exits actually save FLOPs.
         Records the dispatched depth in ``_last_depth_frac``."""
-        b = self.cfg.n_slots
         # alive starts all-true (not `active`): inactive pool rows compute
         # and write garbage exactly like the monolithic step, so threshold-0
         # runs stay bit-identical to it; their probe hits are irrelevant
         # because finalize masks counters by `active` and the short-circuit
         # condition only consults active rows.
-        alive = jnp.ones((b,), bool)
-        first_exit = jnp.full((b,), self._n_exits, jnp.int32)
+        alive = self._alive0
+        first_exit = self._first_exit0
         x = tokens
         layers_run = 0
         segs_run = 0
@@ -644,13 +684,15 @@ class ContinuousBatchScheduler:
             if seg.exit_index is None or not probing:
                 continue
             alive, first_exit = self._probe_fns[seg.exit_index](
-                self.params, x, alive, first_exit, jnp.float32(thr))
+                self.params, x, alive, first_exit, self._thr_device(thr))
             self.stage_calls[f"probe{seg.exit_index}"] += 1
-            if not bool(np.asarray(jnp.any(alive & active_d))):
+            # the short-circuit is an INTENDED per-probe round-trip: make
+            # the d2h sync explicit so guard_polling can vouch for the rest
+            if not bool(jax.device_get(jnp.any(alive & active_d))):
                 break
         greedy, sampled, self._counters = self._finalize(
             self.params, x, self._counters, first_exit, active_d, key,
-            jnp.int32(self._rng_tick))
+            jax.device_put(np.asarray(self._rng_tick, np.int32)))
         self.stage_calls["finalize"] += 1
         self._last_segments_run = segs_run
         self._last_depth_frac = layers_run / max(1, self.model.cfg.num_layers)
@@ -672,11 +714,12 @@ class ContinuousBatchScheduler:
         else:
             greedy, sampled, self.cache, self._counters = self._decode(
                 self.params, self.cache, tokens, positions, active_d,
-                self._counters, jnp.float32(thr), key,
-                jnp.int32(self._rng_tick))
+                self._counters, self._thr_device(thr), key,
+                jax.device_put(np.asarray(self._rng_tick, np.int32)))
             self._last_segments_run = len(self._segments)
             self._last_depth_frac = 1.0
-        nxt = np.asarray(sampled if self._rng is not None else greedy)
+        nxt = np.asarray(jax.device_get(
+            sampled if self._rng is not None else greedy))
         self._step_idx += 1
         self._rng_tick += 1
         n_active = int(self.active.sum())
@@ -787,7 +830,8 @@ class ContinuousBatchScheduler:
         from repro.kernels import ops as kops
         r = self.slot_req[slot]
         assert r is not None and self.active[slot], f"slot {slot} not active"
-        rows = self._export_rows(self.cache, jnp.int32(slot))
+        rows = self._export_rows(
+            self.cache, jax.device_put(np.asarray(slot, np.int32)))
         position = int(self.positions[slot])
         payload: List[Any] = []
         scales: List[Optional[Any]] = []
@@ -795,9 +839,13 @@ class ContinuousBatchScheduler:
         for a, ax in zip(jax.tree.leaves(rows), self._row_axes_flat):
             s = None
             if compress and jnp.issubdtype(a.dtype, jnp.floating):
-                a, s = kops.compress_rows(a)
-            ah = np.asarray(a)
-            sh = None if s is None else np.asarray(s)
+                # the quantizer wrapper pads eagerly (its fill scalars are
+                # implicit uploads); this IS the migration payload boundary,
+                # so transfers here are the intended work
+                with jax.transfer_guard("allow"):
+                    a, s = kops.compress_rows(a)
+            ah = np.asarray(jax.device_get(a))
+            sh = None if s is None else np.asarray(jax.device_get(s))
             if ax >= 0:
                 cut = [slice(None)] * ah.ndim
                 cut[ax] = slice(0, min(position, ah.shape[ax]))
@@ -859,18 +907,22 @@ class ContinuousBatchScheduler:
 
         slot = free[0]
         leaves = []
-        for ah, sh, ref in zip(snap.payload, snap.scales,
-                               self._row_struct_flat):
-            if sh is not None:
-                a = kops.decompress_rows(
-                    jnp.asarray(pad_full(ah, ref.shape)),
-                    jnp.asarray(pad_full(sh, ref.shape[:-1] + (1,))),
-                    dtype=ref.dtype)
-            else:
-                a = jnp.asarray(pad_full(ah, ref.shape))
-            leaves.append(a)
+        # restoring the shipped payload is the migration boundary's intended
+        # h2d traffic (and the dequantizer wrapper pads eagerly)
+        with jax.transfer_guard("allow"):
+            for ah, sh, ref in zip(snap.payload, snap.scales,
+                                   self._row_struct_flat):
+                if sh is not None:
+                    a = kops.decompress_rows(
+                        jnp.asarray(pad_full(ah, ref.shape)),
+                        jnp.asarray(pad_full(sh, ref.shape[:-1] + (1,))),
+                        dtype=ref.dtype)
+                else:
+                    a = jnp.asarray(pad_full(ah, ref.shape))
+                leaves.append(a)
         rows = jax.tree.unflatten(self._row_treedef, leaves)
-        self.cache = self._import_rows(self.cache, rows, jnp.int32(slot))
+        self.cache = self._import_rows(
+            self.cache, rows, jax.device_put(np.asarray(slot, np.int32)))
         r.slot = slot
         self.slot_req[slot] = r
         self.positions[slot] = snap.position
@@ -941,8 +993,10 @@ class ContinuousBatchScheduler:
             self.flush_counters()
 
     def flush_counters(self) -> np.ndarray:
-        """Sync the cumulative device-side exit histogram to host."""
-        self.exit_counts = np.asarray(self._counters, np.int64)
+        """Sync the cumulative device-side exit histogram to host (an
+        intended d2h round-trip, made explicit for the transfer guard)."""
+        self.exit_counts = np.asarray(jax.device_get(self._counters),
+                                      np.int64)
         return self.exit_counts
 
     def reset_stats(self):

@@ -8,3 +8,32 @@ assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS",
 
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+
+@pytest.fixture
+def slot_audit():
+    """Opt-in runtime invariant audit: ``slot_audit(sched)`` wraps the
+    target's ``poll()`` so slot-accounting invariants are re-checked after
+    every round (see repro.analysis.guards.SlotAudit).  Detaches on
+    teardown; audits are returned so tests can assert ``polls > 0``."""
+    from repro.analysis.guards import SlotAudit
+    audits = []
+
+    def attach(target):
+        audit = SlotAudit(target).attach()
+        audits.append(audit)
+        return audit
+
+    yield attach
+    for audit in audits:
+        audit.detach()
+
+
+@pytest.fixture
+def assert_no_recompile():
+    """Opt-in jit-cache guard: ``with assert_no_recompile(sched): ...``
+    fails the test if any fixed-shape stage retraces inside the block."""
+    from repro.analysis.guards import no_recompile
+    return no_recompile

@@ -57,17 +57,20 @@ def _sched_cfg(**kw):
     return SchedulerConfig(**base)
 
 
-def test_multi_pool_matches_dedicated_greedy(trio):
+def test_multi_pool_matches_dedicated_greedy(trio, slot_audit):
     """All three families through ONE pool: per-model outputs bit-identical
     to dedicated single-model schedulers fed the same requests, per-model
     jit caches <= 1 per stage despite slot churn, and per-model exit-counter
-    totals matching per-model tokens served."""
+    totals matching per-model tokens served.  Slot accounting across all
+    three arenas is audited after every poll."""
     rs = np.random.RandomState(0)
     reqs = _mixed_requests(trio, rs, per_model=2)
     pool = MultiModelScheduler(ModelGroup(trio), _sched_cfg())
+    audit = slot_audit(pool)
     for r in _clone(reqs):
         pool.submit(r)
     pool.run()
+    assert audit.polls > 0
     assert len(pool.completed) == len(reqs)
     got = {name: [r.out_tokens for r in pool.completed if r.model == name]
            for name, _, _ in trio}

@@ -70,9 +70,10 @@ def _assert_single_compile(sizes):
     assert sizes.get("segment0", sizes.get("decode")) == 1
 
 
-def test_slot_reuse_and_mixed_prompt_lengths(granite):
+def test_slot_reuse_and_mixed_prompt_lengths(granite, slot_audit):
     """6 mixed-length requests through 2 slots: every slot is reused, and
-    each request's greedy tokens equal the sequential batch-1 decode."""
+    each request's greedy tokens equal the sequential batch-1 decode.
+    Slot-accounting invariants are audited after every poll."""
     cfg, m, params = granite
     rs = np.random.RandomState(0)
     lens = [5, 9, 16, 3, 12, 7]
@@ -80,10 +81,12 @@ def test_slot_reuse_and_mixed_prompt_lengths(granite):
     max_new = 8
     sched = ContinuousBatchScheduler(
         m, params, SchedulerConfig(n_slots=2, max_len=32, prefill_chunk=4))
+    audit = slot_audit(sched)
     reqs = [Request(tokens=p, max_new=max_new) for p in prompts]
     for r in reqs:
         sched.submit(r)
     sched.run()
+    assert audit.polls > 0
     assert sched.n_admitted == 6 and len(sched.completed) == 6
     assert not sched.has_work
     # both slots served multiple requests (reuse after completion)
@@ -94,17 +97,21 @@ def test_slot_reuse_and_mixed_prompt_lengths(granite):
         _assert_matches_reference(m, params, p, r.out_tokens, max_new)
 
 
-def test_no_recompile_across_admissions(granite):
+def test_no_recompile_across_admissions(granite, assert_no_recompile):
     """Slot churn with varying prompt lengths must never retrace the decode
-    step or the prefill chunk (fixed-shape invariant)."""
+    step or the prefill chunk (fixed-shape invariant).  The first request
+    compiles every stage; the guarded tail must not add a single entry."""
     cfg, m, params = granite
     rs = np.random.RandomState(1)
     sched = ContinuousBatchScheduler(
         m, params, SchedulerConfig(n_slots=3, max_len=24, prefill_chunk=4))
-    for l in (2, 5, 11, 7, 3, 9, 12, 4):
+    sched.submit(Request(tokens=rs.randint(0, cfg.vocab_size, 2), max_new=6))
+    sched.run()
+    for l in (5, 11, 7, 3, 9, 12, 4):
         sched.submit(Request(tokens=rs.randint(0, cfg.vocab_size, l),
                              max_new=6))
-    sched.run()
+    with assert_no_recompile(sched):
+        sched.run()
     assert len(sched.completed) == 8
     _assert_single_compile(sched.jit_cache_sizes())
 
