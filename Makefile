@@ -11,15 +11,16 @@
 #   make bench-multi multi-model pool vs swap-serving (mixed-model trace)
 #   make bench-migrate  executed prefill/decode splits + tier-outage
 #                    failover-by-migration vs requeue-and-recompute
+#   make bench-paged paged KV arena capacity + radix prefix-cache hit rate
 .PHONY: test test-fast lint analyze check serve-bench bench-smoke \
-	bench-exit bench-multi bench-migrate
+	bench-exit bench-multi bench-migrate bench-paged
 
 test:
-	PYTHONPATH=src python -m pytest -x -q
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 
 # skip the slow dry-run compile test for quick iteration
 test-fast:
-	PYTHONPATH=src python -m pytest -x -q -m "not slow"
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q -m "not slow"
 
 lint:
 	python -m compileall -q src tests benchmarks
@@ -43,3 +44,6 @@ bench-multi:
 
 bench-migrate:
 	python benchmarks/migration_bench.py
+
+bench-paged:
+	python benchmarks/paged_kv_bench.py

@@ -75,7 +75,8 @@ def main() -> None:
                             table5_cloud_edge_device, table6_device_device,
                             runtime_micro, serving_bench,
                             tiered_serving_bench, exit_bench,
-                            multi_model_bench, migration_bench)
+                            multi_model_bench, migration_bench,
+                            paged_kv_bench)
     from benchmarks.common import emit_csv
 
     table1_models.run()
@@ -89,8 +90,9 @@ def main() -> None:
     # single-pool continuous batching vs sequential, paradigm-aware tiered
     # routing vs a cloud-only pool, the early-exit threshold sweep
     # (depth-segmented decode: tok/s rises as exits truncate compute), the
-    # multi-model pool vs swap-serving, then real cross-tier migration
-    # (executed splits + failover-by-migration vs requeue-and-recompute)
+    # multi-model pool vs swap-serving, real cross-tier migration
+    # (executed splits + failover-by-migration vs requeue-and-recompute),
+    # then the paged KV arena (capacity at equal bytes + prefix reuse)
     print()
     serving = serving_bench.run(requests=6, slots=2, prompt_len=8, max_new=8)
     print()
@@ -103,6 +105,8 @@ def main() -> None:
                                   max_new=8)
     print()
     migration = migration_bench.run(requests=8, max_new=12)
+    print()
+    paged_kv = paged_kv_bench.run(max_new=7)
     print()
     emit_csv()
 
@@ -120,6 +124,7 @@ def main() -> None:
         "exit_sweep": exits,
         "multi_model": multi,
         "migration": migration,
+        "paged_kv": paged_kv,
         "analysis_violations": _analysis_violations(),
     }
     trajectory = [e for e in _load_trajectory()

@@ -199,6 +199,59 @@ class SlotAudit:
             if not r.done:
                 out.append(f"{prefix}completed request {r.req_id} not "
                            f"marked done")
+        if getattr(s, "page_alloc", None) is not None:
+            SlotAudit._check_pages(s, out, prefix)
+
+    # paged arena: block tables + prefix tree partition the page pool ----
+    @staticmethod
+    def _check_pages(s: Any, out: List[str], prefix: str = "") -> None:
+        alloc = s.page_alloc
+        n_pages = alloc.n_pages
+        staged = set(s._pending.slots) if s._pending is not None else set()
+        refs = np.zeros(n_pages, np.int64)
+        for i in range(s.cfg.n_slots):
+            row = s._tbl[i]
+            held = row[row < n_pages]
+            if s.slot_req[i] is None and i not in staged:
+                if held.size:
+                    out.append(f"{prefix}freed slot {i} still maps "
+                               f"{held.size} page(s) (page leak)")
+                continue
+            if np.unique(held).size != held.size:
+                out.append(f"{prefix}slot {i} maps the same page twice "
+                           f"(table corruption)")
+            for pg in held:
+                refs[int(pg)] += 1
+        trie_pages = (s.prefix_cache.pages()
+                      if s.prefix_cache is not None else {})
+        for pg in trie_pages:
+            refs[pg] += 1
+        # 1) allocator refcounts == slot references + trie residency
+        bad = np.nonzero(refs != alloc.refcount)[0]
+        for pg in bad[:8]:
+            out.append(f"{prefix}page {int(pg)} refcount "
+                       f"{int(alloc.refcount[pg])} != {int(refs[pg])} "
+                       f"observed owner(s) (refcount drift)")
+        # 2) a page mapped by >1 slot must be prefix-shared (trie-resident):
+        # otherwise two requests would write the same physical page
+        multi = np.nonzero(refs > 1)[0]
+        for pg in multi:
+            slot_refs = int(refs[pg]) - (1 if int(pg) in trie_pages else 0)
+            if slot_refs > 1 and int(pg) not in trie_pages:
+                out.append(f"{prefix}page {int(pg)} shared by {slot_refs} "
+                           f"slots without prefix-tree ownership (COW "
+                           f"violation)")
+        # 3) free list and referenced pages partition the pool exactly
+        free = set(alloc._free)
+        used = set(np.nonzero(refs)[0].tolist())
+        both = free & used
+        for pg in sorted(both)[:8]:
+            out.append(f"{prefix}page {int(pg)} is simultaneously free and "
+                       f"referenced")
+        if len(free) + len(used) != n_pages or (free | used) != set(
+                range(n_pages)):
+            out.append(f"{prefix}page partition broken: {len(free)} free + "
+                       f"{len(used)} referenced != {n_pages} pool pages")
 
     # …and once the pool is fully drained -------------------------------
     @staticmethod

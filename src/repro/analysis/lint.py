@@ -334,6 +334,23 @@ class ModuleLinter:
                         "kernels/backend.py"):
                 self.emit("PLT005", call,
                           "backend probe outside kernels/backend.py")
+            self._check_page_size(call)
+
+    def _check_page_size(self, call: ast.Call) -> None:
+        """PLT006: any resolvable ``page_size=`` keyword must be a positive
+        multiple of 8 — KV pages occupy the kernel sublane dimension."""
+        for kw in call.keywords:
+            if kw.arg != "page_size":
+                continue
+            scope_list = self._enclosing_funcs(call)
+            scope = scope_list[0] if scope_list else self.tree
+            v = self._resolve_int(kw.value, scope)
+            if v is None:
+                continue
+            if v <= 0 or v % 8 != 0:
+                self.emit("PLT006", kw.value,
+                          f"page_size={v} is not a positive multiple of 8 "
+                          f"(sublane-illegal KV pages)")
 
     def _resolve_int(self, expr: ast.AST, scope: Optional[ast.AST]
                      ) -> Optional[int]:

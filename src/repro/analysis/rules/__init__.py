@@ -61,6 +61,10 @@ _ALL = [
     Rule("PLT005", "backend-detect-dup", "error",
          "jax.default_backend() probed outside kernels/backend.py: use the "
          "canonical on_cpu/off_tpu/resolve_interpret helpers"),
+    Rule("PLT006", "paged-kv-page-size", "error",
+         "KV page_size= must be positive and a multiple of 8: pages land in "
+         "the kernel sublane dim, and an illegal page size silently forces "
+         "interpret-only paged attention"),
     Rule("PARSE", "unparseable-file", "error",
          "file failed to parse; the analyzer cannot vouch for it"),
 ]

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -68,12 +70,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                                              "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """q [BN, Sq, H], k/v [BN, Skv, H] -> o [BN, Sq, H].
 
     Sq % block_q == 0; Skv padded to block_k multiple internally (padded
-    keys masked off via kv_len).
+    keys masked off via kv_len).  ``interpret=None`` auto-detects the
+    backend (interpret on CPU only — this kernel has a compiled non-Mosaic
+    lowering, so GPU runs it compiled), matching every other kernel wrapper
+    instead of the old always-interpret default.
     """
+    interpret = resolve_interpret(interpret, tpu_only=False)
     bn, sq, h = q.shape
     _, skv, _ = k.shape
     assert sq % block_q == 0

@@ -6,11 +6,14 @@ on CPU; on a real TPU backend the same call compiles to Mosaic).
 """
 from __future__ import annotations
 
+import math
+
 import jax.numpy as jnp
 
 from repro.kernels import attention as _attn
 from repro.kernels import exit_head as _exit
 from repro.kernels import feature_compress as _fc
+from repro.kernels import paged_attention as _pattn
 from repro.kernels.backend import resolve_interpret as _resolve_interpret
 
 
@@ -102,6 +105,71 @@ def decompress_rows(q, scale, *, dtype=jnp.bfloat16,
     x = _fc.dequantize_rows(q2, s2, block_t=bt, dtype=dtype,
                             interpret=interpret)
     return x[:t, :d].reshape(*lead, d)
+
+
+def paged_gqa_attention(q, pool_k, pool_v, tbl, pos, *,
+                        interpret: bool | None = None):
+    """Paged GQA decode attention: q [B, 1, Nq, H], pools
+    [n_pages, P, Nkv, H], tbl [B, pps] int32 (sentinel entries allowed —
+    clipped here, always masked by ``pos``), pos [B] -> [B, 1, Nq, H].
+
+    Layout for the kernel: queries fold to [B, Nkv, G, H] so each grid
+    program owns one (sequence, kv-head) query group; pools go head-major
+    [Nkv, n_pages, P, H]; the group and head dims are padded MXU/VPU-legal
+    (G to the 8 sublane, H to the 128 lane — zero columns add nothing to
+    either matmul, padded query rows are sliced off)."""
+    interpret = _resolve_interpret(interpret)
+    b, s, nq, hd = q.shape
+    assert s == 1, "paged attention is a decode (one-token) kernel"
+    n_pages, page, nkv, _ = pool_k.shape
+    g = nq // nkv
+    gp = (-g) % 8
+    hp = (-hd) % 128
+    qg = q[:, 0].reshape(b, nkv, g, hd)
+    if gp or hp:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp), (0, hp)))
+    km = pool_k.transpose(2, 0, 1, 3)
+    vm = pool_v.transpose(2, 0, 1, 3)
+    if hp:
+        km = jnp.pad(km, ((0, 0), (0, 0), (0, 0), (0, hp)))
+        vm = jnp.pad(vm, ((0, 0), (0, 0), (0, 0), (0, hp)))
+    tblc = jnp.clip(tbl, 0, n_pages - 1).astype(jnp.int32)
+    out = _pattn.paged_gqa_attention(
+        qg, km, vm, tblc, pos.astype(jnp.int32),
+        scale=1.0 / math.sqrt(hd), interpret=interpret)
+    out = out[:, :, :g, :hd].reshape(b, 1, nq, hd)
+    return out.astype(q.dtype)
+
+
+def paged_mla_attention(q_lat, q_rope, pool_ckv, pool_krope, tbl, pos, *,
+                        scale: float, interpret: bool | None = None):
+    """Paged MLA decode attention with matrix absorption: q_lat [B, 1, N, R]
+    (W_kb already absorbed), q_rope [B, 1, N, Hr], pools
+    [n_pages, P, R] / [n_pages, P, Hr], tbl [B, pps] int32, pos [B] ->
+    latent context [B, 1, N, R] fp32 (caller applies W_vb).
+
+    The two query/key halves concatenate lane-aligned (each padded to a
+    128 multiple) so the kernel scores with ONE [N, R+Hr] @ [P, R+Hr]^T
+    matmul; the latent half doubles as the value page."""
+    interpret = _resolve_interpret(interpret)
+    b, s, n, r = q_lat.shape
+    assert s == 1, "paged attention is a decode (one-token) kernel"
+    n_pages, page, hr = (pool_krope.shape[0], pool_krope.shape[1],
+                         pool_krope.shape[2])
+    rp = (-r) % 128
+    hrp = (-hr) % 128
+    np_ = (-n) % 8
+    qc = jnp.concatenate([
+        jnp.pad(q_lat[:, 0], ((0, 0), (0, np_), (0, rp))),
+        jnp.pad(q_rope[:, 0], ((0, 0), (0, np_), (0, hrp)))], axis=-1)
+    pc = jnp.concatenate([
+        jnp.pad(pool_ckv, ((0, 0), (0, 0), (0, rp))),
+        jnp.pad(pool_krope, ((0, 0), (0, 0), (0, hrp)))], axis=-1)
+    tblc = jnp.clip(tbl, 0, n_pages - 1).astype(jnp.int32)
+    out = _pattn.paged_mla_attention(
+        qc, pc, tblc, pos.astype(jnp.int32), rank=r + rp, scale=scale,
+        interpret=interpret)
+    return out[:, :n, :r].reshape(b, 1, n, r)
 
 
 def flash_attention_bshd(q, k, v, *, causal: bool = True, window: int = 0,

@@ -45,3 +45,44 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     s = jnp.where(mask[None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_gqa_attention_ref(q, pool_k, pool_v, tbl, pos):
+    """Gather-view oracle for the paged GQA decode kernel: q [B, 1, Nq, H],
+    pools [n_pages, P, Nkv, H], tbl [B, pps], pos [B] -> [B, 1, Nq, H]."""
+    b, _, nq, hd = q.shape
+    n_pages, page, nkv, _ = pool_k.shape
+    smax = tbl.shape[1] * page
+    tblc = jnp.clip(tbl, 0, n_pages - 1)
+    ck = pool_k[tblc].reshape(b, smax, nkv, hd)
+    cv = pool_v[tblc].reshape(b, smax, nkv, hd)
+    valid = jnp.arange(smax)[None, :] <= pos[:, None]
+    g = nq // nkv
+    qg = q.reshape(b, 1, nkv, g, hd)
+    s = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / (hd ** 0.5)
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngst,btnh->bsngh", p, cv.astype(jnp.float32))
+    return out.reshape(b, 1, nq, hd).astype(q.dtype)
+
+
+def paged_mla_attention_ref(q_lat, q_rope, pool_ckv, pool_krope, tbl, pos, *,
+                            scale):
+    """Latent-context oracle for the paged MLA decode kernel: q_lat
+    [B, 1, N, R] (absorbed), q_rope [B, 1, N, Hr], pools [n_pages, P, R] /
+    [n_pages, P, Hr] -> latent context [B, 1, N, R] fp32."""
+    b, _, n, r = q_lat.shape
+    n_pages, page = pool_ckv.shape[0], pool_ckv.shape[1]
+    smax = tbl.shape[1] * page
+    tblc = jnp.clip(tbl, 0, n_pages - 1)
+    ckv = pool_ckv[tblc].reshape(b, smax, r)
+    krope = pool_krope[tblc].reshape(b, smax, -1)
+    s = jnp.einsum("bsnr,btr->bnst", q_lat.astype(jnp.float32),
+                   ckv.astype(jnp.float32))
+    s += jnp.einsum("bsnh,bth->bnst", q_rope.astype(jnp.float32),
+                    krope.astype(jnp.float32))
+    valid = jnp.arange(smax)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s * scale, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bnst,btr->bsnr", p, ckv.astype(jnp.float32))

@@ -174,8 +174,8 @@ def serve(arch: str, batch: int, prompt_len: int, max_new: int, *,
 def serve_poisson(arch: str, *, rate: float = 4.0, n_requests: int = 32,
                   slots: int = 8, prompt_len: int = 16, max_new: int = 32,
                   threshold: float = 0.5, prefill_chunk: int = 16,
-                  long_mode: bool = False, seed: int = 0, params=None,
-                  quiet: bool = False):
+                  long_mode: bool = False, paged: bool = False,
+                  seed: int = 0, params=None, quiet: bool = False):
     """Open-loop Poisson-arrival serving through the continuous-batching
     scheduler.  Returns a stats dict (p50/p95 latency, sustained tok/s,
     jit cache sizes — the no-recompile invariant)."""
@@ -183,11 +183,15 @@ def serve_poisson(arch: str, *, rate: float = 4.0, n_requests: int = 32,
     model = Model(cfg, ShardCtx(None))
     if params is None:
         params = model.init(jax.random.PRNGKey(seed))
+    max_len = prompt_len + max_new
+    if paged:                          # page-pool arenas need whole pages
+        max_len += (-max_len) % 16
     sched = ContinuousBatchScheduler(
         model, params,
-        SchedulerConfig(n_slots=slots, max_len=prompt_len + max_new,
+        SchedulerConfig(n_slots=slots, max_len=max_len,
                         prefill_chunk=min(prefill_chunk, max(1, prompt_len)),
-                        exit_threshold=threshold, long_mode=long_mode))
+                        exit_threshold=threshold, long_mode=long_mode,
+                        paged=paged))
 
     rs = np.random.RandomState(seed)
     arrivals, lengths = _poisson_trace(rs, rate, n_requests, prompt_len)
@@ -223,9 +227,12 @@ def serve_poisson(arch: str, *, rate: float = 4.0, n_requests: int = 32,
         "jit_cache_sizes": sched.jit_cache_sizes(),
         "exit_stats": sched.exit_stats(),
     }
+    if paged:
+        stats["prefix_hit_tokens"] = sched.prefix_hit_tokens
+        stats["prefill_chunks_skipped"] = sched.prefill_chunks_skipped
     if not quiet:
         print(f"arch={cfg.name} poisson rate={rate}/s requests={n_requests} "
-              f"slots={slots}")
+              f"slots={slots}" + (" paged" if paged else ""))
         print(f"  p50={stats['p50_latency_s']*1e3:.0f}ms "
               f"p95={stats['p95_latency_s']*1e3:.0f}ms "
               f"sustained={stats['sustained_tok_s']:.1f} tok/s "
@@ -461,6 +468,9 @@ def main():
     ap.add_argument("--deadline", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--long", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV arena + radix prefix cache "
+                         "(poisson single-pool mode)")
     args = ap.parse_args()
     assert args.arch or args.models, "need --arch or --models"
     if args.models:
@@ -493,7 +503,7 @@ def main():
                       slots=args.slots, prompt_len=args.prompt_len,
                       max_new=args.max_new, threshold=args.threshold,
                       prefill_chunk=args.prefill_chunk, long_mode=args.long,
-                      seed=args.seed)
+                      paged=args.paged, seed=args.seed)
     else:
         serve(args.arch, args.batch, args.prompt_len, args.max_new,
               threshold=args.threshold, long_mode=args.long, seed=args.seed)

@@ -242,6 +242,138 @@ def gqa_decode(cfg, params, x, cache_k, cache_v, position, *, window: int = 0):
     return y, (cache_k, cache_v)
 
 
+# ---------------------------------------------------------------------------
+# Paged decode — KV pools [n_pages, P, ...] + per-slot block tables
+# ---------------------------------------------------------------------------
+#
+# The paged arena stores KV in a global pool of fixed-size pages; each slot
+# maps logical cache positions to physical pages through a block table row
+# ``tbl [B, pages_per_slot]`` whose sentinel value is ``n_pages``
+# (= unallocated).  The jnp path below is BIT-IDENTICAL to the contiguous
+# decode above: the gathered view clips sentinel entries to a real page, but
+# every clipped position is masked by ``valid`` -> NEG_INF -> exp underflows
+# to exactly 0.0 in f32, so garbage pages contribute exactly nothing.
+#
+# Toggle: REPRO_PAGED_ATTN=kernel routes the score/softmax/context through
+# the Pallas paged kernels in repro.kernels.paged_attention (block-table
+# gathers via scalar prefetch); default "jnp" keeps the reference path.
+PAGED_ATTN_IMPL = _os.environ.get("REPRO_PAGED_ATTN", "jnp")
+
+
+class PagedKV:
+    """Trace-time bundle for paged decode: block table + write gate.
+
+    ``tbl``: [B, pages_per_slot] int32 device array (sentinel = n_pages).
+    ``write_mask``: [B] bool — rows allowed to write their KV this step
+    (prefill activity gates, alive & active in decode).  Masked rows route
+    their write to the sentinel page id which scatter-drops.
+    """
+
+    def __init__(self, tbl, write_mask):
+        self.tbl = tbl
+        self.write_mask = write_mask
+
+
+def paged_view(pool, tbl):
+    """Gather a slot-contiguous [B, pps*P, ...] view out of the pool.
+
+    Sentinel table entries are clipped to page 0 — callers MUST mask those
+    positions (they always can: sentinels only cover positions > pos_b).
+    """
+    n_pages = pool.shape[0]
+    gathered = pool[jnp.clip(tbl, 0, n_pages - 1)]     # [B, pps, P, ...]
+    b, pps, psz = gathered.shape[:3]
+    return gathered.reshape(b, pps * psz, *gathered.shape[3:])
+
+
+def paged_write(pool, paged: PagedKV, pos_b, val):
+    """Scatter one token per row into its block-table page.
+
+    Rows with write_mask False (and rows whose page is unallocated) are
+    routed to the sentinel page id and dropped by the scatter — stale slots
+    can never corrupt pages owned by live requests.
+    """
+    n_pages, psz = pool.shape[0], pool.shape[1]
+    smax = paged.tbl.shape[1] * psz
+    slot = jnp.minimum(pos_b, smax - 1)
+    page = jnp.take_along_axis(paged.tbl, (slot // psz)[:, None], axis=1)[:, 0]
+    page = jnp.where(paged.write_mask, page, n_pages)
+    return pool.at[page, slot % psz].set(val.astype(pool.dtype), mode="drop")
+
+
+def gqa_decode_paged(cfg, params, x, pool_k, pool_v, position, paged: PagedKV):
+    """One-token GQA decode against paged KV pools [n_pages, P, Nkv, H].
+
+    Same math as ``gqa_decode`` on the gathered view — bit-identical for the
+    jnp path.  No ring-buffer window support (paged mode asserts window==0
+    at scheduler init)."""
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+    psz = pool_k.shape[1]
+    smax = paged.tbl.shape[1] * psz
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"].astype(x.dtype))
+    pos_b = _decode_positions(position, b)                 # [B]
+    q = apply_positional(q, pos_b[:, None], cfg.rope, cfg.rope_theta)
+    k = apply_positional(k, pos_b[:, None], cfg.rope, cfg.rope_theta)
+    pool_k = paged_write(pool_k, paged, pos_b, k[:, 0])
+    pool_v = paged_write(pool_v, paged, pos_b, v[:, 0])
+    nq = q.shape[2]
+    nkv = pool_k.shape[2]
+    if PAGED_ATTN_IMPL == "kernel":
+        from repro.kernels import ops as kops
+        out = kops.paged_gqa_attention(q, pool_k, pool_v, paged.tbl, pos_b)
+    else:
+        cache_k = paged_view(pool_k, paged.tbl)            # [B, smax, Nkv, H]
+        cache_v = paged_view(pool_v, paged.tbl)
+        valid = jnp.arange(smax)[None, :] <= pos_b[:, None]
+        g = nq // nkv
+        qg = q.reshape(b, 1, nkv, g, hd)
+        scores = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32),
+                            cache_k.astype(jnp.float32)) / math.sqrt(hd)
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bngst,btnh->bsngh", probs,
+                         cache_v.astype(jnp.float32))
+        out = out.reshape(b, 1, nq, hd).astype(x.dtype)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+    return y, (pool_k, pool_v)
+
+
+def mla_decode_paged(cfg, params, x, pool_ckv, pool_krope, position,
+                     paged: PagedKV):
+    """One-token MLA decode against paged latent pools
+    ([n_pages, P, R] / [n_pages, P, Hr]) with matrix absorption."""
+    b = x.shape[0]
+    psz = pool_ckv.shape[1]
+    smax = paged.tbl.shape[1] * psz
+    pos_b = _decode_positions(position, b)                 # [B]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, params, x, pos_b[:, None])
+    pool_ckv = paged_write(pool_ckv, paged, pos_b, c_kv[:, 0])
+    pool_krope = paged_write(pool_krope, paged, pos_b, k_rope[:, 0])
+    if PAGED_ATTN_IMPL == "kernel":
+        from repro.kernels import ops as kops
+        # absorb wk_b outside the kernel (FlashInfer MLA trick): the kernel
+        # sees latent-rank queries only.
+        q_lat = jnp.einsum("bsnh,rnh->bsnr", q_nope,
+                           params["wk_b"].astype(q_nope.dtype))
+        nope, rph = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+        out = kops.paged_mla_attention(
+            q_lat, q_rope, pool_ckv, pool_krope, paged.tbl, pos_b,
+            scale=1.0 / math.sqrt(nope + rph))
+        out = jnp.einsum("bsnr,rnv->bsnv", out.astype(q_nope.dtype),
+                         params["wv_b"].astype(q_nope.dtype))
+    else:
+        cache_ckv = paged_view(pool_ckv, paged.tbl)        # [B, smax, R]
+        cache_krope = paged_view(pool_krope, paged.tbl)
+        valid = jnp.arange(smax)[None, :] <= pos_b[:, None]
+        out = mla_scores_ctx(cfg, params, q_nope, q_rope, cache_ckv,
+                             cache_krope, valid[:, None, :])
+    y = jnp.einsum("bsnv,nvd->bsd", out, params["wo"].astype(x.dtype))
+    return y, (pool_ckv, pool_krope)
+
+
 def cross_decode(cfg, params, x, enc_k, enc_v):
     """Cross-attention decode step against precomputed encoder k/v."""
     hd = cfg.resolved_head_dim

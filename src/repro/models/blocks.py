@@ -318,6 +318,38 @@ def run_shared_attn(cfg, sp, x, positions, window):
 # Decode (single token, cache-carrying) per kind
 # ---------------------------------------------------------------------------
 
+# Scan kinds whose decode cache is attention KV (paged-arena eligible).
+# State kinds (mamba/mlstm/slstm) keep fixed per-slot rows; decx/enc never
+# reach paged decode (scheduler asserts family != "encdec" in paged mode).
+PAGED_KINDS = frozenset({"dense", "moe", "pair", "enc"})
+
+
+def init_layer_cache_paged(cfg, kind: str, batch: int, n_pages: int,
+                           page_size: int):
+    """Paged decode cache for ONE layer: attention leaves become global
+    pools ``[n_pages, P, ...]`` (indexed via the slot block table); state
+    kinds keep their per-slot rows unchanged."""
+    hd = cfg.resolved_head_dim
+    nkv = cfg.num_kv_heads
+    kv = lambda: (jnp.zeros((n_pages, page_size, nkv, hd), jnp.bfloat16),
+                  jnp.zeros((n_pages, page_size, nkv, hd), jnp.bfloat16))
+    if kind in ("dense", "enc", "moe"):
+        if cfg.attention == "mla":
+            return (jnp.zeros((n_pages, page_size, cfg.kv_lora_rank),
+                              jnp.bfloat16),
+                    jnp.zeros((n_pages, page_size, cfg.qk_rope_head_dim),
+                              jnp.bfloat16))
+        return kv()
+    if kind == "pair":
+        return {"a": init_layer_cache_paged(cfg, "dense", batch, n_pages,
+                                            page_size),
+                "b": init_layer_cache_paged(cfg, "moe", batch, n_pages,
+                                            page_size)}
+    if kind in ("mamba", "mlstm", "slstm"):
+        return init_layer_cache(cfg, kind, batch, 0)
+    raise ValueError(f"kind {kind!r} has no paged decode cache")
+
+
 def init_layer_cache(cfg, kind: str, batch: int, cache_len: int):
     """Decode cache for ONE layer of the given kind."""
     hd = cfg.resolved_head_dim
@@ -351,7 +383,13 @@ def init_layer_cache(cfg, kind: str, batch: int, cache_len: int):
     raise ValueError(kind)
 
 
-def _attn_decode_dispatch(cfg, lp_attn, h, cache, position, window):
+def _attn_decode_dispatch(cfg, lp_attn, h, cache, position, window, paged=None):
+    if paged is not None:
+        if cfg.attention == "mla":
+            return attn.mla_decode_paged(cfg, lp_attn, h, cache[0], cache[1],
+                                         position, paged)
+        return attn.gqa_decode_paged(cfg, lp_attn, h, cache[0], cache[1],
+                                     position, paged)
     if cfg.attention == "mla":
         y, new = attn.mla_decode(cfg, lp_attn, h, cache[0], cache[1], position,
                                  window=window)
@@ -361,27 +399,34 @@ def _attn_decode_dispatch(cfg, lp_attn, h, cache, position, window):
     return y, new
 
 
-def decode_layer(cfg, kind: str, lp, x, cache, position, window, ctx):
-    """One-token decode through one layer.  Returns (x, new_cache, aux)."""
+def decode_layer(cfg, kind: str, lp, x, cache, position, window, ctx,
+                 paged=None):
+    """One-token decode through one layer.  Returns (x, new_cache, aux).
+
+    paged != None (an ``attn.PagedKV``): attention caches are paged pools;
+    state kinds are unaffected (their write gating lives in the caller's
+    merge)."""
     zero = jnp.float32(0.0)
     if kind in ("dense", "enc"):
         h = apply_norm(cfg.norm, x, lp["ln1"])
-        y, new = _attn_decode_dispatch(cfg, lp["attn"], h, cache, position, window)
+        y, new = _attn_decode_dispatch(cfg, lp["attn"], h, cache, position,
+                                       window, paged)
         x = x + y
         h = apply_norm(cfg.norm, x, lp["ln2"])
         return x + ffn_mod.ffn_forward(lp["ffn"], h, cfg.act), new, zero
     if kind == "moe":
         h = apply_norm(cfg.norm, x, lp["ln1"])
-        y, new = _attn_decode_dispatch(cfg, lp["attn"], h, cache, position, window)
+        y, new = _attn_decode_dispatch(cfg, lp["attn"], h, cache, position,
+                                       window, paged)
         x = x + y
         h = apply_norm(cfg.norm, x, lp["ln2"])
         y, aux = ffn_mod.moe_ffn(lp["moe"], h, cfg, ctx)
         return x + y, new, aux
     if kind == "pair":
         x, new_a, _ = decode_layer(cfg, "dense", lp["a"], x, cache["a"], position,
-                                   window, ctx)
+                                   window, ctx, paged)
         x, new_b, aux = decode_layer(cfg, "moe", lp["b"], x, cache["b"], position,
-                                     window, ctx)
+                                     window, ctx, paged)
         return x, {"a": new_a, "b": new_b}, aux
     if kind == "mamba":
         h = apply_norm(cfg.norm, x, lp["ln"])
@@ -410,29 +455,40 @@ def decode_layer(cfg, kind: str, lp, x, cache, position, window, ctx):
     raise ValueError(kind)
 
 
-def decode_scan_block(cfg, kind: str, bparams, x, caches, position, window, ctx):
-    """Decode through a stacked block, scanning layers with per-layer caches."""
+def decode_scan_block(cfg, kind: str, bparams, x, caches, position, window, ctx,
+                      paged=None):
+    """Decode through a stacked block, scanning layers with per-layer caches.
+
+    Paged attention caches are stacked pools ``[n, n_pages, P, ...]`` — the
+    scan unstacks the layer axis exactly like contiguous rows; the block
+    table (inside ``paged``) is shared across layers."""
     n = jax.tree.leaves(bparams)[0].shape[0]
     if n == 1:
         lp = jax.tree.map(lambda a: a[0], bparams)
         cc = jax.tree.map(lambda a: a[0], caches)
-        x, new, aux = decode_layer(cfg, kind, lp, x, cc, position, window, ctx)
+        x, new, aux = decode_layer(cfg, kind, lp, x, cc, position, window, ctx,
+                                   paged)
         return x, jax.tree.map(lambda a: a[None], new), aux
 
     def body(carry, inp):
         xx = carry
         lp, cc = inp
-        xx, new, aux = decode_layer(cfg, kind, lp, xx, cc, position, window, ctx)
+        xx, new, aux = decode_layer(cfg, kind, lp, xx, cc, position, window,
+                                    ctx, paged)
         return xx, (new, aux)
 
     x, (new_caches, auxs) = jax.lax.scan(body, x, (bparams, caches))
     return x, new_caches, jnp.sum(auxs)
 
 
-def run_shared_attn_decode(cfg, sp, x, cache, position, window):
+def run_shared_attn_decode(cfg, sp, x, cache, position, window, paged=None):
     h = apply_norm(cfg.norm, x, sp["ln1"])
-    y, new = attn.gqa_decode(cfg, sp["attn"], h, cache[0], cache[1], position,
-                             window=window)
+    if paged is not None:
+        y, new = attn.gqa_decode_paged(cfg, sp["attn"], h, cache[0], cache[1],
+                                       position, paged)
+    else:
+        y, new = attn.gqa_decode(cfg, sp["attn"], h, cache[0], cache[1],
+                                 position, window=window)
     x = x + y
     h = apply_norm(cfg.norm, x, sp["ln2"])
     return x + ffn_mod.ffn_forward(sp["ffn"], h, cfg.act), new

@@ -286,28 +286,91 @@ class Model:
                 for _ in range(n_sites)]
         return cache
 
-    def merge_decode_cache(self, take_new, new_cache, old_cache):
+    def scan_block_kinds(self) -> List[str]:
+        """Kind of each stacked block, in ``cache["blocks"]`` order."""
+        return [s[1] for s in self.plan if s[0] == "scan"]
+
+    def all_cache_paged(self) -> bool:
+        """True iff every decode-cache leaf is pool-backed in paged mode —
+        i.e. no SSM/xLSTM state rows.  Prefix-cache page skipping is only
+        sound in this case (shared pages fully determine the replay)."""
+        return all(k in B.PAGED_KINDS for k in self.scan_block_kinds())
+
+    def init_decode_cache_paged(self, batch_size: int, n_pages: int,
+                                page_size: int):
+        """Paged decode cache: attention leaves become global pools stacked
+        per scanned layer (``[n_layers, n_pages, P, ...]``; shared-attn
+        pools are unstacked ``[n_pages, P, Nkv, H]``); SSM/xLSTM state
+        leaves keep their per-slot rows.  Slots address the pools through
+        the scheduler-owned block table, not a batch axis."""
+        cfg = self.cfg
+        assert cfg.family != "encdec", "paged decode: encdec unsupported"
+        caches = []
+        for step in self.plan:
+            if step[0] == "scan":
+                _, kind, n, _ = step
+                per = [B.init_layer_cache_paged(cfg, kind, batch_size, n_pages,
+                                                page_size)
+                       for _ in range(n)]
+                caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+        cache: Dict[str, Any] = {"blocks": caches}
+        if cfg.shared_attn_period:
+            n_sites = len(B.shared_attn_sites(cfg))
+            hd = cfg.resolved_head_dim
+            cache["shared_attn"] = [
+                (jnp.zeros((n_pages, page_size, cfg.num_kv_heads, hd),
+                           jnp.bfloat16),
+                 jnp.zeros((n_pages, page_size, cfg.num_kv_heads, hd),
+                           jnp.bfloat16))
+                for _ in range(n_sites)]
+        return cache
+
+    def merge_decode_cache(self, take_new, new_cache, old_cache, *,
+                           paged: bool = False):
         """Row-wise cache merge: slot b takes `new_cache` where take_new[b].
 
         Used by the continuous-batching scheduler to admit freshly prefilled
         requests into freed slots without touching in-flight slots.  Block
         caches are stacked [n_layers, B, ...] (batch axis 1); shared-attn
         caches are [B, ...] (batch axis 0).
+
+        paged=True: attention leaves are global pools with NO batch axis —
+        their writes were already gated per-row inside the attention step
+        (sentinel-routed scatter), so the new pool is taken wholesale; only
+        SSM/xLSTM state leaves still merge row-wise.
         """
-        out = {"blocks": [jax.tree.map(_row_where(take_new, 1), n, o)
-                          for n, o in zip(new_cache["blocks"],
-                                          old_cache["blocks"])]}
+        if not paged:
+            out = {"blocks": [jax.tree.map(_row_where(take_new, 1), n, o)
+                              for n, o in zip(new_cache["blocks"],
+                                              old_cache["blocks"])]}
+            if "shared_attn" in old_cache:
+                out["shared_attn"] = [
+                    jax.tree.map(_row_where(take_new, 0), n, o)
+                    for n, o in zip(new_cache["shared_attn"],
+                                    old_cache["shared_attn"])]
+            return out
+        blocks = []
+        for kind, n, o in zip(self.scan_block_kinds(), new_cache["blocks"],
+                              old_cache["blocks"]):
+            if kind in B.PAGED_KINDS:
+                blocks.append(n)
+            else:
+                blocks.append(jax.tree.map(_row_where(take_new, 1), n, o))
+        out = {"blocks": blocks}
         if "shared_attn" in old_cache:
-            out["shared_attn"] = [jax.tree.map(_row_where(take_new, 0), n, o)
-                                  for n, o in zip(new_cache["shared_attn"],
-                                                  old_cache["shared_attn"])]
+            out["shared_attn"] = list(new_cache["shared_attn"])
         return out
 
     def decode_step(self, params, cache, tokens, position, *,
-                    long_mode: bool = False):
+                    long_mode: bool = False, paged=None):
         """tokens [B,1] int32; position [] int32 or [B] int32 (per-slot
         positions — continuous batching serves requests at different depths
         in one fixed-shape step).
+
+        paged != None (an ``attention.PagedKV``): attention caches are paged
+        pools addressed through the bundled block table; KV writes are gated
+        per-row by its write_mask.  State-leaf gating stays with the
+        caller's ``merge_decode_cache(..., paged=True)``.
 
         Returns (logits [B,V] fp32, exit_entropies [n_exits,B] fp32, cache).
         Exit entropies feed the early-exit policy in serving/engine.py.
@@ -330,14 +393,14 @@ class Model:
                 _, kind, n, _ = step
                 x, nc, a = B.decode_scan_block(
                     cfg, kind, params["blocks"][bi], x, cache["blocks"][bi],
-                    position, window, self.ctx)
+                    position, window, self.ctx, paged)
                 new_blocks.append(nc)
                 aux = aux + a
                 bi += 1
             elif step[0] == "shared_attn":
                 x, nkv = B.run_shared_attn_decode(
                     cfg, params["shared_attn"], x, cache["shared_attn"][sa_i],
-                    position, window)
+                    position, window, paged)
                 new_sa[sa_i] = nkv
                 sa_i += 1
             elif step[0] == "exit":
@@ -388,7 +451,8 @@ class Model:
         return embed(tokens, params["embed"])
 
     def decode_segment(self, params, cache, x, seg: DepthSegment, position,
-                       alive, *, long_mode: bool = False):
+                       alive, *, long_mode: bool = False, paged=None,
+                       passthrough=None):
         """One-token decode through one depth segment.
 
         ``alive`` [B] bool gates per-slot effects: rows that already exited
@@ -397,10 +461,23 @@ class Model:
         slice of the monolithic ``decode_step`` (bit-identical).  Returns
         ``(x, cache)`` where ``cache`` is the full cache dict with only this
         segment's entries replaced.
+
+        paged != None: attention leaves are pools (pool writes gated inside
+        the step by ``paged.write_mask``; the merged pool is taken
+        wholesale), state leaves merge on ``alive``.  ``passthrough``
+        optionally decouples the HIDDEN-STATE passthrough mask from the
+        cache-write mask: the scheduler passes ``alive = alive & active``
+        (so stale slots never write pool pages or state rows) but keeps
+        ``passthrough = alive`` — every row's hidden compute must stay
+        identical to the unpaged path because MoE expert-capacity routing
+        couples batch rows (a changed garbage row could evict a live row's
+        token from an expert queue).
         """
         cfg = self.cfg
         window = self._window(long_mode)
         x_in = x
+        if passthrough is None:
+            passthrough = alive
         new_blocks = list(cache["blocks"])
         new_sa = list(cache.get("shared_attn", []))
         for st in seg.steps:
@@ -408,18 +485,24 @@ class Model:
                 _, kind, bi = st
                 x, nc, _ = B.decode_scan_block(
                     cfg, kind, params["blocks"][bi], x, cache["blocks"][bi],
-                    position, window, self.ctx)
-                # blocks are stacked [n_layers, B, ...]: batch axis 1
-                new_blocks[bi] = jax.tree.map(_row_where(alive, 1), nc,
-                                              cache["blocks"][bi])
+                    position, window, self.ctx, paged)
+                if paged is not None and kind in B.PAGED_KINDS:
+                    new_blocks[bi] = nc
+                else:
+                    # blocks are stacked [n_layers, B, ...]: batch axis 1
+                    new_blocks[bi] = jax.tree.map(_row_where(alive, 1), nc,
+                                                  cache["blocks"][bi])
             else:
                 _, sa_i = st
                 x, nkv = B.run_shared_attn_decode(
                     cfg, params["shared_attn"], x, cache["shared_attn"][sa_i],
-                    position, window)
-                new_sa[sa_i] = jax.tree.map(_row_where(alive, 0), nkv,
-                                            cache["shared_attn"][sa_i])
-        x = jnp.where(alive[:, None, None], x, x_in)
+                    position, window, paged)
+                if paged is not None:
+                    new_sa[sa_i] = nkv
+                else:
+                    new_sa[sa_i] = jax.tree.map(_row_where(alive, 0), nkv,
+                                                cache["shared_attn"][sa_i])
+        x = jnp.where(passthrough[:, None, None], x, x_in)
         out: Dict[str, Any] = {"blocks": new_blocks}
         if cfg.shared_attn_period:
             out["shared_attn"] = new_sa

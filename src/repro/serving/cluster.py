@@ -102,6 +102,11 @@ class ClusterConfig:
     # (no prefill re-run); False requeues them from the prompt — the
     # recompute baseline benchmarks/migration_bench.py measures against.
     migrate_on_outage: bool = True
+    # paged KV arenas in every tier pool (serving/paged.py): migrations
+    # become page-granular — the source consults the destination's prefix
+    # tree and ships only the pages it doesn't already hold.
+    paged: bool = False
+    page_size: int = 16
 
 
 @dataclasses.dataclass
@@ -288,7 +293,8 @@ class TieredServingCluster:
             exit_threshold=cfg.exit_threshold,
             temperature=cfg.temperature, long_mode=cfg.long_mode,
             flush_every=cfg.flush_every,
-            max_prefill_chunks_per_step=cfg.max_prefill_chunks_per_step)
+            max_prefill_chunks_per_step=cfg.max_prefill_chunks_per_step,
+            paged=cfg.paged, page_size=cfg.page_size)
         self.tiers: Dict[str, TierRuntime] = {}
         for name, uplink in (("device", None), ("edge", sc.dev_edge),
                              ("cloud", sc.dev_cloud)):
@@ -615,7 +621,10 @@ class TieredServingCluster:
         dec = compression_decision(raw_bytes, src.profile, link)
         use_int8 = self.cfg.kv_handoff == "int8" or (
             self.cfg.kv_handoff == "auto" and dec.compress)
-        snap = src.sched.export_slot(slot, model=m, compress=use_int8)
+        # page-granular handoff: pages the destination's prefix tree
+        # already holds are skipped (borrowed back at import)
+        snap = src.sched.export_slot(slot, model=m, compress=use_int8,
+                                     skip_keys=dst.sched.prefix_keys(model=m))
         overhead = 0.0
         if use_int8:
             overhead = dec.quant_overhead

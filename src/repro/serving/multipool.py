@@ -209,12 +209,17 @@ class MultiModelScheduler:
     # model name, so import routes itself)
     # ------------------------------------------------------------------
     def export_slot(self, slot: int, *, model: str = "",
-                    compress: bool = False):
+                    compress: bool = False, skip_keys=frozenset()):
         return self.pools[self.group.resolve(model)].export_slot(
-            slot, compress=compress)
+            slot, compress=compress, skip_keys=skip_keys)
 
     def import_slot(self, snap) -> int:
         return self.pools[self.group.resolve(snap.model)].import_slot(snap)
+
+    def prefix_keys(self, model: str = ""):
+        """Prefix-tree digest keys of the named arena (page-granular
+        migration: a source skips pages this pool already caches)."""
+        return self.pools[self.group.resolve(model)].prefix_keys()
 
     def slot_payload_bytes(self, slot: int, *, model: str = "") -> int:
         return self.pools[self.group.resolve(model)].slot_payload_bytes(slot)

@@ -79,13 +79,16 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, FrozenSet, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.early_exit import exit_stats_dict, first_exit_index
+from repro.models import attention as attn_mod
+from repro.models import blocks as blocks_mod
+from repro.serving.paged import PageAllocator, RadixPrefixCache, chunk_digests
 
 
 @dataclasses.dataclass
@@ -128,6 +131,17 @@ class SchedulerConfig:
     # False = monolithic one-jit decode_step, exits counted but not acted on
     # (the pre-refactor reference path, used by parity tests).
     segmented: bool = True
+    # paged KV arena: attention caches become a global pool of
+    # ``page_size``-token pages addressed through per-slot block tables
+    # (serving/paged.py).  n_pages=0 sizes the pool to n_slots full rows
+    # (same bytes as the contiguous arena); smaller/larger pools trade slot
+    # concurrency against prompt-sharing headroom.  prefix_cache enables the
+    # radix prefix tree (auto-disabled for archs with SSM/xLSTM state
+    # leaves, where skipping replay would leave states unprimed).
+    paged: bool = False
+    page_size: int = 16
+    n_pages: int = 0
+    prefix_cache: bool = True
 
 
 @dataclasses.dataclass
@@ -202,6 +216,17 @@ class SlotSnapshot:
     payload_bytes: int
     rng_tick: int = 0                 # exporting arena's sampling tick
     exit_counts: Any = None           # exporting arena's histogram (copy)
+    # --- paged arenas: page-granular payloads ---
+    # paged exports ship KV PAGES ``[page_skip, page_used)`` instead of
+    # token rows: ``page_digests`` is the slot's full prompt digest chain
+    # and ``page_skip`` counts leading prompt pages the destination already
+    # holds (negotiated via ``export_slot(skip_keys=dst.prefix_keys())``) —
+    # those pages are borrowed from the destination's prefix tree on import
+    # instead of crossing the link (cold pages only).
+    paged: bool = False
+    page_skip: int = 0
+    page_used: int = 0
+    page_digests: List[Any] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -219,6 +244,12 @@ class _PendingPrefill:
     last: Any                          # carried last-real-token logits
     next_chunk: int = 0
     n_chunks: int = 0
+    # paged arenas: per-row replay start (prefix-cache hit tokens are
+    # skipped — their pages are borrowed, not recomputed).  Paged prefill
+    # writes pool pages in place (the staged slots own them exclusively),
+    # so ``cache`` is None in paged mode.
+    start: Any = None                  # np [n_slots] int32
+    start_d: Any = None                # device copy
 
 
 class ContinuousBatchScheduler:
@@ -243,6 +274,33 @@ class ContinuousBatchScheduler:
         self._vocab = mcfg.vocab_size
         self._n_exits = model.n_exits
         self._clen = model.cache_len_for(cfg.max_len, cfg.long_mode)
+
+        # --- paged KV arena (cfg.paged): global page pool + block tables ---
+        self.page_alloc: Optional[PageAllocator] = None
+        self.prefix_cache: Optional[RadixPrefixCache] = None
+        self.prefix_hit_tokens = 0
+        self.prefill_chunks_skipped = 0
+        if cfg.paged:
+            assert mcfg.family != "encdec", "paged mode: encdec unsupported"
+            assert model._window(cfg.long_mode) == 0, \
+                "paged mode: ring-buffer windows unsupported"
+            assert cfg.page_size > 0 and cfg.max_len % cfg.page_size == 0, \
+                "paged mode: max_len must be a multiple of page_size"
+            self._pps = cfg.max_len // cfg.page_size   # pages per slot
+            n_pages = cfg.n_pages or b * self._pps
+            self.page_alloc = PageAllocator(n_pages, cfg.page_size)
+            # prefix skipping replays a SUFFIX of the prompt only — sound
+            # iff shared pages fully determine the skipped positions, i.e.
+            # every cache leaf is pool-backed (no SSM/xLSTM states to prime)
+            if cfg.prefix_cache and model.all_cache_paged():
+                self.prefix_cache = RadixPrefixCache(self.page_alloc)
+            # host block table, sentinel = n_pages (unallocated); uploaded
+            # to device lazily on change (dirty flag) so steady-state polls
+            # reuse one upload
+            self._tbl = np.full((b, self._pps), n_pages, np.int32)
+            self._tbl_device = None
+            self._tbl_dirty = True
+            self._slot_digests: List[List[bytes]] = [[] for _ in range(b)]
 
         # --- queue / slot state (host) ---
         self.queue: deque = deque()
@@ -286,9 +344,22 @@ class ContinuousBatchScheduler:
         # rejects) and re-allocating them every decode step is waste
         self._alive0 = jnp.ones((b,), bool)
         self._first_exit0 = jnp.full((b,), self._n_exits, jnp.int32)
-        self._init_cache = jax.jit(
-            lambda: model.init_decode_cache(b, self._clen,
-                                            long_mode=cfg.long_mode))
+        if cfg.paged:
+            self._init_cache = jax.jit(
+                lambda: model.init_decode_cache_paged(
+                    b, self.page_alloc.n_pages, cfg.page_size))
+        else:
+            self._init_cache = jax.jit(
+                lambda: model.init_decode_cache(b, self._clen,
+                                                long_mode=cfg.long_mode))
+        # paged arenas prefill IN PLACE: pool pages are freshly allocated per
+        # admission, but SSM/xLSTM state rows live per-slot and would carry
+        # the previous occupant's final state — zero them at admission (all
+        # state initializers are zeros, so this IS the fresh-init row)
+        self._reset_states = None
+        if cfg.paged and not model.all_cache_paged():
+            self._reset_states = jax.jit(self._make_reset_states(),
+                                         donate_argnums=(0,))
         # fresh carried-logits buffer per admission, filled ON device: the
         # buffer is donated chunk-to-chunk so it can't be cached, and eager
         # jnp.zeros would implicitly upload its fill scalar every admission
@@ -300,8 +371,11 @@ class ContinuousBatchScheduler:
         # one side, donating both leaves unusable buffers)
         self._merge = jax.jit(model.merge_decode_cache,
                               donate_argnums=(2,))
+        # paged prefill takes (params, cache, tokens, t0, lengths, start,
+        # last, tbl): donate the pool cache (1) and carried logits (6)
         self._prefill_chunk = jax.jit(self._make_prefill_chunk(),
-                                      donate_argnums=(1, 5))
+                                      donate_argnums=(1, 6) if cfg.paged
+                                      else (1, 5))
         # decode: either the depth-segmented stage pipeline (default) or the
         # monolithic one-jit step (pre-refactor reference / parity path)
         self._segments = model.decode_segments
@@ -324,9 +398,18 @@ class ContinuousBatchScheduler:
             self._prime = jax.jit(
                 lambda p, c, f: prime_whisper_cross_cache(model, p, c, f))
         # --- slot migration: fixed-shape export/import (slot is a traced
-        # index, so snapshotting/restoring ANY slot reuses one compile) ---
-        self._export_rows = jax.jit(self._gather_slot)
-        self._import_rows = jax.jit(self._scatter_slot, donate_argnums=(0,))
+        # index, so snapshotting/restoring ANY slot reuses one compile).
+        # Paged arenas gather/scatter the slot's PAGES through its block
+        # table row (also fixed shape: all pages_per_slot entries move,
+        # sentinel-routed scatter drops the unshipped ones). ---
+        if cfg.paged:
+            self._export_rows = jax.jit(self._gather_slot_paged)
+            self._import_rows = jax.jit(self._scatter_slot_paged,
+                                        donate_argnums=(0,))
+        else:
+            self._export_rows = jax.jit(self._gather_slot)
+            self._import_rows = jax.jit(self._scatter_slot,
+                                        donate_argnums=(0,))
         (self._row_struct_flat, self._row_axes_flat,
          self._row_treedef) = self._detect_row_layout()
         self.n_imported = 0
@@ -338,6 +421,36 @@ class ContinuousBatchScheduler:
     # ------------------------------------------------------------------
     def _make_prefill_chunk(self):
         model, cfg = self.model, self.cfg
+        if cfg.paged:
+            def chunk(params, cache, tokens, t0, lengths, start, last_logits,
+                      tbl):
+                """Paged replay directly into the shared pool: rows update
+                only while start[b] <= t < lengths[b] (prefix-hit tokens
+                below ``start`` are already resident in borrowed pages).
+                Staged slots own their pages/state rows exclusively and
+                decode polls are serialized with prefill, so writing the
+                live pool in place is race-free."""
+                n = tokens.shape[1]
+
+                def body(carry, i):
+                    cache, last = carry
+                    tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+                    t = t0 + i
+                    act = (t < lengths) & (t >= start)
+                    logits, _, new_cache = model.decode_step(
+                        params, cache, tok, t, long_mode=cfg.long_mode,
+                        paged=attn_mod.PagedKV(tbl, act))
+                    cache = model.merge_decode_cache(act, new_cache, cache,
+                                                     paged=True)
+                    last = jnp.where((t == lengths - 1)[:, None], logits,
+                                     last)
+                    return (cache, last), None
+
+                (cache, last), _ = jax.lax.scan(body, (cache, last_logits),
+                                                jnp.arange(n))
+                return cache, last
+
+            return chunk
 
         def chunk(params, cache, tokens, t0, lengths, last_logits):
             """Replay ``tokens`` [B,C] at positions t0..t0+C-1; rows update
@@ -386,6 +499,29 @@ class ContinuousBatchScheduler:
         model, cfg = self.model, self.cfg
         n_exits, vocab = self._n_exits, self._vocab
 
+        if cfg.paged:
+            def step(params, cache, tokens, positions, active, counters,
+                     threshold, key, step_idx, tbl):
+                # pool/state writes gate on ``active`` — stale slots must
+                # not touch pages they no longer own (the unpaged step
+                # tolerates their garbage writes because each slot has a
+                # private row; a shared pool does not)
+                logits, ee, new_cache = model.decode_step(
+                    params, cache, tokens, positions,
+                    long_mode=cfg.long_mode,
+                    paged=attn_mod.PagedKV(tbl, active))
+                cache = model.merge_decode_cache(active, new_cache, cache,
+                                                 paged=True)
+                if n_exits:
+                    idx = first_exit_index(ee, threshold, vocab)
+                else:
+                    idx = jnp.zeros((tokens.shape[0],), jnp.int32)
+                greedy, nxt, counters = self._sample_and_count(
+                    logits, idx, active, counters, key, step_idx)
+                return greedy, nxt, cache, counters
+
+            return step
+
         def step(params, cache, tokens, positions, active, counters,
                  threshold, key, step_idx):
             logits, ee, cache = model.decode_step(
@@ -418,6 +554,21 @@ class ContinuousBatchScheduler:
         and hidden passthrough for exited slots."""
         model, cfg = self.model, self.cfg
         first = seg.index == 0
+        if cfg.paged:
+            def stage(params, cache, x, positions, alive, active, tbl):
+                if first:
+                    x = model.embed_decode_tokens(params, x)
+                # write gates are alive & active (stale slots own no pages)
+                # but the HIDDEN passthrough keeps the plain alive mask:
+                # every row's compute must match the unpaged path exactly,
+                # because MoE expert-capacity routing couples batch rows
+                wm = alive & active
+                return model.decode_segment(
+                    params, cache, x, seg, positions, wm,
+                    long_mode=cfg.long_mode,
+                    paged=attn_mod.PagedKV(tbl, wm), passthrough=alive)
+
+            return stage
 
         def stage(params, cache, x, positions, alive):
             if first:
@@ -540,30 +691,88 @@ class ContinuousBatchScheduler:
         self._advance_prefill(self.cfg.max_prefill_chunks_per_step, rep)
         return began or rep.prefill_chunks > 0
 
+    def _reserve_pages(self, slot: int, r: Request) -> Optional[int]:
+        """Paged admission: reserve the slot's whole page budget (prompt +
+        max_new), borrowing shared prefix pages from the radix tree first.
+        Returns the replay start token (prefix-hit tokens are skipped), or
+        None when the pool cannot fit the request even after evicting LRU
+        trie-only pages — the caller defers the request (head-of-line)."""
+        P = self.page_alloc.page_size
+        plen = r.tokens.size
+        total = -(-(plen + r.max_new) // P)
+        digests = chunk_digests(r.tokens, P)
+        shared: List[int] = []
+        if self.prefix_cache is not None:
+            # cap at (plen-1)//P so the LAST prompt token always replays —
+            # the carried last-logits stay real, and any divergence after
+            # the shared prefix lands in freshly-owned pages (COW by
+            # construction: borrowed pages are never written at positions
+            # >= start).  match() retains before eviction can run.
+            shared = self.prefix_cache.match(digests[:(plen - 1) // P],
+                                             r.tokens)
+        need = total - len(shared)
+        if self.page_alloc.free_count < need and self.prefix_cache is not None:
+            self.prefix_cache.evict_until(need)
+        if self.page_alloc.free_count < need:
+            for pg in shared:
+                self.page_alloc.release(pg)
+            return None
+        row = shared + self.page_alloc.alloc(need)
+        self._tbl[slot, :total] = row
+        self._tbl[slot, total:] = self.page_alloc.n_pages
+        self._tbl_dirty = True
+        self._slot_digests[slot] = digests
+        self.prefix_hit_tokens += len(shared) * P
+        return len(shared) * P
+
     def _begin_admit(self) -> List[Request]:
         """Reserve free slots for queued requests and stage their prompts as
-        a pending chunked prefill over a fresh cache.  No chunks run here —
+        a pending chunked prefill over a fresh cache (paged arenas prefill
+        straight into their reserved pool pages).  No chunks run here —
         ``_advance_prefill`` replays them, bounded per poll for fairness."""
         free = [i for i in range(self.cfg.n_slots) if self.slot_req[i] is None]
         if not free or not self.queue:
             return []
-        take = free[: len(self.queue)]
-        reqs = [self.queue.popleft() for _ in take]
+        take: List[int] = []
+        reqs: List[Request] = []
+        starts: Dict[int, int] = {}
+        for slot in free:
+            if not self.queue:
+                break
+            r = self.queue[0]
+            if self.page_alloc is not None:
+                st = self._reserve_pages(slot, r)
+                if st is None:
+                    break              # pool full: defer, keep FIFO order
+                starts[slot] = st
+            self.queue.popleft()
+            take.append(slot)
+            reqs.append(r)
+        if not reqs:
+            return []
         b, chunk = self.cfg.n_slots, self.cfg.prefill_chunk
         max_len = max(r.tokens.size for r in reqs)
         n_chunks = -(-max_len // chunk)
         tokens = np.zeros((b, n_chunks * chunk), np.int32)
         lengths = np.zeros(b, np.int32)
         admit = np.zeros(b, bool)
+        start = np.zeros(b, np.int32)
         now = time.time()
         for slot, r in zip(take, reqs):
             tokens[slot, : r.tokens.size] = r.tokens
             lengths[slot] = r.tokens.size
             admit[slot] = True
+            start[slot] = starts.get(slot, 0)
             r.slot, r.t_admit = slot, now
             self.slot_req[slot] = r
 
-        fresh = self._init_cache()
+        if self.page_alloc is not None:
+            fresh = None               # paged prefill writes the pool itself
+            if self._reset_states is not None:
+                self.cache = self._reset_states(self.cache,
+                                                jnp.asarray(admit))
+        else:
+            fresh = self._init_cache()
         if self.model.cfg.family == "encdec":
             ec = self.model.cfg.encdec
             frames = np.zeros((b, ec.encoder_seq_len, self.model.cfg.d_model),
@@ -578,8 +787,31 @@ class ContinuousBatchScheduler:
             reqs=reqs, slots=take, tokens=tokens, lengths=lengths,
             lengths_d=jnp.asarray(lengths), admit=admit, cache=fresh,
             last=self._fresh_last(),
-            next_chunk=0, n_chunks=n_chunks)
+            next_chunk=0, n_chunks=n_chunks,
+            start=start, start_d=jnp.asarray(start))
         return reqs
+
+    def _make_reset_states(self):
+        """Jitted row-reset for non-pool cache leaves: admitted slots' state
+        rows (axis 1 = batch) go back to zeros, pool leaves pass through."""
+        kinds = self.model.scan_block_kinds()
+
+        def reset(cache, admit):
+            def zero_rows(a):
+                m = admit.reshape((1, admit.shape[0]) + (1,) * (a.ndim - 2))
+                return jnp.where(m, jnp.zeros((), a.dtype), a)
+            out_blocks = []
+            for bi, kind in enumerate(kinds):
+                c = cache["blocks"][bi]
+                if kind in blocks_mod.PAGED_KINDS:
+                    out_blocks.append(c)
+                else:
+                    out_blocks.append(jax.tree.map(zero_rows, c))
+            out = {"blocks": out_blocks}
+            if "shared_attn" in cache:
+                out["shared_attn"] = cache["shared_attn"]
+            return out
+        return reset
 
     def _chunk_t0(self, ci: int):
         """Device scalar for chunk offset ``ci * prefill_chunk``, uploaded
@@ -601,29 +833,79 @@ class ContinuousBatchScheduler:
                 np.asarray(thr, np.float32)))
         return self._thr_cache[1]
 
+    def _tbl_dev(self):
+        """Device copy of the block table, re-uploaded only when a host-side
+        allocation/free actually changed it (explicit h2d; steady-state
+        decode polls reuse the cached upload)."""
+        if self._tbl_dirty:
+            self._tbl_device = jax.device_put(self._tbl)
+            self._tbl_dirty = False
+        return self._tbl_device
+
+    def _chunk_skippable(self, p: _PendingPrefill, lo: int, hi: int) -> bool:
+        """A prefill chunk is skipped when no admitted row has any token to
+        replay in [lo, hi) — either the whole span is prefix-cache-resident
+        (start >= hi) or past the prompt (lengths <= lo).  Skipped chunks
+        cost nothing: no dispatch, no prefill budget."""
+        rows = p.admit
+        return bool(np.all((p.start[rows] >= hi) | (p.lengths[rows] <= lo)))
+
     def _advance_prefill(self, max_chunks: int, rep: StepReport):
         """Run up to ``max_chunks`` pending prefill chunks (<=0 = all); merge
-        into the pool and activate the slots when the last chunk lands."""
+        into the pool and activate the slots when the last chunk lands.
+        Paged arenas replay straight into the reserved pool pages and skip
+        chunks fully covered by prefix-cache hits."""
         p = self._pending
         assert p is not None
         chunk = self.cfg.prefill_chunk
-        end = p.n_chunks if max_chunks <= 0 \
-            else min(p.n_chunks, p.next_chunk + max_chunks)
+        paged = self.page_alloc is not None
         rep.prefill_chunk_start = p.next_chunk
-        for ci in range(p.next_chunk, end):
-            p.cache, p.last = self._prefill_chunk(
-                self.params, p.cache,
-                jnp.asarray(p.tokens[:, ci * chunk:(ci + 1) * chunk]),
-                self._chunk_t0(ci), p.lengths_d, p.last)
-            rep.prefill_chunks += 1
+        budget = max_chunks if max_chunks > 0 else p.n_chunks
+        ci = p.next_chunk
+        while ci < p.n_chunks and budget > 0:
             lo, hi = ci * chunk, (ci + 1) * chunk
-            rep.prefill_tokens += int(
-                np.sum(np.clip(p.lengths - lo, 0, hi - lo)))
-        p.next_chunk = end
+            if paged and self._chunk_skippable(p, lo, hi):
+                self.prefill_chunks_skipped += 1
+                ci += 1
+                continue
+            if paged:
+                self.cache, p.last = self._prefill_chunk(
+                    self.params, self.cache,
+                    jnp.asarray(p.tokens[:, lo:hi]),
+                    self._chunk_t0(ci), p.lengths_d, p.start_d, p.last,
+                    self._tbl_dev())
+                rep.prefill_tokens += int(np.sum(np.clip(
+                    np.minimum(p.lengths, hi) - np.maximum(p.start, lo),
+                    0, None)))
+            else:
+                p.cache, p.last = self._prefill_chunk(
+                    self.params, p.cache,
+                    jnp.asarray(p.tokens[:, lo:hi]),
+                    self._chunk_t0(ci), p.lengths_d, p.last)
+                rep.prefill_tokens += int(
+                    np.sum(np.clip(p.lengths - lo, 0, hi - lo)))
+            rep.prefill_chunks += 1
+            budget -= 1
+            ci += 1
+        p.next_chunk = ci
         if p.next_chunk < p.n_chunks:
             return
-        # last chunk replayed: merge rows into the pool and go live
-        self.cache = self._merge(jnp.asarray(p.admit), p.cache, self.cache)
+        # last chunk replayed: merge rows into the pool and go live (paged
+        # prefill already wrote the pool in place — nothing to merge)
+        if not paged:
+            self.cache = self._merge(jnp.asarray(p.admit), p.cache,
+                                     self.cache)
+        # publish the finished prompts' full pages into the prefix tree
+        # BEFORE activation (an eos on the first sampled token finishes the
+        # slot and releases its table references; trie retention must
+        # already be in place so shared pages survive)
+        if self.prefix_cache is not None:
+            for slot, r in zip(p.slots, p.reqs):
+                n_full = r.tokens.size // self.page_alloc.page_size
+                if n_full:
+                    self.prefix_cache.insert(
+                        self._slot_digests[slot][:n_full], r.tokens,
+                        [int(pg) for pg in self._tbl[slot, :n_full]])
         logits_np = np.asarray(jax.device_get(p.last))
         for slot, r in zip(p.slots, p.reqs):
             tok0 = self._sample_first(logits_np[slot])
@@ -676,8 +958,13 @@ class ContinuousBatchScheduler:
         # full-depth path costs zero round-trips per token)
         probing = thr > 0.0
         for seg in self._segments:
-            x, self.cache = self._segment_fns[seg.index](
-                self.params, self.cache, x, positions, alive)
+            if self.page_alloc is not None:
+                x, self.cache = self._segment_fns[seg.index](
+                    self.params, self.cache, x, positions, alive, active_d,
+                    self._tbl_dev())
+            else:
+                x, self.cache = self._segment_fns[seg.index](
+                    self.params, self.cache, x, positions, alive)
             self.stage_calls[f"segment{seg.index}"] += 1
             layers_run += seg.layers
             segs_run += 1
@@ -712,10 +999,12 @@ class ContinuousBatchScheduler:
             greedy, sampled = self._step_segmented(
                 tokens, positions, active_d, thr, key)
         else:
-            greedy, sampled, self.cache, self._counters = self._decode(
-                self.params, self.cache, tokens, positions, active_d,
-                self._counters, self._thr_device(thr), key,
-                jax.device_put(np.asarray(self._rng_tick, np.int32)))
+            args = (self.params, self.cache, tokens, positions, active_d,
+                    self._counters, self._thr_device(thr), key,
+                    jax.device_put(np.asarray(self._rng_tick, np.int32)))
+            if self.page_alloc is not None:
+                args = args + (self._tbl_dev(),)
+            greedy, sampled, self.cache, self._counters = self._decode(*args)
             self._last_segments_run = len(self._segments)
             self._last_depth_frac = 1.0
         nxt = np.asarray(jax.device_get(
@@ -742,12 +1031,27 @@ class ContinuousBatchScheduler:
         self._maybe_flush()
         return True
 
+    def _release_slot_pages(self, slot: int):
+        """Drop the slot's block-table references (paged arenas).  Pages
+        the prefix tree also holds stay resident for future prefix hits;
+        slot-exclusive pages return to the free list."""
+        if self.page_alloc is None:
+            return
+        sentinel = self.page_alloc.n_pages
+        for pg in self._tbl[slot]:
+            if pg != sentinel:
+                self.page_alloc.release(int(pg))
+        self._tbl[slot] = sentinel
+        self._tbl_dirty = True
+        self._slot_digests[slot] = []
+
     def _finish(self, slot: int):
         r = self.slot_req[slot]
         r.done, r.t_done = True, time.time()
         self.completed.append(r)
         self.slot_req[slot] = None
         self.active[slot] = False
+        self._release_slot_pages(slot)
 
     # ------------------------------------------------------------------
     # slot migration: fixed-shape export/import of one slot's serving state
@@ -781,14 +1085,93 @@ class ContinuousBatchScheduler:
                 for c, r in zip(cache["shared_attn"], rows["shared_attn"])]
         return out
 
+    def _gather_slot_paged(self, cache, tbl_row, slot):
+        """Paged analogue of ``_gather_slot``: pool leaves gather the slot's
+        pages through its (traced) block table row — fixed shape: ALL
+        ``pages_per_slot`` entries move, sentinel entries clipped to page 0
+        (the host slices the shipped range afterwards); state leaves still
+        gather the batch row at ``slot``."""
+        n_pages = self.page_alloc.n_pages
+        tblc = jnp.clip(tbl_row, 0, n_pages - 1)
+
+        def take(axis):
+            return lambda a: jax.lax.dynamic_index_in_dim(
+                a, slot, axis, keepdims=False)
+        out_blocks = []
+        for bi, kind in enumerate(self.model.scan_block_kinds()):
+            c = cache["blocks"][bi]
+            if kind in blocks_mod.PAGED_KINDS:
+                # pool leaf [n_layers, n_pages, P, ...] -> [n_layers, pps, P, ...]
+                out_blocks.append(jax.tree.map(lambda a: a[:, tblc], c))
+            else:
+                out_blocks.append(jax.tree.map(take(1), c))
+        out = {"blocks": out_blocks}
+        if "shared_attn" in cache:
+            out["shared_attn"] = [jax.tree.map(lambda a: a[tblc], c)
+                                  for c in cache["shared_attn"]]
+        return out
+
+    def _scatter_slot_paged(self, cache, rows, idxvec, slot):
+        """Inverse of ``_gather_slot_paged``: pool leaves scatter page rows
+        to the physical pages in ``idxvec`` [pps] (sentinel = n_pages
+        entries are dropped — borrowed prefix pages and the unwritten tail
+        never touch the pool); state leaves write the batch row."""
+        def put(axis):
+            return lambda a, r: jax.lax.dynamic_update_index_in_dim(
+                a, r.astype(a.dtype), slot, axis)
+        out_blocks = []
+        for bi, kind in enumerate(self.model.scan_block_kinds()):
+            c = cache["blocks"][bi]
+            r = rows["blocks"][bi]
+            if kind in blocks_mod.PAGED_KINDS:
+                out_blocks.append(jax.tree.map(
+                    lambda a, rr: a.at[:, idxvec].set(
+                        rr.astype(a.dtype), mode="drop"), c, r))
+            else:
+                out_blocks.append(jax.tree.map(put(1), c, r))
+        out = {"blocks": out_blocks}
+        if "shared_attn" in cache:
+            out["shared_attn"] = [
+                jax.tree.map(lambda a, rr: a.at[idxvec].set(
+                    rr.astype(a.dtype), mode="drop"), c, r)
+                for c, r in zip(cache["shared_attn"], rows["shared_attn"])]
+        return out
+
     def _detect_row_layout(self):
         """Per-leaf layout of one exported slot row: the full (abstract)
         shapes plus which axis is the time axis, found structurally by
         diffing the row shapes at ``max_len`` vs ``max_len + 1`` — leaves
         whose shape is independent of the context length (SSM/conv states,
         ring-buffer windows, encdec cross caches) get -1 and always ship
-        whole; the rest are truncated to the written prefix on export."""
+        whole; the rest are truncated to the written prefix on export.
+
+        Paged arenas diff the block-table row length instead: the varying
+        axis is the PAGE axis, truncated to the shipped ``[skip, used)``
+        page range on export."""
         b, lm = self.cfg.n_slots, self.cfg.long_mode
+
+        if self.cfg.paged:
+            def rows_struct(pps):
+                cache = jax.eval_shape(
+                    lambda: self.model.init_decode_cache_paged(
+                        b, self.page_alloc.n_pages, self.cfg.page_size))
+                return jax.eval_shape(
+                    self._gather_slot_paged, cache,
+                    jax.ShapeDtypeStruct((pps,), jnp.int32),
+                    jax.ShapeDtypeStruct((), jnp.int32))
+
+            flat, treedef = jax.tree.flatten(rows_struct(self._pps))
+            flat2 = jax.tree.leaves(rows_struct(self._pps + 1))
+            axes = []
+            for a, c in zip(flat, flat2):
+                ax = -1
+                for i, (x, y) in enumerate(zip(a.shape, c.shape)):
+                    if x != y:
+                        ax = i
+                        break
+                assert ax < a.ndim - 1, "page axis must not be the row axis"
+                axes.append(ax)
+            return flat, axes, treedef
 
         def rows_struct(seq_len):
             cache = jax.eval_shape(
@@ -812,8 +1195,19 @@ class ContinuousBatchScheduler:
             axes.append(ax)
         return flat, axes, treedef
 
+    def prefix_keys(self, model: str = "") -> FrozenSet[bytes]:
+        """Digest keys of every trie-resident prefix page — a migration
+        source intersects these against its slot's digest chain to skip
+        shipping pages the destination already holds."""
+        del model
+        if self.prefix_cache is None:
+            return frozenset()
+        return self.prefix_cache.keys()
+
     def export_slot(self, slot: int, *, model: str = "",
-                    compress: bool = False) -> SlotSnapshot:
+                    compress: bool = False,
+                    skip_keys: FrozenSet[bytes] = frozenset()
+                    ) -> SlotSnapshot:
         """Snapshot one active slot out of the arena as a ``SlotSnapshot``.
 
         The row gather is one fixed-shape jitted call (traced slot index);
@@ -825,14 +1219,34 @@ class ContinuousBatchScheduler:
         left untouched — pair with ``release_slot`` to evict, or discard
         the snapshot to abort a migration.  ``model`` is accepted for
         interface uniformity with ``MultiModelScheduler`` and ignored.
+
+        Paged arenas ship pages, not token rows: the payload slices the
+        PAGE axis to ``[skip, used)`` where ``used = ceil(position/P)`` and
+        ``skip`` counts the leading prompt pages whose digests appear in
+        ``skip_keys`` (the destination's ``prefix_keys()``) — a migration
+        between arenas with a shared system prompt moves only cold pages.
         """
         del model                      # single-model arena: one namespace
         from repro.kernels import ops as kops
         r = self.slot_req[slot]
         assert r is not None and self.active[slot], f"slot {slot} not active"
-        rows = self._export_rows(
-            self.cache, jax.device_put(np.asarray(slot, np.int32)))
         position = int(self.positions[slot])
+        paged = self.page_alloc is not None
+        page_skip = page_used = 0
+        page_digests: List[bytes] = []
+        if paged:
+            P = self.cfg.page_size
+            page_used = -(-position // P)
+            page_digests = list(self._slot_digests[slot])
+            while (page_skip < min(page_used, len(page_digests))
+                   and page_digests[page_skip] in skip_keys):
+                page_skip += 1
+            rows = self._export_rows(
+                self.cache, jax.device_put(self._tbl[slot]),
+                jax.device_put(np.asarray(slot, np.int32)))
+        else:
+            rows = self._export_rows(
+                self.cache, jax.device_put(np.asarray(slot, np.int32)))
         payload: List[Any] = []
         scales: List[Optional[Any]] = []
         nbytes = 0
@@ -848,7 +1262,10 @@ class ContinuousBatchScheduler:
             sh = None if s is None else np.asarray(jax.device_get(s))
             if ax >= 0:
                 cut = [slice(None)] * ah.ndim
-                cut[ax] = slice(0, min(position, ah.shape[ax]))
+                if paged:
+                    cut[ax] = slice(page_skip, min(page_used, ah.shape[ax]))
+                else:
+                    cut[ax] = slice(0, min(position, ah.shape[ax]))
                 ah = ah[tuple(cut)]
                 if sh is not None:
                     sh = sh[tuple(cut)]
@@ -863,7 +1280,9 @@ class ContinuousBatchScheduler:
             steps_taken=int(self.steps_taken[slot]),
             compressed=compress, payload=payload, scales=scales,
             payload_bytes=int(nbytes), rng_tick=self._rng_tick,
-            exit_counts=self.flush_counters().copy())
+            exit_counts=self.flush_counters().copy(),
+            paged=paged, page_skip=page_skip, page_used=page_used,
+            page_digests=page_digests)
 
     def slot_payload_bytes(self, slot: int, *, model: str = "") -> int:
         """Size of the raw payload ``export_slot(slot)`` would ship, from
@@ -873,11 +1292,16 @@ class ContinuousBatchScheduler:
         exported snapshot's measured ``payload_bytes`` exactly."""
         del model
         position = int(self.positions[slot])
+        if self.page_alloc is not None:
+            # raw no-skip estimate: ceil(position / P) whole pages
+            cut = -(-position // self.cfg.page_size)
+        else:
+            cut = position
         total = 0
         for ref, ax in zip(self._row_struct_flat, self._row_axes_flat):
             shape = list(ref.shape)
             if ax >= 0:
-                shape[ax] = min(position, shape[ax])
+                shape[ax] = min(cut, shape[ax])
             total += int(np.prod(shape)) * ref.dtype.itemsize
         return total
 
@@ -890,13 +1314,23 @@ class ContinuousBatchScheduler:
         Compressed payloads are dequantized through the
         ``kernels/feature_compress`` kernel first.  The scatter is one
         fixed-shape jitted call (traced slot index): importing never adds
-        per-request recompiles.  Returns the slot used."""
+        per-request recompiles.  Returns the slot used.
+
+        Paged imports rebuild the slot's block table first: pages whose
+        digests the snapshot marked skipped are BORROWED from this arena's
+        prefix trie (the skip contract — the source consulted our
+        ``prefix_keys()``), the rest are freshly allocated; the shipped
+        pages then scatter into the fresh pages through a fixed-length
+        index vector (sentinel entries dropped)."""
         from repro.kernels import ops as kops
         free = self.free_slots()
         assert free, "import_slot: no free slot in this arena"
         r = snap.req
         assert not r.done and snap.steps_taken < r.max_new, \
             "import_slot: request already finished"
+        paged = self.page_alloc is not None
+        assert snap.paged == paged, \
+            "import_slot: snapshot/arena paging modes differ"
 
         def pad_full(x, shape):
             if x.shape == tuple(shape):
@@ -906,6 +1340,40 @@ class ContinuousBatchScheduler:
             return full
 
         slot = free[0]
+        idxvec = None
+        if paged:
+            P, pps = self.cfg.page_size, self._pps
+            n_pages = self.page_alloc.n_pages
+            plen = int(r.tokens.size)
+            total = -(-(plen + r.max_new) // P)
+            nskip, used = snap.page_skip, snap.page_used
+            shared: List[int] = []
+            if nskip:
+                assert self.prefix_cache is not None, \
+                    "import_slot: skipped pages but no prefix cache here"
+                shared = self.prefix_cache.match(
+                    snap.page_digests[:nskip], r.tokens)
+                assert len(shared) == nskip, \
+                    "import_slot: prefix pages evicted mid-migration"
+            if self.prefix_cache is not None:
+                self.prefix_cache.evict_until(total - nskip)
+            try:
+                fresh = self.page_alloc.alloc(total - nskip)
+            except MemoryError:
+                for pg in shared:
+                    self.page_alloc.release(pg)
+                raise
+            row = np.full(pps, n_pages, np.int32)
+            row[:nskip] = shared
+            row[nskip:total] = fresh
+            # payload page row j holds physical page row[nskip + j]; rows
+            # past the shipped range are zero padding -> sentinel-dropped
+            idxvec = np.full(pps, n_pages, np.int32)
+            for j in range(used - nskip):
+                idxvec[j] = row[nskip + j]
+            self._tbl[slot] = row
+            self._tbl_dirty = True
+            self._slot_digests[slot] = list(snap.page_digests)
         leaves = []
         # restoring the shipped payload is the migration boundary's intended
         # h2d traffic (and the dequantizer wrapper pads eagerly)
@@ -921,8 +1389,20 @@ class ContinuousBatchScheduler:
                     a = jnp.asarray(pad_full(ah, ref.shape))
                 leaves.append(a)
         rows = jax.tree.unflatten(self._row_treedef, leaves)
-        self.cache = self._import_rows(
-            self.cache, rows, jax.device_put(np.asarray(slot, np.int32)))
+        if paged:
+            self.cache = self._import_rows(
+                self.cache, rows, jnp.asarray(idxvec),
+                jax.device_put(np.asarray(slot, np.int32)))
+            if self.prefix_cache is not None and snap.page_digests:
+                # publish the imported prompt pages so later admissions
+                # (and further migrations) can share them here too
+                n_full = len(snap.page_digests)
+                self.prefix_cache.insert(
+                    snap.page_digests, r.tokens,
+                    [int(self._tbl[slot, i]) for i in range(n_full)])
+        else:
+            self.cache = self._import_rows(
+                self.cache, rows, jax.device_put(np.asarray(slot, np.int32)))
         r.slot = slot
         self.slot_req[slot] = r
         self.positions[slot] = snap.position
@@ -953,6 +1433,7 @@ class ContinuousBatchScheduler:
         assert r is not None, f"slot {slot} empty"
         self.slot_req[slot] = None
         self.active[slot] = False
+        self._release_slot_pages(slot)
         r.slot = -1
         return r
 
@@ -970,6 +1451,7 @@ class ContinuousBatchScheduler:
         reqs = list(self._pending.reqs)
         for slot in self._pending.slots:
             self.slot_req[slot] = None
+            self._release_slot_pages(slot)
         for r in reqs:
             r.slot = -1
         self._pending = None

@@ -1,0 +1,251 @@
+"""Paged KV arena + radix prefix cache invariants.
+
+Parity contract: a paged arena (global page pool + per-slot block tables)
+serves GREEDY requests bit-identically to the contiguous per-slot arena —
+including slot reuse, prefix-cache hits, copy-on-write divergence and
+page-granular migration.  The Pallas paged decode kernels are checked
+against their jnp gather-view oracles.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import (ContinuousBatchScheduler, Request,
+                           SchedulerConfig)
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_config("granite-3-2b-smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _serve(m, params, prompts, max_new, *, paged, prefix=False, n_slots=2,
+           max_len=64, chunk=8):
+    s = ContinuousBatchScheduler(
+        m, params, SchedulerConfig(n_slots=n_slots, max_len=max_len,
+                                   prefill_chunk=chunk, paged=paged,
+                                   page_size=16, prefix_cache=prefix))
+    for i, p in enumerate(prompts):
+        s.submit(Request(tokens=np.asarray(p, np.int32), max_new=max_new,
+                         req_id=i))
+    while s.has_work:
+        s.poll()
+    return s, {r.req_id: list(r.out_tokens) for r in s.completed}
+
+
+# ---------------------------------------------------------------------------
+# greedy parity: paged == contiguous, audited
+# ---------------------------------------------------------------------------
+def test_paged_parity_with_slot_reuse(granite, slot_audit,
+                                      assert_no_recompile):
+    """6 mixed-length prompts through 2 slots (every slot reused): the
+    paged arena's greedy outputs equal the contiguous arena's, slot and
+    page accounting audited after every poll, steady state compile-free."""
+    cfg, m, params = granite
+    rs = np.random.RandomState(0)
+    prompts = [rs.randint(0, cfg.vocab_size, n)
+               for n in (5, 20, 33, 9, 14, 7)]
+    _, flat = _serve(m, params, prompts, 6, paged=False)
+
+    s = ContinuousBatchScheduler(
+        m, params, SchedulerConfig(n_slots=2, max_len=64, prefill_chunk=8,
+                                   paged=True, page_size=16,
+                                   prefix_cache=False))
+    audit = slot_audit(s)
+    for i, p in enumerate(prompts[:2]):
+        s.submit(Request(tokens=np.asarray(p, np.int32), max_new=6,
+                         req_id=i))
+    while s.has_work:
+        s.poll()
+    with assert_no_recompile(s):       # slot churn must not retrace
+        for i, p in enumerate(prompts[2:], start=2):
+            s.submit(Request(tokens=np.asarray(p, np.int32), max_new=6,
+                             req_id=i))
+        while s.has_work:
+            s.poll()
+    got = {r.req_id: list(r.out_tokens) for r in s.completed}
+    assert got == flat
+    assert audit.polls > 0
+    # drained pool: every page back on the free list
+    assert s.page_alloc.free_count == s.page_alloc.n_pages
+    assert not s.page_alloc.refcount.any()
+
+
+STATE_ARCHS = ["xlstm-350m-smoke", "zamba2-1.2b-smoke",
+               "deepseek-v3-671b-smoke"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", STATE_ARCHS)
+def test_paged_parity_state_and_mla_arenas(arch, slot_audit):
+    """SSM / hybrid shared-attn / MLA+MoE arenas: only the attention kinds
+    page; state rows stay per-slot and must be zeroed on slot reuse.  Three
+    requests through 2 slots forces a reuse."""
+    cfg = get_config(arch)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rs = np.random.RandomState(1)
+    prompts = [rs.randint(0, cfg.vocab_size, n) for n in (6, 21, 11)]
+    _, flat = _serve(m, params, prompts, 4, paged=False)
+    s, got = _serve(m, params, prompts, 4, paged=True)
+    assert got == flat
+    assert s.page_alloc.free_count == s.page_alloc.n_pages
+
+
+# ---------------------------------------------------------------------------
+# radix prefix cache: reuse, release, copy-on-write
+# ---------------------------------------------------------------------------
+def test_prefix_cache_reuse_release_and_cow(granite):
+    cfg, m, params = granite
+    rs = np.random.RandomState(2)
+    prompt = rs.randint(0, cfg.vocab_size, 48).astype(np.int32)
+    s = ContinuousBatchScheduler(
+        m, params, SchedulerConfig(n_slots=2, max_len=64, prefill_chunk=8,
+                                   paged=True, page_size=16,
+                                   prefix_cache=True))
+
+    def serve_one(toks, req_id):
+        r = Request(tokens=toks.copy(), max_new=6, req_id=req_id)
+        s.submit(r)
+        while s.has_work:
+            s.poll()
+        return r
+
+    # cold then warm: identical outputs, the warm run borrows the two full
+    # 16-token pages (tokens 0..31; the tail page replays for its logits)
+    r_cold = serve_one(prompt, 0)
+    assert s.prefix_hit_tokens == 0
+    r_warm = serve_one(prompt, 1)
+    assert r_warm.out_tokens == r_cold.out_tokens
+    assert s.prefix_hit_tokens == 32
+    assert s.prefill_chunks_skipped > 0
+
+    # copy-on-write: a sibling diverging inside the last shared page must
+    # not rewrite the shared prefix under the original
+    div = prompt.copy()
+    div[40] = (int(div[40]) + 1) % cfg.vocab_size
+    serve_one(div, 2)
+    r_again = serve_one(prompt, 3)
+    assert r_again.out_tokens == r_cold.out_tokens, \
+        "divergent sibling corrupted the shared prefix pages"
+
+    # trie retention is the only thing keeping pages referenced once the
+    # pool drains; clearing it must return the whole pool to the free list
+    assert s.page_alloc.free_count < s.page_alloc.n_pages
+    s.prefix_cache.clear()
+    assert s.page_alloc.free_count == s.page_alloc.n_pages
+    assert not s.page_alloc.refcount.any()
+
+
+# ---------------------------------------------------------------------------
+# page-granular migration: cold pages ship, warm prefixes don't
+# ---------------------------------------------------------------------------
+def test_paged_migration_skips_warm_prefix_pages(granite):
+    cfg, m, params = granite
+    scfg = SchedulerConfig(n_slots=2, max_len=64, prefill_chunk=8,
+                           paged=True, page_size=16, prefix_cache=True)
+    rs = np.random.RandomState(3)
+    prompt = rs.randint(0, cfg.vocab_size, 40).astype(np.int32)
+
+    # destination arena already served this prompt: its trie holds the two
+    # full prefix pages, so a migration need not ship them
+    dst = ContinuousBatchScheduler(m, params, scfg)
+    dst.submit(Request(tokens=prompt.copy(), max_new=4, req_id=9))
+    while dst.has_work:
+        dst.poll()
+
+    src = ContinuousBatchScheduler(m, params, scfg)
+    r = Request(tokens=prompt.copy(), max_new=10, req_id=0)
+    src.submit(r)
+    while src.has_work and (not src.active[0] or src.steps_taken[0] < 4):
+        src.poll()
+    full = src.export_slot(0)
+    skip = src.export_slot(0, skip_keys=dst.prefix_keys())
+    assert skip.payload_bytes < full.payload_bytes, \
+        (skip.payload_bytes, full.payload_bytes)
+
+    # the skip-export continues bit-identically on the destination...
+    dst.import_slot(skip)
+    while dst.has_work:
+        dst.poll()
+    moved = [c for c in dst.completed if c.req_id == 0][0]
+    # ...matching the source finishing the request locally
+    while src.has_work:
+        src.poll()
+    assert moved.out_tokens == r.out_tokens
+
+
+# ---------------------------------------------------------------------------
+# Pallas paged decode kernels vs jnp gather-view oracles
+# ---------------------------------------------------------------------------
+def test_paged_gqa_kernel_matches_reference():
+    from repro.kernels import ops, ref
+    rs = np.random.RandomState(4)
+    b, nq, nkv, hd, n_pages, page, pps = 3, 8, 2, 64, 16, 16, 4
+    q = jnp.asarray(rs.randn(b, 1, nq, hd), jnp.float32)
+    pk = jnp.asarray(rs.randn(n_pages, page, nkv, hd), jnp.float32)
+    pv = jnp.asarray(rs.randn(n_pages, page, nkv, hd), jnp.float32)
+    # ragged positions + sentinel entries past each row's used pages
+    pos = jnp.asarray([5, 17, 63], jnp.int32)
+    tbl = np.full((b, pps), n_pages, np.int32)
+    used = [[3], [7, 1], [0, 2, 5, 9]]
+    for i, row in enumerate(used):
+        tbl[i, :len(row)] = row
+    tbl = jnp.asarray(tbl)
+    got = ops.paged_gqa_attention(q, pk, pv, tbl, pos)
+    want = ref.paged_gqa_attention_ref(q, pk, pv, tbl, pos)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_paged_mla_kernel_matches_reference():
+    from repro.kernels import ops, ref
+    rs = np.random.RandomState(5)
+    b, n, r, hr, n_pages, page, pps = 2, 4, 32, 16, 8, 16, 3
+    ql = jnp.asarray(rs.randn(b, 1, n, r), jnp.float32)
+    qr = jnp.asarray(rs.randn(b, 1, n, hr), jnp.float32)
+    pc = jnp.asarray(rs.randn(n_pages, page, r), jnp.float32)
+    pr = jnp.asarray(rs.randn(n_pages, page, hr), jnp.float32)
+    pos = jnp.asarray([9, 40], jnp.int32)
+    tbl = np.full((b, pps), n_pages, np.int32)
+    tbl[0, :1] = [4]
+    tbl[1, :3] = [1, 6, 0]
+    scale = 1.0 / np.sqrt(r + hr)
+    got = ops.paged_mla_attention(ql, qr, pc, pr, jnp.asarray(tbl), pos,
+                                  scale=scale)
+    want = ref.paged_mla_attention_ref(ql, qr, pc, pr, jnp.asarray(tbl),
+                                       pos, scale=scale)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# satellites: interpret autodetect + PLT006
+# ---------------------------------------------------------------------------
+def test_flash_attention_interpret_autodetects_backend():
+    """kernels.attention.flash_attention no longer hardcodes interpret=True:
+    the default resolves from the backend (interpret on CPU) and matches
+    the reference."""
+    from repro.kernels import ref
+    from repro.kernels.attention import flash_attention
+    rs = np.random.RandomState(6)
+    q = jnp.asarray(rs.randn(2, 32, 64), jnp.float32)
+    k = jnp.asarray(rs.randn(2, 32, 64), jnp.float32)
+    v = jnp.asarray(rs.randn(2, 32, 64), jnp.float32)
+    got = flash_attention(q, k, v, block_q=16, block_k=16)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_plt006_page_size_rule():
+    from repro.analysis import lint_source
+    bad = ("from repro.serving import SchedulerConfig\n"
+           "cfg = SchedulerConfig(paged=True, page_size=12)\n")
+    found = lint_source(bad, "bad_page.py")
+    assert [f.rule for f in found] == ["PLT006"]
+    good = bad.replace("page_size=12", "page_size=16")
+    assert lint_source(good, "good_page.py") == []
