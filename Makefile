@@ -12,8 +12,14 @@
 #   make bench-migrate  executed prefill/decode splits + tier-outage
 #                    failover-by-migration vs requeue-and-recompute
 #   make bench-paged paged KV arena capacity + radix prefix-cache hit rate
+#   make bench-spec  cross-tier speculative decoding: lossless vs target-only
+#                    greedy, measured acceptance, decode-rate + p50 wins on
+#                    high-RTT links (assertion-gated, part of make check)
+#   make bench-targets  fail if benchmarks/run.py registers a bench with no
+#                    Makefile target (consistency gate, part of make check)
 .PHONY: test test-fast lint analyze check serve-bench bench-smoke \
-	bench-exit bench-multi bench-migrate bench-paged
+	bench-exit bench-multi bench-migrate bench-paged bench-spec \
+	bench-targets
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
@@ -28,7 +34,7 @@ lint:
 analyze:
 	PYTHONPATH=src python -m repro.analysis
 
-check: lint analyze test-fast
+check: lint analyze bench-targets test-fast bench-spec
 
 serve-bench:
 	python benchmarks/serving_bench.py
@@ -47,3 +53,9 @@ bench-migrate:
 
 bench-paged:
 	python benchmarks/paged_kv_bench.py
+
+bench-spec:
+	python benchmarks/spec_decode_bench.py
+
+bench-targets:
+	python benchmarks/check_targets.py

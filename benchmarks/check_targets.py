@@ -1,0 +1,49 @@
+"""Makefile/bench-runner consistency gate (run by ``make check``).
+
+Every benchmark module the runner (``benchmarks/run.py``) registers — a
+``<name>_bench.run(...)`` call feeding the trajectory artifact — must have
+a Makefile target that invokes ``benchmarks/<name>_bench.py`` directly, so
+each trajectory section stays runnable (and bisectable) in isolation.  A
+bench added to the runner without a target silently becomes
+run-everything-or-nothing; this gate turns that drift into a CI failure.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def registered_benches() -> list:
+    """Bench modules the runner actually invokes (``foo_bench.run(``)."""
+    with open(os.path.join(ROOT, "benchmarks", "run.py")) as f:
+        src = f.read()
+    return sorted(set(re.findall(r"\b(\w+_bench)\.run\(", src)))
+
+
+def makefile_bench_modules() -> set:
+    """Bench modules some Makefile recipe runs as a script."""
+    with open(os.path.join(ROOT, "Makefile")) as f:
+        src = f.read()
+    return set(re.findall(r"benchmarks/(\w+_bench)\.py", src))
+
+
+def main() -> int:
+    benches = registered_benches()
+    targeted = makefile_bench_modules()
+    missing = [b for b in benches if b not in targeted]
+    if missing:
+        print("benchmarks registered in benchmarks/run.py with no Makefile "
+              "target:")
+        for b in missing:
+            print(f"  {b}  (add a target running benchmarks/{b}.py)")
+        return 1
+    print(f"bench targets OK: {len(benches)} registered benches all have "
+          f"Makefile targets")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

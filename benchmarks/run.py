@@ -76,7 +76,7 @@ def main() -> None:
                             runtime_micro, serving_bench,
                             tiered_serving_bench, exit_bench,
                             multi_model_bench, migration_bench,
-                            paged_kv_bench)
+                            paged_kv_bench, spec_decode_bench)
     from benchmarks.common import emit_csv
 
     table1_models.run()
@@ -92,7 +92,10 @@ def main() -> None:
     # (depth-segmented decode: tok/s rises as exits truncate compute), the
     # multi-model pool vs swap-serving, real cross-tier migration
     # (executed splits + failover-by-migration vs requeue-and-recompute),
-    # then the paged KV arena (capacity at equal bytes + prefix reuse)
+    # the paged KV arena (capacity at equal bytes + prefix reuse), then
+    # cross-tier speculative decoding (device draft, cloud batched verify:
+    # lossless vs target-only greedy, measured acceptance, decode-rate and
+    # p50 wins on high-RTT links)
     print()
     serving = serving_bench.run(requests=6, slots=2, prompt_len=8, max_new=8)
     print()
@@ -107,6 +110,8 @@ def main() -> None:
     migration = migration_bench.run(requests=8, max_new=12)
     print()
     paged_kv = paged_kv_bench.run(max_new=7)
+    print()
+    spec_decode = spec_decode_bench.run(max_new=12)
     print()
     emit_csv()
 
@@ -125,6 +130,7 @@ def main() -> None:
         "multi_model": multi,
         "migration": migration,
         "paged_kv": paged_kv,
+        "spec_decode": spec_decode,
         "analysis_violations": _analysis_violations(),
     }
     trajectory = [e for e in _load_trajectory()

@@ -15,7 +15,13 @@ nothing):
   invariants after every round: free+staged+live slots partition the
   pool, positions/steps stay in range, booking ledgers balance, and at
   completion the exit-counter histogram equals ``tokens_served`` and no
-  orphaned migration state remains.
+  orphaned migration state remains.  Speculative draft/target pairs
+  (``SpecPair``, standalone or inside a cluster's device/cloud bridge)
+  additionally get per-round pair invariants: after every verify round
+  the draft shadow's position/pending-token/step state agrees with its
+  target slot, finished targets leave no live shadow behind (no orphaned
+  draft slots or page refcounts), and every live draft slot belongs to a
+  tracked pair.
 """
 from __future__ import annotations
 
@@ -163,6 +169,8 @@ class SlotAudit:
                 if not t.has_work:
                     self._check_pool_idle(pool, violations,
                                           prefix=f"pool {name}: ")
+            if hasattr(t, "draft_name"):   # SpecPair pair invariants
+                self._check_spec_pair(t, violations)
         else:
             self._check_pool(t, violations)
             if not t.has_work:
@@ -269,6 +277,51 @@ class SlotAudit:
                        f"tokens_served is {s.tokens_served} (alive-mask / "
                        f"counter drift)")
 
+    # SpecPair: draft/target agreement + shadow-slot hygiene -------------
+    @staticmethod
+    def _check_spec_pair(p: Any, out: List[str], prefix: str = "") -> None:
+        tgt = p.pools[p.target_name]
+        drf = p.pools[p.draft_name]
+        shadow_of = {}                 # draft slot -> req_id (live shadows)
+        for rid, (req, shadow) in p._pairs.items():
+            d_live = (shadow.slot >= 0 and drf.active[shadow.slot]
+                      and drf.slot_req[shadow.slot] is shadow)
+            if req.done:
+                # a finished target must not leave a LIVE shadow behind —
+                # its slot (and page refcounts) would leak until the pool
+                # drains.  Staged-mid-prefill shadows are reaped later by
+                # design and stay tracked in _pairs meanwhile.
+                if d_live:
+                    out.append(f"{prefix}request {rid} done but its draft "
+                               f"shadow still holds live slot "
+                               f"{shadow.slot} (orphaned draft slot)")
+                continue
+            if d_live:
+                shadow_of[shadow.slot] = rid
+            if not (d_live and req.slot >= 0 and tgt.active[req.slot]):
+                continue               # pair not live in both arenas yet
+            ts, ds = req.slot, shadow.slot
+            # post-round resync contract: the draft mirrors the target's
+            # commit state exactly before the next propose reads it
+            if int(drf.positions[ds]) != int(tgt.positions[ts]):
+                out.append(f"{prefix}pair {rid}: draft position "
+                           f"{int(drf.positions[ds])} != target position "
+                           f"{int(tgt.positions[ts])} (resync drift)")
+            if int(drf.current_tok[ds]) != int(tgt.current_tok[ts]):
+                out.append(f"{prefix}pair {rid}: draft pending token "
+                           f"{int(drf.current_tok[ds])} != target's "
+                           f"{int(tgt.current_tok[ts])} (resync drift)")
+            if int(drf.steps_taken[ds]) != int(tgt.steps_taken[ts]):
+                out.append(f"{prefix}pair {rid}: draft steps "
+                           f"{int(drf.steps_taken[ds])} != target steps "
+                           f"{int(tgt.steps_taken[ts])}")
+        for i in range(drf.cfg.n_slots):
+            r = drf.slot_req[i]
+            if r is not None and drf.active[i] and r.req_id not in p._pairs:
+                out.append(f"{prefix}draft slot {i} live for request "
+                           f"{r.req_id} with no tracked pair (orphaned "
+                           f"shadow)")
+
     # tiered cluster: bookings, ledgers, migration queues ----------------
     def _check_cluster(self, c: Any, out: List[str]) -> None:
         for name, tr in c.tiers.items():
@@ -282,6 +335,10 @@ class SlotAudit:
                     out.append(f"tier {name}: slot_avail/{m} and "
                                f"slot_released/{m} ledgers diverged "
                                f"({len(sa)} vs {len(tr.slot_released[m])})")
+        for m, pair in getattr(c, "_spec_pairs", {}).items():
+            for name, p in pair.pools.items():
+                self._check_pool(p, out, prefix=f"spec {m}/{name}: ")
+            self._check_spec_pair(pair, out, prefix=f"spec {m}: ")
         for cr in c.requests:
             if cr.done and (cr.booked_slot >= 0 or cr.pf_booked_slot >= 0):
                 out.append(f"request {cr.req.req_id} done but still holds a "
@@ -315,3 +372,16 @@ class SlotAudit:
             if exported != imported:
                 out.append(f"idle cluster: {exported} slots exported but "
                            f"{imported} imported (orphaned snapshot)")
+            if getattr(c, "_spec_waiting", None):
+                out.append(f"idle cluster: {len(c._spec_waiting)} "
+                           f"speculative request(s) stuck in the bridge "
+                           f"admission queue")
+            stuck = [cr for cr in getattr(c, "_spec_live", {}).values()
+                     if not cr.done]
+            if stuck:
+                out.append(f"idle cluster: {len(stuck)} speculative "
+                           f"request(s) live in the bridge but not done")
+            for m, pair in getattr(c, "_spec_pairs", {}).items():
+                for name, p in pair.pools.items():
+                    self._check_pool_idle(p, out,
+                                          prefix=f"spec {m}/{name}: ")

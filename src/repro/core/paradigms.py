@@ -92,6 +92,23 @@ class Scenario:
             sc, dev_cloud=LinkProfile("wan-degraded", 1 * 1e6 / 8, 0.5))
 
     @staticmethod
+    def high_rtt_access(rtt: float = 0.25) -> "Scenario":
+        """Default hardware, but the CLIENT's access link is high-latency
+        in both directions (satellite / congested last mile): every path
+        out of the device pays ``rtt`` seconds per round trip, while the
+        edge<->cloud backbone stays fast.  This is the regime cross-tier
+        speculative decoding targets — interactive decode on any remote
+        tier is RTT-bound, so shipping k draft tokens per round trip beats
+        streaming one token per round trip."""
+        sc = Scenario.default()
+        return dataclasses.replace(
+            sc,
+            dev_edge=LinkProfile("access-rtt-edge",
+                                 sc.dev_edge.bandwidth, rtt),
+            dev_cloud=LinkProfile("access-rtt-wan",
+                                  sc.dev_cloud.bandwidth, rtt))
+
+    @staticmethod
     def tier_outage(tier: str = "edge", at: float = 0.05) -> "Scenario":
         """Default hardware, but ``tier`` dies once the serving cluster's
         virtual clock reaches ``at`` seconds (mid-trace for the smoke
@@ -255,7 +272,11 @@ def admission_decision(graph: CostGraph, sc: Scenario, *,
                        decode_tokens: int = 0,
                        kv_bytes_per_token: float = 0.0,
                        allow_split: bool = True,
-                       exclude: Optional[frozenset] = None
+                       exclude: Optional[frozenset] = None,
+                       stream_tokens: bool = False,
+                       spec_k: int = 0,
+                       spec_accept: float = 0.0,
+                       spec_draft_frac: float = 0.1
                        ) -> AdmissionDecision:
     """Pick the serving tier for ONE request at admission time.
 
@@ -269,15 +290,35 @@ def admission_decision(graph: CostGraph, sc: Scenario, *,
     charged to the candidate's decode tier, so a congested pool sheds load.
     ``exclude`` drops every candidate touching a named tier (prefill or
     decode side) — dead tiers after an outage must not win placement.
+
+    ``stream_tokens`` opts into interactive-decode pricing: a remote decode
+    tier pays one downlink round trip PER TOKEN (each sampled token streams
+    back to the device-side client as it lands), which is the regime where
+    cloud decode becomes latency-bound on WAN-heavy links.  Under it, a
+    ``spec_k >= 2`` enables the **speculative** candidate: a draft model on
+    the device tier proposes k-token windows, the cloud tier verifies each
+    window in one batched dispatch, and the link carries one uplink of k
+    token ids + one downlink of the accept length per ROUND instead of one
+    RTT per token — rounds shrink by the expected acceptance length
+    ``spec_accept`` (measured by the serving cluster; defaults to the
+    midpoint (k+1)/2).  ``spec_draft_frac`` prices the draft model's
+    per-token compute as a fraction of the target's.
     """
     qc = queue_cost or {}
     dead = exclude or frozenset()
     dl = float("inf") if deadline is None else deadline
     cands: List[AdmissionDecision] = []
+    tok_bytes = 4.0                    # one int32 token id on the wire
 
     def add(tier, paradigm, lat, *, prefill_tier=None, transfer=0.0, **det):
         if tier in dead or (prefill_tier or tier) in dead:
             return
+        if (stream_tokens and decode_tokens > 0 and tier != "device"
+                and paradigm != "speculative"):
+            # interactive decode on a remote tier: every sampled token pays
+            # the downlink back to the device-side client
+            link = sc.dev_cloud if tier == "cloud" else sc.dev_edge
+            lat = lat + decode_tokens * link.tx_time(tok_bytes)
         eff = lat + qc.get(tier, 0.0)
         cands.append(AdmissionDecision(
             tier, prefill_tier or tier, paradigm, lat, eff,
@@ -331,6 +372,40 @@ def admission_decision(graph: CostGraph, sc: Scenario, *,
             add(dec_tier, f"split/{pf_tier}-prefill",
                 lat, prefill_tier=pf_tier, transfer=transfer,
                 kv_bytes=kv_bytes)
+
+    # cross-tier speculative decoding: a draft model on the DEVICE tier
+    # proposes spec_k tokens per round, the cloud tier verifies the window
+    # in one batched dispatch.  The WAN carries k token ids up and the
+    # accept length + one corrected token down once per ROUND, so the link
+    # cost shrinks by the acceptance length relative to streaming one RTT
+    # per token.  The candidate straddles device+cloud: either tier being
+    # dead kills it (the draft runs outside the `add` tier bookkeeping, so
+    # the device check is explicit here).
+    if (stream_tokens and spec_k >= 2 and decode_tokens > 0
+            and prefill_tokens and "device" not in dead):
+        total_tok = prefill_tokens + decode_tokens
+        tok_flops = graph.total_flops / total_tok
+        pf_flops = graph.total_flops * prefill_tokens / total_tok
+        accept = spec_accept if spec_accept > 0.0 else (spec_k + 1) / 2.0
+        accept = min(float(accept), float(spec_k))
+        rounds = int(-(-decode_tokens // accept))
+        draft_tok = spec_draft_frac * compute_time(tok_flops, sc.device)
+        # the verify is ONE fixed-shape batched dispatch over k positions:
+        # decode on serving batch sizes is memory-bandwidth-bound, so the
+        # extra positions ride the same weight pass — charge one step, not
+        # k sequential steps (the standard speculative-decoding economics)
+        verify = compute_time(tok_flops, sc.cloud)
+        per_round = (spec_k * draft_tok
+                     + sc.dev_cloud.tx_time(tok_bytes * spec_k)
+                     + verify
+                     + sc.dev_cloud.tx_time(tok_bytes * 2.0))
+        lat = (sc.dev_cloud.tx_time(graph.input_bytes)
+               + max(compute_time(pf_flops, sc.cloud),
+                     spec_draft_frac * compute_time(pf_flops, sc.device))
+               + rounds * per_round)
+        add("cloud", "speculative", lat,
+            spec_k=spec_k, accept_est=accept, rounds=rounds,
+            per_round=per_round)
 
     assert cands, f"no admissible tier (excluded: {sorted(dead)})"
     feas = [c for c in cands if c.feasible]

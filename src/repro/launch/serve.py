@@ -25,7 +25,8 @@ Two modes:
   (``TieredServingCluster``); arrivals become virtual-clock timestamps and
   the report adds per-tier routed counts, utilization, and p50/p95 latency
   under the chosen ``--scenario`` (default | degraded-wan |
-  neurosurgeon-era | tier-outage).  ``tier-outage`` kills the edge tier
+  neurosurgeon-era | high-rtt-access | tier-outage).  ``tier-outage``
+  kills the edge tier
   mid-trace: the cluster drains its in-flight slots to the surviving
   tiers via exported KV snapshots (no prefill re-run) and the report adds
   the migration ledger and resilience numbers.  ``--plan-arch``
@@ -62,11 +63,26 @@ Flags:
     --prefill-chunk  tokens per jitted prefill dispatch
     --tiered      [poisson] route through cloud/edge/device pools
     --scenario    [tiered] hardware scenario preset (default |
-                  degraded-wan | neurosurgeon-era | tier-outage)
+                  degraded-wan | neurosurgeon-era | high-rtt-access |
+                  tier-outage)
     --plan-arch   [tiered] config the admission router plans against
     --deadline    [tiered] per-request deadline in seconds (0 = none)
     --seed        RNG seed for prompts/arrivals
     --long        long-context (ring-buffer KV) mode
+    --spec-draft  [tiered multi-model] group entry used as the device-tier
+                  speculative draft; enables the cross-tier speculative
+                  admission candidate (draft on device, batched verify on
+                  cloud)
+    --spec-k      [tiered multi-model] draft tokens per speculative round
+
+  Cross-tier speculative decoding example (the speculative candidate wins
+  when the client's access link has a high RTT and the plan-size gap
+  between draft and target is large):
+
+      PYTHONPATH=src python -m repro.launch.serve \\
+          --models granite-3-2b-smoke,deepseek-v3-671b-smoke \\
+          --mode poisson --tiered --scenario high-rtt-access \\
+          --spec-draft granite-3-2b-smoke --spec-k 6 --requests 8
 """
 from __future__ import annotations
 
@@ -88,6 +104,7 @@ from repro.serving import (ClusterConfig, ContinuousBatchScheduler,
 SCENARIOS = {"default": Scenario.default,
              "degraded-wan": Scenario.degraded_wan,
              "neurosurgeon-era": Scenario.neurosurgeon_era,
+             "high-rtt-access": Scenario.high_rtt_access,
              "tier-outage": Scenario.tier_outage}
 
 
@@ -344,11 +361,20 @@ def serve_multi_tiered_poisson(archs, *, rate: float = 4.0,
                                scenario: str = "default",
                                deadline: float = 0.0,
                                long_mode: bool = False, seed: int = 0,
+                               spec_draft: str = "", spec_k: int = 4,
                                quiet: bool = False):
     """Multi-model Poisson trace through the tiered cluster: each request is
     routed per (model, request) using that model's cost graphs (plan config
     = the arch with ``-smoke`` stripped), so heavy and light models can land
-    on different tiers within the same trace."""
+    on different tiers within the same trace.
+
+    ``spec_draft`` names a group entry to use as a device-tier draft model:
+    the router then also prices a cross-tier *speculative* candidate
+    (device drafts k tokens per round, cloud batch-verifies, one uplink of
+    k token ids + one downlink of the accept length per round instead of
+    one RTT per token), and requests routed speculative execute through a
+    device/cloud ``SpecPair`` bridge.  Speculative decode forces greedy
+    sampling, so the cluster rejects temperature > 0 at config time."""
     group = _build_group(archs, seed)
     plan_cfgs = {arch: get_config(arch[:-6] if arch.endswith("-smoke")
                                   else arch)
@@ -359,7 +385,8 @@ def serve_multi_tiered_poisson(archs, *, rate: float = 4.0,
                           max_len=prompt_len + max_new,
                           prefill_chunk=min(prefill_chunk,
                                             max(1, prompt_len)),
-                          exit_threshold=threshold, long_mode=long_mode))
+                          exit_threshold=threshold, long_mode=long_mode,
+                          spec_draft=spec_draft, spec_k=spec_k))
     rs = np.random.RandomState(seed)
     arrivals, lengths = _poisson_trace(rs, rate, n_requests, prompt_len)
     for i, (arr, l) in enumerate(zip(arrivals, lengths)):
@@ -387,6 +414,14 @@ def serve_multi_tiered_poisson(archs, *, rate: float = 4.0,
                   f"routed={ts['routed']:3d} util={ts['utilization']:.2f} "
                   f"p95={ts['p95_latency_s']*1e3:.0f}ms"
                   + (" DEAD" if ts.get("dead") else ""))
+        sp = stats.get("speculative")
+        if sp is not None:
+            print(f"  speculative: draft={sp['draft']} k={sp['k']} "
+                  f"rounds={sp['rounds']} "
+                  f"acceptance={sp['acceptance_len']:.2f} "
+                  f"requests={sp['requests_completed']} "
+                  f"p50={sp['p50_latency_s']*1e3:.0f}ms "
+                  f"speedup={sp['mean_speedup_x']:.2f}x")
         _print_migration(stats)
     return stats
 
@@ -471,18 +506,28 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="paged KV arena + radix prefix cache "
                          "(poisson single-pool mode)")
+    ap.add_argument("--spec-draft", default="",
+                    help="[tiered multi-model] group entry to use as the "
+                         "device-tier speculative draft model")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="[tiered multi-model] draft tokens per "
+                         "speculative round")
     args = ap.parse_args()
     assert args.arch or args.models, "need --arch or --models"
     if args.models:
         assert args.mode == "poisson", "--models needs --mode poisson"
         archs = [a.strip() for a in args.models.split(",") if a.strip()]
+        if args.spec_draft:
+            assert args.tiered and args.spec_draft in archs, \
+                "--spec-draft needs --tiered and must name a --models entry"
         if args.tiered:
             serve_multi_tiered_poisson(
                 archs, rate=args.rate, n_requests=args.requests,
                 base_slots=args.slots, prompt_len=args.prompt_len,
                 max_new=args.max_new, threshold=args.threshold,
                 prefill_chunk=args.prefill_chunk, scenario=args.scenario,
-                deadline=args.deadline, long_mode=args.long, seed=args.seed)
+                deadline=args.deadline, long_mode=args.long, seed=args.seed,
+                spec_draft=args.spec_draft, spec_k=args.spec_k)
         else:
             serve_multi_poisson(
                 archs, rate=args.rate, n_requests=args.requests,

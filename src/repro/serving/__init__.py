@@ -18,6 +18,9 @@ Architecture (survey §2.3 made runtime):
   multiplexing heterogeneous models (§6.3 multi-tenant edge serving) — one
   arena (cache + jitted stages + counters) per named model behind one
   queue, one ``poll()``, and a cross-model prefill-fairness budget.
+  Also hosts ``SpecPair``: a two-model speculative-decoding pool (draft
+  proposes k greedy tokens, target batch-verifies in one fixed-shape
+  dispatch) whose outputs are bit-identical to target-only greedy.
 * ``router``     — ``AdmissionRouter``: per-(model, request) tier selection
   from the paradigm planners (Neurosurgeon / Edgent / DDNN / device-local /
   prefill-decode splits) over cached per-model cost graphs; ``exclude``
@@ -46,7 +49,7 @@ from repro.serving.cluster import (ClusterConfig, ClusterRequest,
 from repro.serving.engine import (ServeConfig, ServingEngine, make_serve_step,
                                   prime_whisper_cross_cache)
 from repro.serving.multipool import (ModelEntry, ModelGroup,
-                                     MultiModelScheduler)
+                                     MultiModelScheduler, SpecPair)
 from repro.serving.router import AdmissionRouter
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
                                      SchedulerConfig, SlotSnapshot,
@@ -57,4 +60,4 @@ __all__ = ["ServeConfig", "ServingEngine", "make_serve_step",
            "Request", "SchedulerConfig", "SlotSnapshot", "StepReport",
            "AdmissionRouter", "ClusterConfig", "ClusterRequest",
            "TieredServingCluster", "derive_tier_slots", "ModelEntry",
-           "ModelGroup", "MultiModelScheduler"]
+           "ModelGroup", "MultiModelScheduler", "SpecPair"]

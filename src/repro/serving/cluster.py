@@ -72,7 +72,8 @@ from repro.core.cost_model import (DeviceProfile, LinkProfile,
 from repro.core.offload import compression_decision, measured_tx_time
 from repro.core.paradigms import AdmissionDecision, Scenario, _tier_profile
 from repro.core.resilience import resilience_report
-from repro.serving.multipool import ModelGroup, MultiModelScheduler
+from repro.serving.multipool import (ModelGroup, MultiModelScheduler,
+                                     SpecPair)
 from repro.serving.router import AdmissionRouter
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
                                      SchedulerConfig, SlotSnapshot,
@@ -107,6 +108,20 @@ class ClusterConfig:
     # tree and ships only the pages it doesn't already hold.
     paged: bool = False
     page_size: int = 16
+    # cross-tier speculative decoding (multi-model clusters only):
+    # ``spec_draft`` names the group entry that drafts on the DEVICE tier
+    # while the target model verifies batched on the CLOUD tier; empty
+    # disables the path.  ``stream_tokens`` opts the router into
+    # interactive per-token downlink pricing — the regime where the
+    # speculative candidate can win the admission race (it is implied on
+    # whenever spec_draft is set).  ``spec_k`` is the draft window per
+    # verify round; ``spec_draft_frac`` prices the draft's compute in the
+    # router's cost graph (execution charges the draft entry's REAL
+    # planned flops, this knob only shapes admission).
+    spec_draft: str = ""
+    spec_k: int = 4
+    stream_tokens: bool = False
+    spec_draft_frac: float = 0.1
 
 
 @dataclasses.dataclass
@@ -277,7 +292,27 @@ class TieredServingCluster:
             router_cfg = plan_cfgs[""]
         self.plan_cfgs = plan_cfgs
         self.plan_cfg = plan_cfgs[self._model_names[0]]
-        self.router = router or AdmissionRouter(router_cfg, self.scenario)
+        self.spec_enabled = bool(cfg.spec_draft)
+        if self.spec_enabled:
+            if self.group is None:
+                raise ValueError(
+                    "ClusterConfig.spec_draft requires a ModelGroup "
+                    "cluster (the draft must be a named group entry)")
+            if cfg.spec_draft not in self.group.names:
+                raise ValueError(
+                    f"spec_draft {cfg.spec_draft!r} is not a group entry "
+                    f"(group has {self.group.names})")
+            if cfg.temperature > 0.0:
+                raise ValueError(
+                    "spec_draft + temperature>0 is rejected at config "
+                    "time: lossless speculation verifies the target's "
+                    "ARGMAX (see SpecPair). Use temperature=0.")
+        self.router = router or AdmissionRouter(
+            router_cfg, self.scenario,
+            stream_tokens=cfg.stream_tokens or self.spec_enabled,
+            spec_k=cfg.spec_k if self.spec_enabled else 0,
+            spec_draft=cfg.spec_draft,
+            spec_draft_frac=cfg.spec_draft_frac)
         # per-token compute of each PLANNED model at the pool's context size
         self._tok_flops: Dict[str, float] = {}
         kv_slot: Dict[str, float] = {}
@@ -331,6 +366,17 @@ class TieredServingCluster:
             "split_handoffs": 0, "outage_migrations": 0, "requeued": 0,
             "compressed": 0, "bytes_moved": 0.0, "bytes_raw": 0.0,
             "transfer_s": 0.0}
+        # speculative bridge: one SpecPair per TARGET model (built lazily
+        # on the first speculative admission — a trace that never routes
+        # speculative pays no arena memory), plus its waiting/live ledgers
+        # and the cluster-wide measured round counters that feed
+        # ``router.spec_accept`` and ``stats()["speculative"]``
+        self._spec_pairs: Dict[str, SpecPair] = {}
+        self._spec_waiting: List[ClusterRequest] = []
+        self._spec_live: Dict[int, ClusterRequest] = {}
+        self._spec_pf: Dict[str, Dict[str, List[int]]] = {}
+        self.spec_counters: Dict[str, float] = {
+            "rounds": 0, "slot_rounds": 0, "committed": 0, "drafted": 0}
 
     def _resolve_model(self, model: Optional[str]) -> str:
         if self.group is not None:
@@ -404,6 +450,14 @@ class TieredServingCluster:
         (``_migrate_split_ready``).  Shared by ``submit`` and the outage
         re-route path."""
         d, m = cr.decision, cr.booked_model
+        if d.paradigm == "speculative":
+            if self.spec_enabled and m != self.cfg.spec_draft:
+                self._place_spec(cr, arrival)
+                return
+            # the draft model cannot speculate against itself (and a
+            # custom router may propose spec on a non-spec cluster):
+            # serve it as a plain cloud decode instead
+            cr.decision = d = dataclasses.replace(d, paradigm="cloud-stream")
         tr = self.tiers[d.tier]
         prompt_bytes = float(cr.req.tokens.size * 4)
         home = self.tiers[d.prefill_tier] if d.is_split else tr
@@ -434,6 +488,181 @@ class TieredServingCluster:
         cr.booked_slot, cr.booked_until, cr.booked_released0 = \
             tr.book(m, dec_ready, service)
         home.waiting.append(cr)
+
+    # ------------------------------------------------------------------
+    # cross-tier speculative decoding (device draft, cloud batched verify)
+    # ------------------------------------------------------------------
+    def _place_spec(self, cr: ClusterRequest, arrival: float):
+        """Stage a speculative request: the prompt crosses the WAN once so
+        the CLOUD-tier target can prefill (the device-side draft prefills
+        the same prompt locally — the bridge poll charges it), and the
+        cloud verify slot is booked like a plain cloud decode, released at
+        completion when speculation finished early."""
+        m = cr.booked_model
+        cloud = self.tiers["cloud"]
+        prompt_bytes = float(cr.req.tokens.size * 4)
+        cr.ready_at = arrival + self.scenario.dev_cloud.tx_time(prompt_bytes)
+        if cr.booked_slot >= 0 and cr.booked_tier:
+            self._reconcile_booking(self.tiers[cr.booked_tier], cr)
+        self._release_pf_booking(cr)
+        service = (cr.req.tokens.size + cr.req.max_new) * cloud.tok_cost[m]
+        cr.booked_tier = "cloud"
+        cr.booked_slot, cr.booked_until, cr.booked_released0 = \
+            cloud.book(m, cr.ready_at, service)
+        self._spec_waiting.append(cr)
+
+    def _spec_pair(self, m: str) -> SpecPair:
+        """The (lazily built) ``SpecPair`` serving speculative requests
+        whose target is group entry ``m``: the draft arena stands in for
+        the DEVICE tier, the target arena for the CLOUD tier, with the
+        slot count floored across both ends (pairing is 1:1).
+        ``exit_threshold`` is forced to 0 regardless of the tier pools'
+        setting — the verify stage always runs the target at full depth
+        (SpecPair's losslessness contract)."""
+        if m not in self._spec_pairs:
+            cfg, sc = self.cfg, self.scenario
+            draft = cfg.spec_draft
+            kv = {n: kv_cache_bytes_per_token(self.plan_cfgs[n])
+                  * cfg.max_len for n in (draft, m)}
+            n = max(1, min(
+                derive_tier_slots(sc.device, sc.cloud, cfg.base_slots,
+                                  kv[draft]),
+                derive_tier_slots(sc.cloud, sc.cloud, cfg.base_slots,
+                                  kv[m])))
+            self._spec_pairs[m] = SpecPair(
+                ModelGroup([self.group[draft], self.group[m]]),
+                SchedulerConfig(
+                    n_slots=n, max_len=cfg.max_len,
+                    prefill_chunk=cfg.prefill_chunk,
+                    exit_threshold=0.0, temperature=0.0,
+                    long_mode=cfg.long_mode, flush_every=cfg.flush_every,
+                    max_prefill_chunks_per_step=(
+                        cfg.max_prefill_chunks_per_step),
+                    paged=cfg.paged, page_size=cfg.page_size),
+                k=cfg.spec_k,
+                slots_per_model={draft: n, m: n})
+            self._spec_pf[m] = {draft: [], m: []}
+        return self._spec_pairs[m]
+
+    def _poll_spec(self) -> bool:
+        """One bridge round over the speculative pairs.  Virtual time runs
+        the two tiers in LOCKSTEP — draft compute on the device clock, a
+        k-token-id uplink, batched verify on the cloud clock, the accept-
+        length downlink — and both clocks land on the common round end
+        (the protocol is a synchronous round trip; neither side can run
+        ahead).  The link is charged once per ROUND, not per token: that
+        is the entire point of the candidate, and the charge uses the
+        measured drafted/committed counts, not the admission estimate."""
+        if not self.spec_enabled:
+            return False
+        dev, cloud = self.tiers["device"], self.tiers["cloud"]
+        if dev.dead or cloud.dead:
+            return False               # _drain_spec already requeued these
+        # admit waiting requests whose uplink landed; an otherwise-idle
+        # cloud fast-forwards to the next arrival (mirrors _release_ready)
+        if (self._spec_waiting and not cloud.sched.has_work
+                and not cloud.waiting
+                and not any(p.has_work
+                            for p in self._spec_pairs.values())):
+            nxt = min(c.ready_at for c in self._spec_waiting)
+            cloud.vclock = max(cloud.vclock, nxt)
+        still = []
+        for cr in self._spec_waiting:
+            if cr.ready_at <= cloud.vclock:
+                self._spec_pair(cr.booked_model).submit(cr.req)
+                self._spec_live[id(cr.req)] = cr
+            else:
+                still.append(cr)
+        self._spec_waiting = still
+        draft, link = self.cfg.spec_draft, self.scenario.dev_cloud
+        worked = False
+        for m, pair in self._spec_pairs.items():
+            if not pair.has_work:
+                continue
+            rep = pair.poll()
+            worked = worked or rep.worked
+            rows = self._spec_pf[m]
+            chunk = self.cfg.prefill_chunk
+            # prompt replay: the target prefills on the cloud clock, the
+            # draft shadow on the device clock, each at its model's rate
+            for name, tr_, rate in ((draft, dev, dev.tok_cost[draft]),
+                                    (m, cloud, cloud.tok_cost[m])):
+                sub = rep.per_model.get(name)
+                if sub is None:
+                    continue
+                if sub.admitted:
+                    rows[name] = [r.tokens.size for r in sub.admitted]
+                if sub.prefill_chunks:
+                    lo = sub.prefill_chunk_start * chunk
+                    hi = lo + sub.prefill_chunks * chunk
+                    cost = sum(min(max(p - lo, 0), hi - lo)
+                               for p in rows.get(name, ())) * rate
+                    tr_.vclock += cost
+                    tr_.busy += cost
+                if sub.prefill_done:
+                    rows[name] = []
+            if rep.spec_rounds:
+                # the draft proposes autoregressively (k sequential steps
+                # on the device clock); the verify is ONE fixed-shape
+                # batched dispatch — memory-bound decode absorbs the extra
+                # k-1 positions, so it costs one step on the cloud clock
+                # (same economics the admission candidate prices)
+                draft_c = rep.spec_drafted * dev.tok_cost[draft]
+                verify_c = rep.spec_rounds * cloud.tok_cost[m]
+                t_end = (max(dev.vclock, cloud.vclock) + draft_c
+                         + link.tx_time(4.0 * pair.k) + verify_c
+                         + link.tx_time(8.0))
+                dev.vclock = cloud.vclock = t_end
+                dev.busy += draft_c
+                cloud.busy += verify_c
+                cloud.decode_steps += 1
+                cloud.slot_tokens += rep.n_active
+                self.spec_counters["rounds"] += rep.spec_rounds
+                self.spec_counters["slot_rounds"] += rep.n_active
+                self.spec_counters["committed"] += rep.spec_committed
+                self.spec_counters["drafted"] += rep.spec_drafted
+            for r in rep.completed:
+                cr = self._cr_of.get(id(r))
+                if cr is None:
+                    continue
+                # the final accepted/corrected tokens rode this round's
+                # accept-length downlink — no extra result transfer
+                cr.t_done_v = cloud.vclock
+                cr.final_tier = "cloud"
+                self._reconcile_booking(
+                    self.tiers[cr.booked_tier or "cloud"], cr)
+                self._spec_live.pop(id(r), None)
+        # feed MEASURED acceptance back into admission pricing once there
+        # is signal: later routes price the live draft/target agreement.
+        # Denominator is SLOT-rounds (one per request per verify round) —
+        # the per-request tokens-per-round-trip quantity the candidate's
+        # ``accept`` estimate stands in for, invariant to how many
+        # requests happen to share a verify dispatch.
+        if (self.spec_counters["slot_rounds"] >= 4
+                and hasattr(self.router, "spec_accept")):
+            self.router.spec_accept = (self.spec_counters["committed"]
+                                       / self.spec_counters["slot_rounds"])
+        return worked
+
+    def _drain_spec(self) -> List[ClusterRequest]:
+        """Device or cloud died: the lockstep bridge cannot continue.
+        Every speculative request restarts from its prompt among the
+        survivors (the verify tier held the authoritative KV; a dead
+        device loses the draft — either way the pair state is gone), and
+        the pairs are dropped wholesale.  The router cannot produce a new
+        speculative decision while device or cloud is excluded, so the
+        restarts land on ordinary candidates."""
+        redo = self._spec_waiting + [cr for cr in self._spec_live.values()
+                                     if not cr.done]
+        self._spec_waiting = []
+        self._spec_live.clear()
+        self._spec_pairs.clear()
+        self._spec_pf.clear()
+        for cr in redo:
+            r = cr.req
+            r.out_tokens, r.slot, r.done = [], -1, False
+            r.spec_rounds = 0
+        return redo
 
     # ------------------------------------------------------------------
     # pool stepping + virtual-time accounting
@@ -694,6 +923,8 @@ class TieredServingCluster:
         now = self.virtual_now()
         redo = list(tr.waiting)
         tr.waiting = []
+        if self.spec_enabled and tr.name in ("device", "cloud"):
+            redo += self._drain_spec()
         for r in tr.sched.drain_queue() + tr.sched.cancel_pending():
             redo.append(self._cr_of[id(r)])
         inbound, tr.inbound = tr.inbound, []
@@ -772,12 +1003,15 @@ class TieredServingCluster:
         worked = False
         for tr in self.tiers.values():
             worked = self._poll_tier(tr) or worked
+        worked = self._poll_spec() or worked
         return worked
 
     @property
     def has_work(self) -> bool:
         return any(tr.waiting or tr.inbound or tr.sched.has_work
-                   for tr in self.tiers.values() if not tr.dead)
+                   for tr in self.tiers.values() if not tr.dead) \
+            or bool(self._spec_waiting) \
+            or any(p.has_work for p in self._spec_pairs.values())
 
     def run(self):
         """Drain every pool (all submitted requests complete)."""
@@ -786,6 +1020,8 @@ class TieredServingCluster:
                 break
         for tr in self.tiers.values():
             tr.sched.flush_counters()
+        for pair in self._spec_pairs.values():
+            pair.flush_counters()
 
     def clear_completed(self):
         """Drop completed requests from the cluster's retention (the pools'
@@ -802,12 +1038,20 @@ class TieredServingCluster:
             tr.sched.completed.clear()
             for pool in getattr(tr.sched, "pools", {}).values():
                 pool.completed.clear()
+        for pair in self._spec_pairs.values():
+            pair.completed.clear()
+            for pool in pair.pools.values():
+                pool.completed.clear()
 
     # ------------------------------------------------------------------
     # reporting
     # ------------------------------------------------------------------
     def jit_cache_sizes(self) -> Dict[str, Dict[str, int]]:
-        return {n: tr.sched.jit_cache_sizes() for n, tr in self.tiers.items()}
+        out = {n: tr.sched.jit_cache_sizes()
+               for n, tr in self.tiers.items()}
+        for m, pair in self._spec_pairs.items():
+            out[f"spec:{m}"] = pair.jit_cache_sizes()
+        return out
 
     def stats(self) -> Dict[str, object]:
         done = [cr for cr in self.requests if cr.done]
@@ -841,6 +1085,34 @@ class TieredServingCluster:
             "tiers": per_tier,
             "jit_cache_sizes": self.jit_cache_sizes(),
         }
+        if self.spec_enabled:
+            cnt = self.spec_counters
+            spec_done = [cr for cr in done
+                         if cr.decision.paradigm == "speculative"]
+            # per-request speedup attribution: tokens per verify round vs
+            # the one-token-per-round-trip streaming baseline
+            attr = [{"req_id": cr.req.req_id,
+                     "tokens": len(cr.req.out_tokens),
+                     "rounds": cr.req.spec_rounds,
+                     "speedup_x": (len(cr.req.out_tokens)
+                                   / max(1, cr.req.spec_rounds))}
+                    for cr in spec_done]
+            out["speculative"] = {
+                "k": self.cfg.spec_k,
+                "draft": self.cfg.spec_draft,
+                "rounds": cnt["rounds"],
+                "slot_rounds": cnt["slot_rounds"],
+                "committed": cnt["committed"],
+                "drafted": cnt["drafted"],
+                "acceptance_len": (cnt["committed"]
+                                   / max(1, cnt["slot_rounds"])),
+                "requests_completed": len(spec_done),
+                "p50_latency_s": _pctl([cr.latency for cr in spec_done],
+                                       50),
+                "per_request_speedup": attr,
+                "mean_speedup_x": (sum(a["speedup_x"] for a in attr)
+                                   / len(attr) if attr else float("nan")),
+            }
         if self.dead or getattr(self.scenario, "outages", ()):
             # survey §5 resilience accounting: expected accuracy with the
             # drain (skip-hyperconnection analogue: requests survive the

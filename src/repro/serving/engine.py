@@ -47,6 +47,11 @@ class ServeConfig:
     temperature: float = 0.0          # 0 = greedy
     exit_threshold: float = 0.5
     long_mode: bool = False
+    # cross-tier speculative decoding (ModelGroup engines with a scenario):
+    # spec_draft names the group entry drafting on the device tier while
+    # the routed model verifies batched on the cloud tier; empty disables.
+    spec_draft: str = ""
+    spec_k: int = 4
 
 
 def make_serve_step(model, *, long_mode: bool = False):
@@ -245,7 +250,9 @@ class ServingEngine:
                                   exit_threshold=self.scfg.exit_threshold,
                                   temperature=self.scfg.temperature,
                                   long_mode=self.scfg.long_mode,
-                                  kv_handoff="raw"))
+                                  kv_handoff="raw",
+                                  spec_draft=self.scfg.spec_draft,
+                                  spec_k=self.scfg.spec_k))
         return self._cluster
 
     def _finish_cluster_batch(self, cl, routes_before):
@@ -336,13 +343,24 @@ class ServingEngine:
                     [np.asarray(r.out_tokens, np.int32) for r in rs]))
                 for m, rs in reqs.items()}
 
+    @staticmethod
+    def _cluster_pools(cl) -> Dict[Any, Any]:
+        """Every per-model pool the cluster can serve from: the tier pools
+        plus any speculative SpecPair arenas (keyed distinctly — a spec
+        pair's target pool counts tokens the tier pools never saw)."""
+        pools = {(n, m): pool for n, tr in cl.tiers.items()
+                 for m, pool in tr.sched.pools.items()}
+        for sm, pair in cl._spec_pairs.items():
+            for pm, pool in pair.pools.items():
+                pools[("spec:" + sm, pm)] = pool
+        return pools
+
     def _generate_multi_tiered(self, batches, max_new, rng, deadline):
         """Multi-model batches through one tiered cluster: per-(model, row)
         routing over per-model cost graphs."""
         need = max(p.shape[1] for p in batches.values()) + max_new
         cl = self._ensure_cluster(need)
-        pools = {(n, m): pool for n, tr in cl.tiers.items()
-                 for m, pool in tr.sched.pools.items()}
+        pools = self._cluster_pools(cl)
         before = self._snapshot_pools(pools)
         routes_before = dict(cl.router.route_counts)
         for tr in cl.tiers.values():
@@ -353,6 +371,11 @@ class ServingEngine:
                    for i in range(p.shape[0])]
                for m, p in batches.items()}
         cl.run()
+        # spec pairs built lazily during the run start from zero counters
+        pools = self._cluster_pools(cl)
+        for k, p in pools.items():
+            if k not in before:
+                before[k] = (np.zeros_like(p.flush_counters()), 0, 0.0)
         self._absorb_pool_deltas(pools, before, model_of=lambda k: k[1])
         self._finish_cluster_batch(cl, routes_before)
         return {m: jnp.asarray(np.stack(

@@ -44,6 +44,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
                                      SchedulerConfig, StepReport)
 
@@ -288,3 +290,220 @@ class MultiModelScheduler:
             for stage, v in pool.jit_cache_sizes().items():
                 out[f"{name}/{stage}"] = v
         return out
+
+
+class SpecPair(MultiModelScheduler):
+    """Speculative-decoding mode of the multi-model pool: a two-entry
+    ``ModelGroup`` whose FIRST entry is the draft model and SECOND the
+    target.  Every request is served by the target arena; the draft arena
+    mirrors it with a shadow request, autoregressively proposes a k-token
+    window each round (one gated jitted scan), and the target verifies all
+    k positions in one batched dispatch, committing the longest accepted
+    prefix + one corrected (or bonus) token.
+
+    Losslessness: commits are the target's own full-depth argmax, so the
+    output streams are **bit-identical to target-only greedy decode** —
+    speculation changes the schedule, never the tokens.  That contract
+    forces two config-time rejections: ``temperature > 0`` (sampled
+    streams are not stable under re-batched rng folds — the verify would
+    silently degrade to greedy) and ``exit_threshold > 0`` (verify always
+    runs full depth, so early-exit outputs would diverge).
+
+    The draft arena is restricted to models whose cache leaves are all
+    position-indexed (``all_cache_paged()``): after a rejection the draft's
+    stale rows past the accept point are simply overwritten before any
+    read reaches them, whereas a sequential SSM/xLSTM state could not be
+    rewound.  The target has no such restriction — its verify scan gates
+    every write by the on-device accept mask, so rejected positions are
+    never written in the first place (no rollback pass, valid for every
+    arena kind, paged or contiguous).
+    """
+
+    def __init__(self, group: ModelGroup,
+                 cfg: SchedulerConfig = SchedulerConfig(),
+                 *, k: int = 4,
+                 slots_per_model: Optional[Dict[str, int]] = None,
+                 controllers: Optional[Dict[str, Any]] = None):
+        if len(group) != 2:
+            raise ValueError(f"SpecPair needs exactly 2 models "
+                             f"(draft, target), got {group.names}")
+        if cfg.temperature > 0.0:
+            raise ValueError(
+                "SpecPair + temperature>0 is rejected at config time: "
+                "lossless speculation verifies the target's ARGMAX, so a "
+                "sampled stream would silently degrade to greedy instead "
+                "of matching the target's rng stream. Use temperature=0, "
+                "or serve sampled traffic through a plain pool.")
+        if cfg.exit_threshold > 0.0:
+            raise ValueError(
+                "SpecPair + exit_threshold>0 is rejected at config time: "
+                "the verify stage always runs the target at full depth, "
+                "so early-exited target-only output would diverge from "
+                "the speculative stream. Use exit_threshold=0.")
+        if k < 2:
+            raise ValueError(f"SpecPair window k must be >= 2, got {k}")
+        # SpecPair arenas always run the monolithic decode_step: verify is a
+        # scan of exactly that step, so the full bit-parity chain (verify
+        # scan == step() == target-only reference) holds only on the
+        # monolithic path.  Segmentation exists for early exits, which the
+        # exit_threshold==0 contract above already forbids — the segmented
+        # pipeline's jit-boundary bf16 rounding drifts from the fused scan
+        # at the KV-cache bit level, which is why this is forced rather
+        # than left to the caller.
+        cfg = dataclasses.replace(cfg, segmented=False)
+        super().__init__(group, cfg, slots_per_model=slots_per_model,
+                         controllers=controllers)
+        self.draft_name, self.target_name = group.names
+        draft_model = group[self.draft_name].model
+        if not draft_model.all_cache_paged():
+            raise ValueError(
+                f"SpecPair draft model {self.draft_name!r} has sequential "
+                "state cache leaves (SSM/conv/xLSTM); a rejected window "
+                "cannot rewind them. Use a position-indexed-cache (pure "
+                "attention / MLA) draft; the TARGET may be any arch.")
+        self.k = k
+        for pool in self.pools.values():
+            pool.ensure_spec(k)
+        # req_id -> (target request, draft shadow request)
+        self._pairs: Dict[int, Tuple[Request, Request]] = {}
+        # slot-rounds: one per (request, verify round) — the denominator of
+        # the acceptance length.  The pool-level round counter alone would
+        # inflate acceptance when several slots share a verify dispatch.
+        self.slot_rounds = 0
+
+    # ------------------------------------------------------------------
+    # submission: every request runs on the target; the draft mirrors it
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        assert req.frames is None, "SpecPair: encdec requests unsupported"
+        req.model = self.target_name
+        if req.req_id < 0:
+            req.req_id = self.n_submitted
+        self.n_submitted += 1
+        shadow = Request(tokens=np.asarray(req.tokens).reshape(-1),
+                         max_new=req.max_new, eos_id=req.eos_id,
+                         req_id=req.req_id, model=self.draft_name)
+        self._pairs[req.req_id] = (req, shadow)
+        self.pools[self.target_name].submit(req)
+        self.pools[self.draft_name].submit(shadow)
+
+    # ------------------------------------------------------------------
+    # the speculation round
+    # ------------------------------------------------------------------
+    def _reap(self):
+        """Release draft slots whose target request has finished.  A shadow
+        still inside a staged prefill cannot be released mid-flight (the
+        pending admission would re-activate the freed slot); it is reaped
+        on a later poll, once live."""
+        drf = self.pools[self.draft_name]
+        for rid in list(self._pairs):
+            req, shadow = self._pairs[rid]
+            if not req.done:
+                continue
+            if shadow.slot >= 0 and drf.slot_req[shadow.slot] is shadow:
+                if not drf.active[shadow.slot]:
+                    continue           # staged mid-prefill: reap later
+                drf.release_slot(shadow.slot)
+            elif shadow in drf.queue:
+                drf.queue.remove(shadow)
+            del self._pairs[rid]
+
+    def _live_pairs(self) -> List[Tuple[int, int]]:
+        """(target_slot, draft_slot) for every request live in BOTH arenas
+        — a target slot whose draft mirror is still prefilling waits."""
+        tgt = self.pools[self.target_name]
+        drf = self.pools[self.draft_name]
+        out = []
+        for req, shadow in self._pairs.values():
+            if (req.slot >= 0 and tgt.active[req.slot]
+                    and shadow.slot >= 0 and drf.active[shadow.slot]):
+                out.append((req.slot, shadow.slot))
+        return out
+
+    def poll(self) -> StepReport:
+        """One pool round: both arenas admit/prefill under the shared
+        budget, then one speculation round runs — draft proposes its
+        window in one jitted scan, target verifies it in one batched
+        dispatch and commits.  ``per_model`` carries the draft/target
+        sub-reports with the propose/verify accounting split the way
+        external drivers (the tiered cluster) charge it."""
+        tgt = self.pools[self.target_name]
+        drf = self.pools[self.draft_name]
+        rep = StepReport()
+        budget = self.cfg.max_prefill_chunks_per_step
+        sub_t = tgt.prefill_poll(None if budget <= 0 else budget)
+        sub_d = drf.prefill_poll(
+            None if budget <= 0 else max(0, budget - sub_t.prefill_chunks))
+        self._reap()                   # eos on an admission first token
+        pairs = self._live_pairs()
+        if pairs:
+            self.slot_rounds += len(pairs)
+            for req, shadow in self._pairs.values():
+                if (req.slot >= 0 and tgt.active[req.slot]
+                        and shadow.slot >= 0 and drf.active[shadow.slot]):
+                    req.spec_rounds += 1
+            for tslot, dslot in pairs:
+                drf.spec_resync_from(dslot, tgt, tslot)
+            win = tgt.spec_window_lens()
+            win_t = np.zeros(tgt.cfg.n_slots, np.int32)
+            win_d = np.zeros(drf.cfg.n_slots, np.int32)
+            for tslot, dslot in pairs:
+                win_t[tslot] = win[tslot]
+                win_d[dslot] = win[tslot]
+            drafts = drf.spec_propose(win_d)
+            drafts_t = np.zeros((tgt.cfg.n_slots, self.k - 1), np.int32)
+            for tslot, dslot in pairs:
+                drafts_t[tslot] = drafts[dslot, :self.k - 1]
+            done_before = len(tgt.completed)
+            committed = tgt.spec_verify(drafts_t, win_t)
+            sub_t.completed += tgt.completed[done_before:]
+            self._reap()
+            for tslot, dslot in pairs:     # position-agreement invariant
+                if drf.active[dslot] and tgt.active[tslot]:
+                    drf.spec_resync_from(dslot, tgt, tslot)
+            rep.decode_stepped = True
+            rep.n_active = len(pairs)
+            rep.spec_rounds = 1
+            rep.spec_committed = int(committed.sum())
+            rep.spec_drafted = int(win_d.sum())
+            sub_d.spec_rounds = sub_t.spec_rounds = 1
+            sub_d.spec_drafted = rep.spec_drafted
+            sub_t.spec_committed = rep.spec_committed
+            sub_t.decode_stepped = sub_d.decode_stepped = True
+            sub_t.n_active = sub_d.n_active = len(pairs)
+            sub_t.decode_depth_frac = sub_d.decode_depth_frac = 1.0
+        for name, sub in ((self.draft_name, sub_d), (self.target_name,
+                                                     sub_t)):
+            rep.per_model[name] = sub
+            rep.admitted += sub.admitted
+            rep.prefill_chunks += sub.prefill_chunks
+            rep.prefill_tokens += sub.prefill_tokens
+            rep.prefill_done = rep.prefill_done or sub.prefill_done
+            rep.completed += sub.completed
+        self.completed += rep.completed
+        return rep
+
+    def run(self, rng=None):
+        """Drain to completion (greedy only — temperature is 0 by
+        construction, so ``rng`` only resets the per-run fold counters)."""
+        self.set_rng(rng)
+        while self.has_work:
+            if not self.poll().worked:
+                break
+        self.flush_counters()
+
+    # ------------------------------------------------------------------
+    # statistics
+    # ------------------------------------------------------------------
+    def spec_stats(self) -> Dict[str, float]:
+        """Measured speculation outcome: verify rounds (pool dispatches),
+        slot-rounds (request-round participations), committed tokens, and
+        the acceptance length — committed tokens per slot-round, the
+        factor by which one request's per-token round trips shrink on a
+        cross-tier link."""
+        tgt = self.pools[self.target_name]
+        return {"k": float(self.k), "rounds": float(tgt.spec_rounds),
+                "slot_rounds": float(self.slot_rounds),
+                "committed": float(tgt.spec_committed),
+                "acceptance_len": (tgt.spec_committed
+                                   / max(1, self.slot_rounds))}

@@ -52,7 +52,9 @@ class AdmissionRouter:
     def __init__(self, plan_cfg: Union[object, Dict[str, object]],
                  scenario: Optional[Scenario] = None, *,
                  bucket: int = 16, allow_split: bool = True,
-                 decision_log: int = 256):
+                 decision_log: int = 256,
+                 stream_tokens: bool = False, spec_k: int = 0,
+                 spec_draft: str = "", spec_draft_frac: float = 0.1):
         if isinstance(plan_cfg, dict):
             assert plan_cfg, "empty plan_cfg dict"
             self.plan_cfgs: Dict[str, object] = dict(plan_cfg)
@@ -64,6 +66,18 @@ class AdmissionRouter:
         self.scenario = scenario or Scenario.default()
         self.bucket = max(1, bucket)
         self.allow_split = allow_split
+        # speculative cross-tier candidate: opt-in interactive-token
+        # pricing + device-draft/cloud-verify.  spec_accept is refreshed by
+        # the cluster from MEASURED acceptance lengths, so routing tracks
+        # how agreeable the live draft/target pair actually is.  When
+        # spec_draft names a planned model, the draft's per-token compute
+        # is priced from ITS OWN cost graph instead of the flat
+        # spec_draft_frac fallback.
+        self.stream_tokens = stream_tokens
+        self.spec_k = spec_k
+        self.spec_draft = spec_draft
+        self.spec_draft_frac = spec_draft_frac
+        self.spec_accept = 0.0
         self._kv_tok = {n: kv_cache_bytes_per_token(c)
                         for n, c in self.plan_cfgs.items()}
         self._graphs: Dict[Tuple[str, int], CostGraph] = {}
@@ -96,13 +110,23 @@ class AdmissionRouter:
         """``exclude`` names tiers no candidate may touch (prefill or decode
         side) — the cluster passes its dead-tier set after an outage."""
         model = self._resolve(model)
+        graph = self._graph(model, prompt_len + max_new)
+        frac = self.spec_draft_frac
+        if (self.spec_k >= 2 and self.spec_draft
+                and self.spec_draft != model
+                and self.spec_draft in self.plan_cfgs):
+            gd = self._graph(self.spec_draft, prompt_len + max_new)
+            frac = min(1.0, gd.total_flops / graph.total_flops)
         d = admission_decision(
-            self._graph(model, prompt_len + max_new), self.scenario,
+            graph, self.scenario,
             deadline=deadline, queue_cost=queue_cost,
             prefill_tokens=prompt_len, decode_tokens=max_new,
             kv_bytes_per_token=self._kv_tok[model],
             allow_split=self.allow_split,
-            exclude=frozenset(exclude) if exclude else None)
+            exclude=frozenset(exclude) if exclude else None,
+            stream_tokens=self.stream_tokens, spec_k=self.spec_k,
+            spec_accept=self.spec_accept,
+            spec_draft_frac=frac)
         self.route_counts[d.tier] += 1
         self.route_counts_by_model[model][d.tier] += 1
         self.split_count += int(d.is_split)

@@ -111,6 +111,10 @@ class Request:
     t_done: float = 0.0
     slot: int = -1
     done: bool = False
+    # verify rounds this request participated in (SpecPair only): external
+    # drivers divide len(out_tokens) by it for per-request speedup
+    # attribution vs the one-token-per-round streaming baseline
+    spec_rounds: int = 0
 
 
 @dataclasses.dataclass
@@ -161,6 +165,13 @@ class StepReport:
     # charge their virtual clocks with the *truncated* step cost.
     decode_segments_run: int = 0
     decode_depth_frac: float = 0.0
+    # speculative decoding (repro.serving.multipool.SpecPair): verify rounds
+    # run this poll, tokens the target committed across them, and draft
+    # propose dispatches — external drivers charge draft/verify compute and
+    # per-round link costs from these instead of per-token decode steps.
+    spec_rounds: int = 0
+    spec_committed: int = 0
+    spec_drafted: int = 0
     completed: List[Request] = dataclasses.field(default_factory=list)
     # multi-model pools (repro.serving.multipool): the per-model sub-reports
     # behind this aggregate, keyed by model name.  Empty for a single-model
@@ -414,6 +425,19 @@ class ContinuousBatchScheduler:
          self._row_treedef) = self._detect_row_layout()
         self.n_imported = 0
         self.n_exported = 0
+        # --- speculative decoding (built lazily by _ensure_spec: the window
+        # width k is a shape, so the propose/verify jits exist only once a
+        # SpecPair driver fixes it).  Verify-committed tokens are counted on
+        # HOST (the device scan cannot know how many committed tokens the
+        # commit loop will consume before an eos/max_new finish), so the
+        # histogram==tokens_served invariant needs this extra histogram
+        # folded in by flush_counters(). ---
+        self._spec_k = 0
+        self._propose = None
+        self._verify = None
+        self._host_exit_extra = np.zeros(self._n_exits + 1, np.int64)
+        self.spec_rounds = 0
+        self.spec_committed = 0
         self.cache = self._init_cache()
 
     # ------------------------------------------------------------------
@@ -606,6 +630,114 @@ class ContinuousBatchScheduler:
         return finalize
 
     # ------------------------------------------------------------------
+    # speculative decoding stages (repro.serving.multipool.SpecPair):
+    # a draft arena proposes a k-token window, a target arena verifies it
+    # in one batched dispatch.  Both are ok/win-gated lax.scans whose cache
+    # writes happen ONLY for positions that end up committed — rejected
+    # positions are never written, so there is no rollback pass and the
+    # scheme is valid even for sequential state leaves (SSM/conv/xLSTM):
+    # the state after the scan equals sequential decode of exactly the
+    # accepted tokens.
+    # ------------------------------------------------------------------
+    def _make_propose(self, k: int):
+        """Draft-side proposer: ``k`` write-gated greedy decode steps in one
+        jitted scan.  Step j feeds the running token at ``pos0 + j`` while
+        ``active & (j < win_len)`` and emits the next greedy draft.  The
+        k-th dispatch feeds the last draft so its KV row is written — on a
+        full accept the resynced draft would otherwise attend to a hole."""
+        model, cfg = self.model, self.cfg
+        if cfg.paged:
+            def propose(params, cache, tok0, pos0, active, win_len, tbl):
+                def body(carry, j):
+                    cache, cur = carry
+                    act = active & (j < win_len)
+                    logits, _, new_cache = model.decode_step(
+                        params, cache, cur[:, None], pos0 + j,
+                        long_mode=cfg.long_mode,
+                        paged=attn_mod.PagedKV(tbl, act))
+                    cache = model.merge_decode_cache(act, new_cache, cache,
+                                                     paged=True)
+                    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    cur = jnp.where(act, greedy, cur)
+                    return (cache, cur), greedy
+
+                (cache, _), drafts = jax.lax.scan(body, (cache, tok0),
+                                                  jnp.arange(k))
+                return cache, drafts.T
+
+            return propose
+
+        def propose(params, cache, tok0, pos0, active, win_len):
+            def body(carry, j):
+                cache, cur = carry
+                act = active & (j < win_len)
+                logits, _, new_cache = model.decode_step(
+                    params, cache, cur[:, None], pos0 + j,
+                    long_mode=cfg.long_mode)
+                cache = model.merge_decode_cache(act, new_cache, cache)
+                greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                cur = jnp.where(act, greedy, cur)
+                return (cache, cur), greedy
+
+            (cache, _), drafts = jax.lax.scan(body, (cache, tok0),
+                                              jnp.arange(k))
+            return cache, drafts.T
+
+        return propose
+
+    def _make_verify(self, k: int):
+        """Target-side verifier: run the target over all ``k`` window
+        positions in one dispatch (same position handling as the chunked
+        prefill scan), comparing target argmax against the next draft token
+        on device.  Step i runs while every earlier draft matched
+        (``ok``) — so ``acts`` is a per-slot contiguous prefix whose length
+        is the committed count: the accepted drafts plus one corrected (or
+        bonus) target token.  Rejected positions never write the cache."""
+        model, cfg = self.model, self.cfg
+        if cfg.paged:
+            def verify(params, cache, tokens, pos0, active, win_len, tbl):
+                def body(carry, i):
+                    cache, ok = carry
+                    tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+                    act = active & ok & (i < win_len)
+                    logits, _, new_cache = model.decode_step(
+                        params, cache, tok, pos0 + i, long_mode=cfg.long_mode,
+                        paged=attn_mod.PagedKV(tbl, act))
+                    cache = model.merge_decode_cache(act, new_cache, cache,
+                                                     paged=True)
+                    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    nxt = jax.lax.dynamic_slice_in_dim(
+                        tokens, jnp.minimum(i + 1, k - 1), 1, axis=1)[:, 0]
+                    ok = ok & (greedy == nxt)
+                    return (cache, ok), (greedy, act)
+
+                (cache, _), (gs, acts) = jax.lax.scan(
+                    body, (cache, jnp.ones_like(active)), jnp.arange(k))
+                return cache, gs.T, jnp.sum(acts, axis=0).astype(jnp.int32)
+
+            return verify
+
+        def verify(params, cache, tokens, pos0, active, win_len):
+            def body(carry, i):
+                cache, ok = carry
+                tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+                act = active & ok & (i < win_len)
+                logits, _, new_cache = model.decode_step(
+                    params, cache, tok, pos0 + i, long_mode=cfg.long_mode)
+                cache = model.merge_decode_cache(act, new_cache, cache)
+                greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                nxt = jax.lax.dynamic_slice_in_dim(
+                    tokens, jnp.minimum(i + 1, k - 1), 1, axis=1)[:, 0]
+                ok = ok & (greedy == nxt)
+                return (cache, ok), (greedy, act)
+
+            (cache, _), (gs, acts) = jax.lax.scan(
+                body, (cache, jnp.ones_like(active)), jnp.arange(k))
+            return cache, gs.T, jnp.sum(acts, axis=0).astype(jnp.int32)
+
+        return verify
+
+    # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -653,6 +785,21 @@ class ContinuousBatchScheduler:
         admission may still be *staged* — chunks replay on a later poll).
         Multi-model pools use this to enforce one prefill-fairness budget
         across every per-model arena."""
+        rep = self.prefill_poll(prefill_budget)
+        done_before = len(self.completed)
+        rep.decode_stepped = self.step()
+        rep.n_active = self._last_step_active
+        if rep.decode_stepped:
+            rep.decode_segments_run = self._last_segments_run
+            rep.decode_depth_frac = self._last_depth_frac
+        rep.completed += self.completed[done_before:]
+        return rep
+
+    def prefill_poll(self, prefill_budget: Optional[int] = None) -> StepReport:
+        """Admission + chunked prefill only — no decode step.  Speculative
+        drivers (``SpecPair``) own the decode cadence (propose/verify
+        rounds), so they advance admissions through this entry instead of
+        ``poll()``; ``poll()`` itself is this plus one ``step()``."""
         rep = StepReport()
         done_before = len(self.completed)   # before prefill: an eos on the
         if self._pending is None:           # first sampled token completes
@@ -662,11 +809,6 @@ class ContinuousBatchScheduler:
             cap = self.cfg.max_prefill_chunks_per_step \
                 if prefill_budget is None else prefill_budget
             self._advance_prefill(cap, rep)
-        rep.decode_stepped = self.step()
-        rep.n_active = self._last_step_active
-        if rep.decode_stepped:
-            rep.decode_segments_run = self._last_segments_run
-            rep.decode_depth_frac = self._last_depth_frac
         rep.completed = self.completed[done_before:]
         return rep
 
@@ -1030,6 +1172,124 @@ class ContinuousBatchScheduler:
                 self._finish(slot)
         self._maybe_flush()
         return True
+
+    # ------------------------------------------------------------------
+    # speculative decoding: draft propose / target verify+commit
+    # ------------------------------------------------------------------
+    def ensure_spec(self, k: int):
+        """Fix the speculation window width and build the propose/verify
+        jits.  ``k`` is a SHAPE (tokens are [B, k]), so it is fixed per
+        arena — each stage then compiles exactly once and
+        ``jit_cache_sizes()`` gains one ``propose`` and one ``verify``
+        entry bounded by 1 like every other stage."""
+        assert k >= 2, f"spec window k must be >= 2, got {k}"
+        if self._spec_k == 0:
+            self._spec_k = k
+            self._propose = jax.jit(self._make_propose(k),
+                                    donate_argnums=(1,))
+            self._verify = jax.jit(self._make_verify(k),
+                                   donate_argnums=(1,))
+        assert self._spec_k == k, \
+            f"spec window is fixed per arena (have k={self._spec_k}, " \
+            f"asked {k}): the propose/verify jits are fixed-shape"
+
+    def spec_window_lens(self) -> np.ndarray:
+        """Per-slot verify window ``min(k, max_new - steps_taken)`` (0 for
+        idle slots).  Capping at the remaining token budget keeps every
+        speculated write inside the slot's admission-reserved page budget:
+        positions never exceed ``prompt + max_new - 1``, exactly the normal
+        decode bound — no speculative page borrow, nothing to roll back."""
+        win = np.zeros(self.cfg.n_slots, np.int32)
+        for slot in np.nonzero(self.active)[0]:
+            r = self.slot_req[slot]
+            win[slot] = min(self._spec_k,
+                            int(r.max_new - self.steps_taken[slot]))
+        return win
+
+    def spec_propose(self, win_len: np.ndarray) -> np.ndarray:
+        """Draft side of one speculation round: autoregressively propose up
+        to ``win_len[b]`` greedy tokens per slot in ONE jitted dispatch
+        (positions/commit state untouched — the driver resyncs this arena
+        from the target after the verify).  Returns the [B, k] greedy
+        sequence; column j is the draft for window position j+1, the last
+        column is the fed-but-unused tail dispatch."""
+        assert self._spec_k, "ensure_spec(k) first"
+        run = self.active & (win_len > 0)
+        args = (self.params, self.cache, jnp.asarray(self.current_tok),
+                jnp.asarray(self.positions.astype(np.int32)),
+                jnp.asarray(run), jnp.asarray(win_len.astype(np.int32)))
+        if self.page_alloc is not None:
+            args = args + (self._tbl_dev(),)
+        self.cache, drafts = self._propose(*args)
+        return np.asarray(jax.device_get(drafts))
+
+    def spec_verify(self, drafts: np.ndarray,
+                    win_len: np.ndarray) -> np.ndarray:
+        """Target side of one speculation round: verify the per-slot window
+        ``[current_tok, d_1 .. d_{win-1}]`` in one batched dispatch and
+        commit the longest accepted prefix + one corrected (or bonus)
+        token per slot, mirroring ``step()``'s per-token commit semantics
+        exactly (max_new discards the trailing sample; eos finishes).
+        ``drafts`` is [B, >=k-1] (extra columns ignored).  Returns the
+        per-slot committed-token counts.
+
+        Committed tokens are full-depth greedy by construction, so they are
+        bit-identical to target-only greedy decode; they land in the
+        no-exit histogram bucket on HOST (``_host_exit_extra``) because the
+        commit loop — not the device scan — decides how many of the
+        verified tokens an eos actually serves."""
+        assert self._spec_k, "ensure_spec(k) first"
+        k, b = self._spec_k, self.cfg.n_slots
+        tokens = np.zeros((b, k), np.int32)
+        tokens[:, 0] = self.current_tok
+        tokens[:, 1:] = np.asarray(drafts, np.int32)[:, :k - 1]
+        run = self.active & (win_len > 0)
+        args = (self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(self.positions.astype(np.int32)),
+                jnp.asarray(run), jnp.asarray(win_len.astype(np.int32)))
+        if self.page_alloc is not None:
+            args = args + (self._tbl_dev(),)
+        self.cache, gs, nv = self._verify(*args)
+        gs = np.asarray(jax.device_get(gs))
+        nv = np.asarray(jax.device_get(nv))
+        committed = np.zeros(b, np.int64)
+        for slot in np.nonzero(run)[0]:
+            r = self.slot_req[slot]
+            for j in range(int(nv[slot])):
+                tok = int(gs[slot, j])
+                self.steps_taken[slot] += 1
+                self.positions[slot] += 1
+                committed[slot] += 1
+                self.tokens_served += 1
+                self._tokens_since_adapt += 1
+                self.depth_weighted_tokens += 1.0
+                self._depth_since_adapt += 1.0
+                self._host_exit_extra[self._n_exits] += 1
+                if self.steps_taken[slot] >= r.max_new:
+                    self._finish(slot)  # trailing sample discarded, like
+                    break               # step(); later verified tokens too
+                r.out_tokens.append(tok)
+                self.current_tok[slot] = tok
+                if r.eos_id is not None and tok == r.eos_id:
+                    self._finish(slot)
+                    break
+        self._last_segments_run = len(self._segments)
+        self._last_depth_frac = 1.0     # verify always runs full depth
+        self.spec_rounds += 1
+        self.spec_committed += int(committed.sum())
+        self._step_idx += 1
+        self._maybe_flush()
+        return committed
+
+    def spec_resync_from(self, slot: int, src, src_slot: int):
+        """Align this (draft) arena's slot with the target arena's commit
+        state after a verify round: position, pending token and step count
+        copy over; stale draft rows past the accept point are overwritten
+        before they are ever attended to (position-masked reads), which is
+        why SpecPair restricts the draft to position-indexed caches."""
+        self.positions[slot] = src.positions[src_slot]
+        self.current_tok[slot] = src.current_tok[src_slot]
+        self.steps_taken[slot] = src.steps_taken[src_slot]
 
     def _release_slot_pages(self, slot: int):
         """Drop the slot's block-table references (paged arenas).  Pages
@@ -1476,9 +1736,10 @@ class ContinuousBatchScheduler:
 
     def flush_counters(self) -> np.ndarray:
         """Sync the cumulative device-side exit histogram to host (an
-        intended d2h round-trip, made explicit for the transfer guard)."""
+        intended d2h round-trip, made explicit for the transfer guard) and
+        fold in the host-side histogram of verify-committed tokens."""
         self.exit_counts = np.asarray(jax.device_get(self._counters),
-                                      np.int64)
+                                      np.int64) + self._host_exit_extra
         return self.exit_counts
 
     def reset_stats(self):
@@ -1486,10 +1747,13 @@ class ContinuousBatchScheduler:
         compile-warmup request, so reports cover only the real trace)."""
         self._counters = jnp.zeros(self._n_exits + 1, jnp.int32)
         self.exit_counts = np.zeros(self._n_exits + 1, np.int64)
+        self._host_exit_extra = np.zeros(self._n_exits + 1, np.int64)
         self.tokens_served = 0
         self._tokens_since_adapt = 0
         self.depth_weighted_tokens = 0.0
         self._depth_since_adapt = 0.0
+        self.spec_rounds = 0
+        self.spec_committed = 0
         for name in self.stage_calls:
             self.stage_calls[name] = 0
         self.completed.clear()
@@ -1531,4 +1795,7 @@ class ContinuousBatchScheduler:
             sizes["finalize"] = size(self._finalize)
         else:
             sizes["decode"] = size(self._decode)
+        if self._spec_k:
+            sizes["propose"] = size(self._propose)
+            sizes["verify"] = size(self._verify)
         return sizes

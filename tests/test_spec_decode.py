@@ -1,0 +1,342 @@
+"""Cross-tier speculative decoding: lossless SpecPair + admission economics.
+
+Parity contract: a ``SpecPair`` (draft proposes k greedy tokens per round,
+target verifies them in ONE fixed-shape batched dispatch) emits token
+streams bit-identical to target-only greedy decode on the MONOLITHIC
+(``segmented=False``) path, for every target arena kind — pure attention,
+SSM, hybrid shared-attention, MLA+MoE — paged or contiguous.  Rejected
+windows never touch committed state (verify gates its cache writes by the
+on-device accept mask), so rollback is a no-op by construction and the
+slot/page audit stays clean through forced-rejection traffic.
+
+Routing contract: the ``speculative`` admission candidate (draft on the
+device tier, batched verify on the cloud tier, one uplink of k token ids +
+one downlink of the accept length per round) wins only when the client's
+access link is RTT-bound — never on the default low-latency scenario.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Scenario, TierOutage
+from repro.models import Model
+from repro.serving import (AdmissionRouter, ClusterConfig,
+                           ContinuousBatchScheduler, ModelGroup, Request,
+                           SchedulerConfig, SpecPair, TieredServingCluster)
+
+DRAFT_ARCH = "granite-3-2b-smoke"       # position-indexed cache: legal draft
+STATE_ARCHS = ["xlstm-350m-smoke",      # SSM (sequential state target)
+               "zamba2-1.2b-smoke",     # hybrid shared-attention target
+               "deepseek-v3-671b-smoke"]  # MLA + MoE target
+DRAFT_PLAN = "granite-3-2b"
+TARGET_PLAN = "deepseek-v3-671b"
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_config(DRAFT_ARCH)
+    m = Model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _cfg(**kw):
+    base = dict(n_slots=2, max_len=48, prefill_chunk=8, exit_threshold=0.0)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def _monolithic(m, params, prompts, max_new, **kw):
+    """Target-only greedy reference on the monolithic decode path."""
+    s = ContinuousBatchScheduler(m, params, _cfg(segmented=False, **kw))
+    reqs = [Request(tokens=np.asarray(p, np.int32), max_new=max_new,
+                    req_id=i) for i, p in enumerate(prompts)]
+    for r in reqs:
+        s.submit(r)
+    s.run()
+    return {r.req_id: list(r.out_tokens) for r in reqs}
+
+
+def _spec_serve(pair, prompts, max_new, start=0):
+    reqs = [Request(tokens=np.asarray(p, np.int32), max_new=max_new,
+                    req_id=i) for i, p in enumerate(prompts, start=start)]
+    for r in reqs:
+        pair.submit(r)
+    pair.run()
+    return {r.req_id: list(r.out_tokens) for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# bit-parity: spec == target-only greedy, across arena kinds
+# ---------------------------------------------------------------------------
+def test_spec_parity_attention_agreeable(granite, slot_audit,
+                                         assert_no_recompile):
+    """Agreeable draft (shared parameters): outputs bit-identical to the
+    monolithic target-only pool, acceptance saturates the window, and a
+    second batch of requests retraces nothing."""
+    cfg, m, params = granite
+    rs = np.random.RandomState(0)
+    prompts = [rs.randint(0, cfg.vocab_size, n) for n in (5, 12, 9)]
+    ref = _monolithic(m, params, prompts, 10)
+
+    pair = SpecPair(ModelGroup([("draft", m, params), ("target", m, params)]),
+                    _cfg(), k=4)
+    audit = slot_audit(pair)
+    got = _spec_serve(pair, prompts[:2], 10)
+    with assert_no_recompile(pair):     # steady state: no retrace
+        got.update(_spec_serve(pair, prompts[2:], 10, start=2))
+    assert got == ref
+    assert audit.polls > 0
+    st = pair.spec_stats()
+    # shared params agree everywhere: every round commits the full window
+    assert st["acceptance_len"] >= 3.0
+    assert st["committed"] >= sum(len(v) - 1 for v in ref.values())
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("arch", STATE_ARCHS)
+def test_spec_parity_state_and_mla_targets(arch, paged, granite, slot_audit):
+    """SSM / shared-attn / MLA targets behind an attention draft (a
+    DIFFERENT model — rejection-heavy traffic): verify's gated writes keep
+    the stream bit-identical to target-only greedy, paged or contiguous."""
+    _, draft_m, draft_p = granite
+    tcfg = get_config(arch)
+    tm = Model(tcfg)
+    tp = tm.init(jax.random.PRNGKey(1))
+    rs = np.random.RandomState(2)
+    prompts = [rs.randint(0, tcfg.vocab_size, n) for n in (6, 13, 9)]
+    kw = dict(paged=True, page_size=16) if paged else {}
+    ref = _monolithic(tm, tp, prompts, 8, **kw)
+
+    pair = SpecPair(ModelGroup([("draft", draft_m, draft_p),
+                                ("target", tm, tp)]),
+                    _cfg(**kw), k=4)
+    audit = slot_audit(pair)
+    got = _spec_serve(pair, prompts, 8)
+    assert got == ref
+    assert audit.polls > 0
+    if paged:
+        for pool in pair.pools.values():
+            assert pool.page_alloc.free_count == pool.page_alloc.n_pages
+            assert not pool.page_alloc.refcount.any()
+
+
+# ---------------------------------------------------------------------------
+# forced rejection: rollback is a no-op, audit + page pool stay clean
+# ---------------------------------------------------------------------------
+def test_spec_forced_rejection_rollback_clean(granite, slot_audit):
+    """Independent draft parameters (argmax agreement ~ chance): nearly
+    every round rejects the whole window.  The stream still equals the
+    monolithic reference, the slot/page audit holds after every poll, and
+    the drained pools leak no pages."""
+    cfg, m, params = granite
+    other = m.init(jax.random.PRNGKey(7))       # disagreeing draft
+    rs = np.random.RandomState(3)
+    prompts = [rs.randint(0, cfg.vocab_size, n) for n in (7, 11)]
+    kw = dict(paged=True, page_size=16)
+    ref = _monolithic(m, params, prompts, 8, **kw)
+
+    pair = SpecPair(ModelGroup([("draft", m, other), ("target", m, params)]),
+                    _cfg(**kw), k=4)
+    audit = slot_audit(pair)
+    got = _spec_serve(pair, prompts, 8)
+    assert got == ref
+    assert audit.polls > 0
+    st = pair.spec_stats()
+    assert st["acceptance_len"] < 3.0           # rejections actually happened
+    for pool in pair.pools.values():
+        assert pool.page_alloc.free_count == pool.page_alloc.n_pages
+        assert not pool.page_alloc.refcount.any()
+
+
+# ---------------------------------------------------------------------------
+# verify stage: one jit entry covers every acceptance length 0..k
+# ---------------------------------------------------------------------------
+def test_spec_verify_jit_bound_across_acceptance_lengths(granite):
+    """Drive ``spec_verify`` with crafted draft windows forcing every
+    acceptance length in 1..k: commits follow the greedy reference exactly
+    and the verify stage never retraces (fixed-shape contract)."""
+    cfg, m, params = granite
+    K = 4
+    rs = np.random.RandomState(4)
+    prompt = rs.randint(0, cfg.vocab_size, 8)
+    ref = _monolithic(m, params, [prompt], 24, n_slots=1)[0]
+
+    s = ContinuousBatchScheduler(m, params, _cfg(n_slots=1,
+                                                 segmented=False))
+    s.ensure_spec(K)
+    r = Request(tokens=prompt.copy(), max_new=24, req_id=0)
+    s.submit(r)
+    while not (r.slot >= 0 and s.active[r.slot]):
+        s.prefill_poll(None)
+
+    for want in (1, 2, 3, 4, 2, 4):             # sweep acceptance lengths
+        idx = len(r.out_tokens)
+        truth = ref[idx:idx + K - 1]
+        drafts = np.zeros((1, K - 1), np.int32)
+        drafts[0, :len(truth)] = truth
+        if want <= K - 1:                       # corrupt entry want-1
+            drafts[0, want - 1] = (int(drafts[0, want - 1]) + 7) \
+                % cfg.vocab_size
+        committed = s.spec_verify(drafts, s.spec_window_lens())
+        assert int(committed[0]) == want
+        assert r.out_tokens == ref[:len(r.out_tokens)]
+    caches = s.jit_cache_sizes()
+    assert caches["verify"] == 1                # one entry, all accept lens
+    assert caches["decode"] == 0                # never fell back
+
+
+# ---------------------------------------------------------------------------
+# config-time rejections
+# ---------------------------------------------------------------------------
+def test_spec_config_rejections(granite):
+    cfg, m, params = granite
+    group = ModelGroup([("draft", m, params), ("target", m, params)])
+    with pytest.raises(ValueError, match="temperature"):
+        SpecPair(group, _cfg(temperature=0.7), k=4)
+    with pytest.raises(ValueError, match="exit_threshold"):
+        SpecPair(group, _cfg(exit_threshold=0.5), k=4)
+    with pytest.raises(ValueError, match="k must be"):
+        SpecPair(group, _cfg(), k=1)
+    with pytest.raises(ValueError, match="exactly 2"):
+        SpecPair(ModelGroup([("only", m, params)]), _cfg(), k=4)
+    xcfg = get_config("xlstm-350m-smoke")
+    xm = Model(xcfg)
+    xp = xm.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="sequential"):
+        SpecPair(ModelGroup([("draft", xm, xp), ("target", m, params)]),
+                 _cfg(), k=4)                   # SSM draft cannot rewind
+
+
+def test_cluster_spec_config_rejections(granite):
+    cfg, m, params = granite
+    group = ModelGroup([("small", m, params), ("big", m, params)])
+    plan = {"small": get_config(DRAFT_PLAN), "big": get_config(TARGET_PLAN)}
+    with pytest.raises(ValueError, match="temperature"):
+        TieredServingCluster(
+            group, scenario=Scenario.default(), plan_cfg=plan,
+            cfg=ClusterConfig(spec_draft="small", temperature=0.5))
+    with pytest.raises(ValueError, match="spec_draft"):
+        TieredServingCluster(
+            group, scenario=Scenario.default(), plan_cfg=plan,
+            cfg=ClusterConfig(spec_draft="nonexistent"))
+
+
+# ---------------------------------------------------------------------------
+# admission economics: speculative wins only on RTT-bound access links
+# ---------------------------------------------------------------------------
+def _router(sc, **kw):
+    plan = {"draft": get_config(DRAFT_PLAN), "target": get_config(TARGET_PLAN)}
+    return AdmissionRouter(plan, sc, stream_tokens=True, spec_draft="draft",
+                           **kw)
+
+
+def test_speculative_candidate_wins_only_high_rtt():
+    # high-RTT access link: the speculative candidate wins outright
+    r = _router(Scenario.high_rtt_access(), spec_k=6)
+    d = r.route(16, 32, model="target")
+    assert d.paradigm == "speculative" and d.tier == "cloud"
+    # default (low-latency) scenario: it must NOT win
+    r = _router(Scenario.default(), spec_k=6)
+    d = r.route(16, 32, model="target")
+    assert d.paradigm != "speculative"
+    # degraded WAN with the edge LAN out: beats the best split path
+    base = AdmissionRouter({"target": get_config(TARGET_PLAN)},
+                           Scenario.degraded_wan(), stream_tokens=True)
+    d_base = base.route(64, 32, model="target", exclude=["edge"])
+    spec = _router(Scenario.degraded_wan(), spec_k=4)
+    spec.spec_accept = 4.0                      # measured-warm agreement
+    d_spec = spec.route(64, 32, model="target", exclude=["edge"])
+    assert d_spec.paradigm == "speculative"
+    assert d_base.paradigm != "speculative"
+    assert d_spec.effective_latency < d_base.effective_latency
+
+
+def test_measured_acceptance_flips_marginal_route():
+    """Cold admission prices the (k+1)/2 default; a measured acceptance
+    fed back by the cluster makes the candidate strictly cheaper."""
+    r = _router(Scenario.high_rtt_access(), spec_k=4)
+    cold = r.route(16, 32, model="target")
+    r2 = _router(Scenario.high_rtt_access(), spec_k=4)
+    r2.spec_accept = 4.0
+    warm = r2.route(16, 32, model="target")
+    assert warm.paradigm == "speculative"
+    if cold.paradigm == "speculative":          # warm is strictly cheaper
+        assert warm.effective_latency < cold.effective_latency
+
+
+# ---------------------------------------------------------------------------
+# cross-tier end to end: cluster bridge parity + measured stats
+# ---------------------------------------------------------------------------
+def test_cluster_speculative_end_to_end(granite, slot_audit):
+    cfg, m, params = granite
+    group = ModelGroup([("small", m, params), ("big", m, params)])
+    plan = {"small": get_config(DRAFT_PLAN), "big": get_config(TARGET_PLAN)}
+    cl = TieredServingCluster(
+        group, scenario=Scenario.high_rtt_access(), plan_cfg=plan,
+        cfg=ClusterConfig(base_slots=2, max_len=48, prefill_chunk=8,
+                          exit_threshold=0.0, spec_draft="small", spec_k=6,
+                          stream_tokens=True))
+    rs = np.random.RandomState(5)
+    prompts = [rs.randint(0, cfg.vocab_size, n) for n in (8, 12, 10)]
+    audit = slot_audit(cl)
+    crs = [cl.submit(p.copy(), max_new=10, arrival=0.05 * i, model="big")
+           for i, p in enumerate(prompts)]
+    cl.run()
+    assert audit.polls > 0
+    ref = _monolithic(m, params, prompts, 10)
+    for i, cr in enumerate(crs):
+        assert cr.done
+        assert cr.decision.paradigm == "speculative"
+        assert cr.final_tier == "cloud"
+        assert list(cr.req.out_tokens) == ref[i]
+
+    st = cl.stats()["speculative"]
+    assert st["k"] == 6 and st["draft"] == "small"
+    assert st["requests_completed"] == 3
+    # shared params: agreement saturates the window
+    assert st["acceptance_len"] >= 4.0
+    assert st["mean_speedup_x"] > 1.5
+    assert all(a["rounds"] > 0 for a in st["per_request_speedup"])
+    # the cluster fed the MEASURED acceptance back into admission pricing
+    assert cl.router.spec_accept == pytest.approx(st["acceptance_len"])
+    # the bridge's pair registers its own jit cache entries
+    assert "spec:big" in cl.jit_cache_sizes()
+
+
+def test_cluster_speculative_outage_drains_to_survivors(granite):
+    """Killing the device tier mid-trace tears down the draft side of the
+    bridge: in-flight speculative requests requeue onto ordinary
+    candidates and still complete with the right tokens."""
+    cfg, m, params = granite
+    group = ModelGroup([("small", m, params), ("big", m, params)])
+    plan = {"small": get_config(DRAFT_PLAN), "big": get_config(TARGET_PLAN)}
+    sc = dataclasses.replace(Scenario.high_rtt_access(),
+                             outages=(TierOutage("device", 0.0),))
+    cl = TieredServingCluster(
+        group, scenario=sc, plan_cfg=plan,
+        cfg=ClusterConfig(base_slots=2, max_len=48, prefill_chunk=8,
+                          exit_threshold=0.0, spec_draft="small", spec_k=6,
+                          stream_tokens=True))
+    rs = np.random.RandomState(6)
+    prompts = [rs.randint(0, cfg.vocab_size, n) for n in (8, 11)]
+    crs = [cl.submit(p.copy(), max_new=8, arrival=0.02 * i, model="big")
+           for i, p in enumerate(prompts)]
+    cl.run()
+    # re-routed requests decode in the ordinary tier pools, which run the
+    # SEGMENTED pipeline — the reference must match that path (its
+    # jit-boundary rounding differs at the bit level from the monolithic
+    # scan the SpecPair uses)
+    ref_pool = ContinuousBatchScheduler(m, params, _cfg())
+    refs = [Request(tokens=np.asarray(p, np.int32), max_new=8, req_id=i)
+            for i, p in enumerate(prompts)]
+    for r in refs:
+        ref_pool.submit(r)
+    ref_pool.run()
+    for cr, r in zip(crs, refs):
+        assert cr.done
+        assert cr.decision.paradigm != "speculative"   # re-routed
+        assert list(cr.req.out_tokens) == list(r.out_tokens)
