@@ -54,17 +54,31 @@ def _load_trajectory() -> list:
 
 
 def _analysis_violations() -> dict:
-    """Static-analyzer counts for the trajectory entry: total findings and
-    how many are new vs the committed baseline — a perf trajectory where
-    hazard counts creep up is regressing even if tok/s holds."""
+    """Static-analyzer counts for the trajectory entry: total findings,
+    how many are new vs the committed baseline, a per-rule-family
+    breakdown, and the cost-drift ratios of every audited decode arena —
+    a perf trajectory where hazard counts creep up or the analytic cost
+    model drifts from the compiled stages is regressing even if tok/s
+    holds."""
     try:
-        from repro.analysis import (lint_paths, load_baseline, new_findings)
+        from repro.analysis import (audit_serving_stack, check_cost_graphs,
+                                    lint_paths, load_baseline, new_findings)
         root = __file__.rsplit("/", 2)[0]
         findings = lint_paths([os.path.join(root, "src")], repo_root=root)
+        jxp, ctx = audit_serving_stack()
+        cst, ratios = check_cost_graphs(ctx["stack"], ctx["jaxprs"])
+        findings = findings + jxp + cst
         fresh = new_findings(
             findings, load_baseline(os.path.join(root,
                                                  "analysis_baseline.json")))
-        return {"total": len(findings), "new": len(fresh)}
+        families: dict = {}
+        for f in findings:
+            families[f.rule[:3]] = families.get(f.rule[:3], 0) + 1
+        return {"total": len(findings), "new": len(fresh),
+                "families": families,
+                "stages_audited": ctx["n_stages"],
+                "cost_drift": {k: round(v["ratio"], 4)
+                               for k, v in sorted(ratios.items())}}
     except Exception:                  # pragma: no cover - analyzer broken
         return {"total": -1, "new": -1}
 

@@ -2,6 +2,12 @@
 
 * :mod:`repro.analysis.lint` — AST pass over ``src/``: recompile hazards
   in traced code (TRC rules) and Pallas tile/grid legality (PLT rules).
+* :mod:`repro.analysis.callgraph` — same-module call graph powering the
+  interprocedural taint chains (IPC rules) inside the lint pass.
+* :mod:`repro.analysis.jaxpr_audit` — abstract traces of every registered
+  serving stage, walked for compiled-level hazards (JXP rules).
+* :mod:`repro.analysis.costcheck` — compiled decode FLOPs vs the analytic
+  router costs, gated on a committed tolerance band (CST001).
 * :mod:`repro.analysis.guards` — runtime guards tests attach to live
   schedulers: ``no_recompile``, ``guard_polling`` and ``SlotAudit``.
 * :mod:`repro.analysis.report` — findings, rendering and the committed
@@ -11,16 +17,25 @@ Run it: ``python -m repro.analysis`` (or ``make analyze``); the gate is
 part of ``make check``.  Invariants are documented in
 ``docs/invariants.md``.
 """
+from repro.analysis.callgraph import CallGraph, map_tainted_params
+from repro.analysis.costcheck import (TOLERANCE, check_cost_graphs,
+                                      decode_flops_per_token, jaxpr_bytes,
+                                      jaxpr_flops)
 from repro.analysis.guards import (GuardError, SlotAudit, guard_polling,
                                    no_recompile, transfer_guard)
+from repro.analysis.jaxpr_audit import (audit_registry, audit_serving_stack,
+                                        audit_stage, build_audit_stack)
 from repro.analysis.lint import lint_file, lint_paths, lint_source
 from repro.analysis.report import (Finding, load_baseline, new_findings,
                                    save_baseline, sort_findings, to_json)
 from repro.analysis.rules import RULES, Rule
 
 __all__ = [
-    "Finding", "GuardError", "RULES", "Rule", "SlotAudit", "guard_polling",
-    "lint_file", "lint_paths", "lint_source", "load_baseline",
+    "CallGraph", "Finding", "GuardError", "RULES", "Rule", "SlotAudit",
+    "TOLERANCE", "audit_registry", "audit_serving_stack", "audit_stage",
+    "build_audit_stack", "check_cost_graphs", "decode_flops_per_token",
+    "guard_polling", "jaxpr_bytes", "jaxpr_flops", "lint_file",
+    "lint_paths", "lint_source", "load_baseline", "map_tainted_params",
     "new_findings", "no_recompile", "save_baseline", "sort_findings",
     "to_json", "transfer_guard",
 ]

@@ -1,0 +1,120 @@
+"""Module-level call graph for interprocedural taint (the IPC rules).
+
+The per-function taint walk in :mod:`repro.analysis.lint` sees one traced
+context at a time, so a hazard moved one call deep escapes every TRC
+rule::
+
+    @jax.jit
+    def step(x):
+        return _helper(x)      # looks clean from here
+
+    def _helper(x):
+        return int(x)          # the concretization lives here
+
+``CallGraph`` closes that hole: it resolves call sites to *same-module*
+function defs (bare names and ``self._method`` / ``cls._method``
+attributes — the repo's two helper idioms), and ``map_tainted_params``
+translates a call's tainted arguments into the callee's tainted
+parameter names.  The taint walker then re-enters the helper with
+exactly that taint set, a recorded call chain, and a bounded depth;
+hazards found there are reported as ``IPC***`` findings whose message
+carries the full chain (see ``INTERPROC_RULE`` for the TRC -> IPC
+mapping).
+
+Resolution is deliberately conservative: only defs of the module under
+analysis are candidates (cross-module taint would need import
+resolution and is out of scope), ``*args`` / ``**kwargs`` at the call
+site bail out, and helpers that are themselves traced contexts — or
+nested inside one — are skipped (the intraprocedural walk already
+covers them).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Callable, Dict, List, Optional, Set, Union
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+# how deep a helper chain is followed from a traced root
+MAX_CHAIN_DEPTH = 4
+
+# TRC rule raised inside a followed helper -> the IPC rule reported
+INTERPROC_RULE: Dict[str, str] = {
+    "TRC001": "IPC001",        # int()/float()/bool()/complex()
+    "TRC002": "IPC001",        # .item()/.tolist()
+    "TRC007": "IPC001",        # host numpy on traced
+    "TRC004": "IPC002",        # if/while/for/assert
+    "TRC003": "IPC003",        # len()
+    "TRC005": "IPC003",        # f-string
+}
+
+
+def func_display_name(fn: FuncNode) -> str:
+    if isinstance(fn, ast.Lambda):
+        return "<lambda>"
+    return fn.name
+
+
+def format_chain(chain) -> str:
+    return " -> ".join(f"{name}()" for name in chain)
+
+
+class CallGraph:
+    """Call-site resolution over one module's function defs."""
+
+    def __init__(self, defs_by_name: Dict[str, List[FuncNode]]):
+        self.defs_by_name = defs_by_name
+
+    def resolve_call(self, call: ast.Call) -> List[FuncNode]:
+        """Same-module defs a call may dispatch to ([] when unresolvable
+        or when the target lives in another module)."""
+        func = call.func
+        if isinstance(func, ast.Name):
+            return list(self.defs_by_name.get(func.id, []))
+        if isinstance(func, ast.Attribute) \
+                and isinstance(func.value, ast.Name) \
+                and func.value.id in ("self", "cls"):
+            return list(self.defs_by_name.get(func.attr, []))
+        return []
+
+
+def map_tainted_params(call: ast.Call, fn: FuncNode,
+                       is_tainted: Callable[[ast.AST], bool]
+                       ) -> Optional[Set[str]]:
+    """Callee parameter names that receive a tainted argument at this call
+    site.  ``None`` means the mapping is ambiguous (splatted arguments) and
+    the call must not be followed."""
+    if isinstance(fn, ast.Lambda):
+        a = fn.args
+    else:
+        a = fn.args
+    if any(isinstance(arg, ast.Starred) for arg in call.args) \
+            or any(kw.arg is None for kw in call.keywords):
+        return None
+    positional = [p.arg for p in a.posonlyargs + a.args]
+    # a bound-method call (self.f(...) / cls.f(...)) consumes the first
+    # positional parameter implicitly
+    if isinstance(call.func, ast.Attribute) and positional \
+            and positional[0] in ("self", "cls"):
+        positional = positional[1:]
+    tainted: Set[str] = set()
+    for i, arg in enumerate(call.args):
+        if not is_tainted(arg):
+            continue
+        if i < len(positional):
+            tainted.add(positional[i])
+        elif a.vararg is not None:
+            tainted.add(a.vararg.arg)
+        else:
+            return None                # arity mismatch: don't guess
+    kwnames = set(positional) | {p.arg for p in a.kwonlyargs}
+    for kw in call.keywords:
+        if not is_tainted(kw.value):
+            continue
+        if kw.arg in kwnames:
+            tainted.add(kw.arg)
+        elif a.kwarg is not None:
+            tainted.add(a.kwarg.arg)
+        else:
+            return None
+    return tainted

@@ -1,0 +1,209 @@
+"""Cost-graph honesty: compiled-stage FLOPs vs the analytic router costs.
+
+Every admission decision the cluster makes is priced from
+``core.paradigms.analytic_step_cost`` (itself ``core.cost_model.
+build_cost_graph``).  Those numbers are asserted, not measured — nothing
+stops ``_layer_flops`` drifting away from what the compiled stages
+actually compute when an architecture or a stage changes.  This module
+closes the loop statically: it counts FLOPs (and bytes materialized)
+directly from the jaxprs the stage auditor already traced, reduces the
+decode path of every audited arena to FLOPs *per token*, and compares
+against the analytic per-token cost of the same runtime model at the
+same context length.  The ratio
+
+    measured_decode_flops_per_token / analytic_flops_per_token
+
+must stay inside the committed ``TOLERANCE`` band or ``CST001`` fires
+through the ordinary finding gate — making the routing numbers auditable
+instead of trusted.
+
+FLOP counting is deliberately matmul-only (``dot_general``, the
+overwhelming majority of transformer compute) with sub-jaxpr recursion:
+``scan`` bodies multiply by trip count, ``cond`` branches contribute
+their maximum, ``pjit``/call bodies count once.  Element-wise ops are
+ignored on BOTH sides of the ratio (the analytic graph ignores them
+too), which is what keeps the band tight enough to be useful.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.analysis.report import Finding
+from repro.analysis.rules import RULES
+
+# measured/analytic per-token decode FLOPs must stay inside this band.
+# The analytic graph prices a full-context forward (attention over the
+# whole arena, no early exit, no paging overhead); the compiled stages
+# add exit probes + lm head and run attention over the fixed arena, so
+# the honest ratio sits near 1 but not at it.  Measured on the audit
+# stack at max_len=32: 1.19-1.39 across contiguous/paged/spec arenas.
+# Widen ONLY with a written justification in docs/invariants.md.
+TOLERANCE: Tuple[float, float] = (0.5, 2.0)
+
+
+def _nelems(shape) -> float:
+    out = 1.0
+    for d in shape:
+        out *= int(d)
+    return out
+
+
+def _dot_general_flops(eqn: Any) -> float:
+    """2 * |out| * prod(contracted lhs dims) — the standard matmul count."""
+    (lhs_c, _rhs_c), _ = eqn.params["dimension_numbers"]
+    lhs_shape = eqn.invars[0].aval.shape
+    contract = 1.0
+    for d in lhs_c:
+        contract *= int(lhs_shape[d])
+    return 2.0 * _nelems(eqn.outvars[0].aval.shape) * contract
+
+
+def jaxpr_flops(jaxpr: Any) -> float:
+    """Matmul FLOPs of one (closed or open) jaxpr, sub-jaxprs included."""
+    closed = getattr(jaxpr, "jaxpr", None)
+    open_jaxpr = closed if closed is not None else jaxpr
+    total = 0.0
+    for eqn in open_jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            total += _dot_general_flops(eqn)
+        elif prim in ("scan", "while"):
+            mult = int(eqn.params.get("length", 1))
+            for key in ("jaxpr", "body_jaxpr"):
+                if eqn.params.get(key) is not None:
+                    total += mult * jaxpr_flops(eqn.params[key])
+            if eqn.params.get("cond_jaxpr") is not None:
+                total += jaxpr_flops(eqn.params["cond_jaxpr"])
+        elif prim == "cond":
+            branches = eqn.params.get("branches", ())
+            if branches:
+                total += max(jaxpr_flops(b) for b in branches)
+        else:
+            for key in ("jaxpr", "call_jaxpr"):
+                if eqn.params.get(key) is not None:
+                    total += jaxpr_flops(eqn.params[key])
+    return total
+
+
+def jaxpr_bytes(jaxpr: Any) -> float:
+    """Bytes materialized by one jaxpr (sum of equation output buffers,
+    sub-jaxprs weighted by trip count).  Reported, not gated: a rough
+    memory-traffic proxy, useful for eyeballing arithmetic intensity."""
+    closed = getattr(jaxpr, "jaxpr", None)
+    open_jaxpr = closed if closed is not None else jaxpr
+    total = 0.0
+    for eqn in open_jaxpr.eqns:
+        mult = int(eqn.params.get("length", 1)) \
+            if eqn.primitive.name in ("scan", "while") else 1
+        nested = False
+        for sub, _ in _sub_pairs(eqn.params):
+            total += mult * jaxpr_bytes(sub)
+            nested = True
+        if not nested:
+            for v in eqn.outvars:
+                aval = v.aval
+                total += _nelems(aval.shape) * jnp.dtype(aval.dtype).itemsize
+    return total
+
+
+def _sub_pairs(params):
+    for key in ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr"):
+        if params.get(key) is not None:
+            yield params[key], 1
+    for br in params.get("branches", ()) or ():
+        yield br, 1
+
+
+# ---------------------------------------------------------------------------
+# decode-path reduction
+# ---------------------------------------------------------------------------
+def decode_flops_per_token(registry: Dict[str, Any],
+                           jaxprs: Dict[str, Any]
+                           ) -> Dict[str, Dict[str, float]]:
+    """Per-arena decode-path cost from one audited registry.
+
+    ``registry`` maps stage name -> StageSpec, ``jaxprs`` the same names
+    to their traced jaxprs.  Stage names may carry a ``model/`` prefix
+    (multipool flattening); each model prefix is one arena.  An arena's
+    decode path is either the monolithic ``decode`` stage or the sum of
+    every ``segment*`` stage plus ``finalize`` (full-depth step — what
+    threshold-0 serving dispatches).  Returns
+    ``arena -> {"flops_per_token", "bytes_per_token"}``.
+    """
+    arenas: Dict[str, Dict[str, Any]] = {}
+    for name in registry:
+        arena, _, stage = name.rpartition("/")
+        arenas.setdefault(arena, {})[stage] = name
+    out: Dict[str, Dict[str, float]] = {}
+    for arena, stages in sorted(arenas.items()):
+        if "decode" in stages:
+            names = [stages["decode"]]
+        elif any(s.startswith("segment") for s in stages):
+            names = [stages[s] for s in sorted(stages)
+                     if s.startswith("segment")]
+            if "finalize" in stages:
+                names.append(stages["finalize"])
+        else:
+            continue
+        # batch width from the hidden/token operand (argnum 2 on every
+        # decode-path stage signature)
+        spec = registry[names[0]]
+        batch = int(spec.args[2].shape[0])
+        flops = sum(jaxpr_flops(jaxprs[n]) for n in names)
+        nbytes = sum(jaxpr_bytes(jaxprs[n]) for n in names)
+        out[arena] = {"flops_per_token": flops / batch,
+                      "bytes_per_token": nbytes / batch}
+    return out
+
+
+def check_cost_graphs(stack: Dict[str, Any],
+                      jaxprs: Dict[str, Dict[str, Any]],
+                      tolerance: Optional[Tuple[float, float]] = None
+                      ) -> Tuple[List[Finding], Dict[str, Dict[str, float]]]:
+    """Cross-check every audited arena's compiled decode cost against the
+    analytic per-token cost the router prices with.
+
+    Returns ``(findings, ratios)`` where ratios maps
+    ``"<registry>[/<arena>]"`` to measured/analytic/ratio/bytes — what
+    ``benchmarks/run.py`` records in the trajectory entry.
+    """
+    from repro.analysis.jaxpr_audit import _flatten_registries
+    from repro.core.paradigms import analytic_step_cost
+
+    lo, hi = tolerance if tolerance is not None else TOLERANCE
+    model = stack.get("_model")
+    findings: List[Finding] = []
+    ratios: Dict[str, Dict[str, float]] = {}
+    max_lens = {name: obj.cfg.max_len for name, obj in stack.items()
+                if not name.startswith("_")}
+    registries = _flatten_registries(stack)
+    for prefix in sorted(jaxprs):
+        registry = registries.get(prefix)
+        if registry is None:
+            continue
+        max_len = max_lens[prefix.split("/", 1)[0]]
+        analytic = analytic_step_cost(model.cfg, 1, max_len).flops_per_token
+        for arena, m in decode_flops_per_token(registry,
+                                               jaxprs[prefix]).items():
+            key = f"{prefix}/{arena}" if arena else prefix
+            ratio = m["flops_per_token"] / analytic if analytic else math.inf
+            ratios[key] = {"measured_flops_per_token": m["flops_per_token"],
+                           "analytic_flops_per_token": analytic,
+                           "ratio": ratio,
+                           "bytes_per_token": m["bytes_per_token"]}
+            if not (lo <= ratio <= hi):
+                r = RULES["CST001"]
+                findings.append(Finding(
+                    rule="CST001", path=f"<cost:{key}>", line=0, col=0,
+                    severity=r.severity,
+                    message=(f"decode path of '{key}' compiles to "
+                             f"{m['flops_per_token']:.3e} FLOPs/token but "
+                             f"the router prices {analytic:.3e} "
+                             f"(ratio {ratio:.2f}, tolerance "
+                             f"[{lo}, {hi}]): the analytic cost graph is "
+                             "no longer honest"),
+                    snippet=f"{key}:cost-drift"))
+    return findings, ratios

@@ -32,6 +32,9 @@ import ast
 import os
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple, Union
 
+from repro.analysis.callgraph import (CallGraph, INTERPROC_RULE,
+                                      MAX_CHAIN_DEPTH, format_chain,
+                                      func_display_name, map_tainted_params)
 from repro.analysis.report import Finding, sort_findings
 from repro.analysis.rules import RULES
 
@@ -143,6 +146,7 @@ class ModuleLinter:
                 self.all_calls.append(node)
         self.traced: Dict[int, _TracedMark] = {}    # id(node) -> mark
         self._node_by_id: Dict[int, FuncNode] = {}
+        self.callgraph = CallGraph(self.defs_by_name)
 
     # -- plumbing -----------------------------------------------------------
     def _annotate_parents(self) -> None:
@@ -507,17 +511,43 @@ class ModuleLinter:
 
 
 class _TaintWalker:
-    """Walks one traced function, propagating taint and firing TRC rules."""
+    """Walks one traced function, propagating taint and firing TRC rules.
 
-    def __init__(self, linter: ModuleLinter, fn: FuncNode, mark: _TracedMark):
+    With a non-empty ``chain`` the walker is re-entered *interprocedurally*
+    — inside a same-module helper reached from a traced root — and fires
+    the IPC translation of each TRC rule instead, carrying the chain in
+    the message (see :mod:`repro.analysis.callgraph`)."""
+
+    def __init__(self, linter: ModuleLinter, fn: FuncNode, mark: _TracedMark,
+                 chain: Tuple[str, ...] = (),
+                 tainted_params: Optional[Set[str]] = None,
+                 visited: Optional[Set[Tuple[int, frozenset]]] = None):
         self.linter = linter
         self.fn = fn
         self.mark = mark
+        self.chain = chain or (func_display_name(fn),)
+        self.visited = visited if visited is not None else set()
         self.tainted: Set[str] = set()
-        for name in _param_names(fn):
-            if name in ("self", "cls") or name in mark.statics:
-                continue
-            self.tainted.add(name)
+        if tainted_params is not None:     # helper mode: caller decides
+            self.tainted = set(tainted_params)
+        else:
+            for name in _param_names(fn):
+                if name in ("self", "cls") or name in mark.statics:
+                    continue
+                self.tainted.add(name)
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        """Emit a finding; inside a followed helper the rule becomes its
+        IPC counterpart and the message names the full call chain."""
+        if len(self.chain) > 1:
+            mapped = INTERPROC_RULE.get(rule)
+            if mapped is None:
+                return
+            self.linter.emit(
+                mapped, node,
+                f"{message} [call chain: {format_chain(self.chain)}]")
+        else:
+            self.linter.emit(rule, node, message)
 
     # taintedness of an expression -----------------------------------------
     def _is_tainted(self, expr: ast.AST) -> bool:
@@ -588,7 +618,7 @@ class _TaintWalker:
             self._walk(node.test)
             if self._is_tainted(node.test) \
                     and not self._exempt_test(node.test):
-                self.linter.emit(
+                self._emit(
                     "TRC004", node,
                     "branch condition depends on a traced value")
             for stmt in node.body + node.orelse:
@@ -597,7 +627,7 @@ class _TaintWalker:
         if isinstance(node, ast.For):
             self._walk(node.iter)
             if self._is_tainted(node.iter):
-                self.linter.emit(
+                self._emit(
                     "TRC004", node,
                     "loop iterates over a traced value (unrolls / "
                     "concretizes at trace time)")
@@ -609,7 +639,7 @@ class _TaintWalker:
             self._walk(node.test)
             if self._is_tainted(node.test) \
                     and not self._exempt_test(node.test):
-                self.linter.emit(
+                self._emit(
                     "TRC004", node,
                     "assert on a traced value concretizes it at trace time")
             return
@@ -622,7 +652,7 @@ class _TaintWalker:
             for v in node.values:
                 if isinstance(v, ast.FormattedValue) \
                         and self._is_tainted(v.value):
-                    self.linter.emit(
+                    self._emit(
                         "TRC005", node,
                         "f-string formats a traced value")
                     break
@@ -659,18 +689,18 @@ class _TaintWalker:
         if isinstance(func, ast.Name):
             if func.id in ("int", "float", "bool", "complex") \
                     and any(self._is_tainted(a) for a in call.args):
-                self.linter.emit(
+                self._emit(
                     "TRC001", call,
                     f"{func.id}() on a traced value (host sync + "
                     f"recompile per distinct value)")
             elif func.id == "len" \
                     and any(self._is_tainted(a) for a in call.args):
-                self.linter.emit(
+                self._emit(
                     "TRC003", call, "len() on a traced value")
         elif isinstance(func, ast.Attribute):
             if func.attr in ("item", "tolist") \
                     and self._is_tainted(func.value):
-                self.linter.emit(
+                self._emit(
                     "TRC002", call,
                     f".{func.attr}() forces a device->host sync in "
                     f"traced code")
@@ -681,10 +711,36 @@ class _TaintWalker:
                 if isinstance(root, ast.Name) \
                         and root.id in _NUMPY_ALIASES \
                         and any(self._is_tainted(a) for a in call.args):
-                    self.linter.emit(
+                    self._emit(
                         "TRC007", call,
                         f"host numpy call {_dotted(func)}() on a traced "
                         f"value")
+        self._follow_helper_call(call)
+
+    def _follow_helper_call(self, call: ast.Call) -> None:
+        """Interprocedural step: re-enter a same-module helper that
+        receives tainted arguments, with the call chain recorded (IPC
+        rules fire inside it).  Helpers that are traced contexts — or
+        nested inside one — are covered by their own walk and skipped."""
+        if len(self.chain) >= MAX_CHAIN_DEPTH:
+            return
+        for helper in self.linter.callgraph.resolve_call(call):
+            if id(helper) in self.linter.traced:
+                continue
+            if any(id(enc) in self.linter.traced
+                   for enc in self.linter._enclosing_funcs(helper)):
+                continue
+            tainted = map_tainted_params(call, helper, self._is_tainted)
+            if not tainted:
+                continue
+            key = (id(helper), frozenset(tainted))
+            if key in self.visited:
+                continue
+            self.visited.add(key)
+            _TaintWalker(
+                self.linter, helper, self.mark,
+                chain=self.chain + (func_display_name(helper),),
+                tainted_params=tainted, visited=self.visited).run()
 
 
 # ---------------------------------------------------------------------------

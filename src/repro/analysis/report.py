@@ -55,7 +55,13 @@ def load_baseline(path: str) -> Counter:
     if not path or not os.path.exists(path):
         return Counter()
     with open(path) as f:
-        data = json.load(f)
+        try:
+            data = json.load(f)
+        except json.JSONDecodeError as e:
+            raise ValueError(
+                f"corrupt analysis baseline {path!r}: {e}. Fix the JSON by "
+                "hand or regenerate it with "
+                "`python -m repro.analysis --update-baseline`.") from e
     base: Counter = Counter()
     for entry in data.get("findings", []):
         fp = (entry["rule"], entry["path"], entry.get("snippet", ""))

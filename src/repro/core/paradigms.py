@@ -24,7 +24,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import (TABLE2, LINKS, CostGraph, DeviceProfile,
                                    LinkProfile, build_cost_graph,
-                                   compute_energy, compute_time)
+                                   compute_energy, compute_time,
+                                   kv_cache_bytes_per_token)
 from repro.core.early_exit import (EdgentPlan, ExitProfile, SpinnEstimate,
                                    edgent_plan, spinn_estimate)
 from repro.core.hierarchy import DDNNPlacement, Tier, ddnn_placement
@@ -33,6 +34,38 @@ from repro.core.partition import (CoEdgePlan, DadsPlan, SplitPlan,
                                   coedge_plan, dads_plan, modnn_plan,
                                   neurosurgeon_plan)
 from repro.core.resilience import ResilienceReport, resilience_report
+
+
+@dataclass(frozen=True)
+class AnalyticStepCost:
+    """The per-token analytic cost of one (model, batch, context) workload —
+    the numbers every admission/routing price in this module is built from,
+    exposed as one introspectable record so the static cost cross-check
+    (``repro.analysis.costcheck``) can hold them against what the compiled
+    serving stages actually compute."""
+    model: str
+    batch: int
+    seq_len: int
+    flops_per_token: float         # forward FLOPs amortized per token
+    param_bytes: float             # resident weight bytes (whole model)
+    act_bytes_per_token: float     # boundary activation a partition ships
+    kv_bytes_per_token: float      # KV-cache growth per decoded token
+
+
+def analytic_step_cost(cfg, batch: int, seq_len: int) -> AnalyticStepCost:
+    """Analytic per-token step cost for ``cfg`` at the given workload —
+    the single source the cluster's ``_tok_flops``/KV budgets and the
+    router's pricing derive from (both go through ``build_cost_graph``,
+    so auditing this function audits them)."""
+    g = build_cost_graph(cfg, batch, seq_len)
+    tokens = float(batch * seq_len)
+    return AnalyticStepCost(
+        model=cfg.name, batch=batch, seq_len=seq_len,
+        flops_per_token=g.total_flops / tokens,
+        param_bytes=sum(s.param_bytes for s in g.segments),
+        act_bytes_per_token=(g.segments[0].out_bytes / tokens
+                             if g.segments else 0.0),
+        kv_bytes_per_token=kv_cache_bytes_per_token(cfg))
 
 
 @dataclass(frozen=True)

@@ -1,10 +1,20 @@
 """CLI for the static analyzer: ``python -m repro.analysis``.
 
-Walks ``src/`` (or the given paths), prints findings, and gates on the
-committed baseline (``analysis_baseline.json`` at the repo root): the
-exit code is non-zero only for violations NOT in the baseline, so CI
-fails on new hazards without forcing a big-bang cleanup.  Run with
-``--update-baseline`` to accept the current state.
+Three layers, one gate:
+
+1. **AST + interprocedural lint** over ``src/`` (or the given paths):
+   TRC/PLT rules plus IPC taint chains through same-module helpers.
+2. **Jaxpr stage audit** (default run only, skip with ``--no-jaxpr``):
+   abstractly traces every registered serving stage of a representative
+   cluster + paged scheduler and walks the jaxprs (JXP rules).
+3. **Cost cross-check**: compiled decode FLOPs/token vs the analytic
+   router costs; drift outside ``costcheck.TOLERANCE`` is CST001.
+
+All findings gate on the committed baseline
+(``analysis_baseline.json`` at the repo root): the exit code is non-zero
+only for violations NOT in the baseline.  Run with ``--update-baseline``
+to accept the current state, ``--explain RULEID`` for any rule's
+description, a minimal violating snippet, and its fix.
 """
 from __future__ import annotations
 
@@ -16,6 +26,7 @@ from typing import Optional, Sequence
 from repro.analysis.lint import lint_paths
 from repro.analysis.report import (load_baseline, new_findings,
                                    save_baseline, sort_findings, to_json)
+from repro.analysis.rules import RULES
 
 
 def find_repo_root(start: Optional[str] = None) -> str:
@@ -30,13 +41,41 @@ def find_repo_root(start: Optional[str] = None) -> str:
         cur = parent
 
 
+def explain_rule(rule_id: str) -> str:
+    """Human-readable registry entry for ``--explain``: description plus
+    the minimal violating snippet and its fix."""
+    rule = RULES.get(rule_id.upper())
+    if rule is None:
+        known = ", ".join(sorted(RULES))
+        raise KeyError(f"unknown rule id {rule_id!r} (known: {known})")
+    lines = [f"{rule.id} [{rule.severity}] {rule.name}", "",
+             rule.description]
+    if rule.example:
+        lines += ["", "violates:"]
+        lines += ["    " + ln for ln in rule.example.splitlines()]
+    if rule.fix:
+        lines += ["", f"fix: {rule.fix}"]
+    return "\n".join(lines)
+
+
+def _family_counts(findings) -> str:
+    counts = {}
+    for f in findings:
+        fam = f.rule[:3]
+        counts[fam] = counts.get(fam, 0) + 1
+    return ", ".join(f"{k}={v}" for k, v in sorted(counts.items())) \
+        or "none"
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="static invariant analyzer: recompile hazards, Pallas "
-                    "tile legality, backend-probe hygiene")
+        description="static invariant analyzer: recompile hazards "
+                    "(intra- and interprocedural), Pallas tile legality, "
+                    "jaxpr-level stage audit, cost-graph cross-check")
     ap.add_argument("paths", nargs="*",
-                    help="files/dirs to lint (default: <repo>/src)")
+                    help="files/dirs to lint (default: <repo>/src; giving "
+                         "explicit paths skips the jaxpr/cost layers)")
     ap.add_argument("--baseline", default=None,
                     help="baseline json (default: "
                          "<repo>/analysis_baseline.json)")
@@ -46,7 +85,21 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="emit machine-readable findings json")
     ap.add_argument("--no-gate", action="store_true",
                     help="report only; always exit 0")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the jaxpr stage audit + cost cross-check "
+                         "(AST layers only; much faster)")
+    ap.add_argument("--explain", metavar="RULEID", default=None,
+                    help="print one rule's registry entry, a minimal "
+                         "violating snippet, and its fix, then exit")
     args = ap.parse_args(argv)
+
+    if args.explain:
+        try:
+            print(explain_rule(args.explain))
+        except KeyError as e:
+            print(e.args[0], file=sys.stderr)
+            return 2
+        return 0
 
     root = find_repo_root()
     paths = list(args.paths) or [os.path.join(root, "src")]
@@ -54,6 +107,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                                                   "analysis_baseline.json")
 
     findings = lint_paths(paths, repo_root=root)
+    run_jaxpr = not args.no_jaxpr and not args.paths
+    ratios = {}
+    n_stages = 0
+    if run_jaxpr:
+        from repro.analysis.costcheck import check_cost_graphs
+        from repro.analysis.jaxpr_audit import audit_serving_stack
+        jxp_findings, ctx = audit_serving_stack()
+        cst_findings, ratios = check_cost_graphs(ctx["stack"], ctx["jaxprs"])
+        findings = findings + jxp_findings + cst_findings
+        n_stages = ctx["n_stages"]
+
     if args.as_json:
         print(to_json(findings))
     if args.update_baseline:
@@ -68,8 +132,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         for f in sort_findings(fresh):
             print(f.render())
     n_err = sum(1 for f in fresh if f.severity == "error")
+    if run_jaxpr:
+        rs = [v["ratio"] for v in ratios.values()]
+        band = (f"cost ratios {min(rs):.2f}-{max(rs):.2f} over "
+                f"{len(rs)} arena(s)") if rs else "no arenas costed"
+        print(f"jaxpr audit: {n_stages} stage(s) traced, {band}",
+              file=sys.stderr)
     print(f"analysis: {len(findings)} finding(s), {known} baselined, "
-          f"{len(fresh)} new ({n_err} error(s))", file=sys.stderr)
+          f"{len(fresh)} new ({n_err} error(s)) "
+          f"[families: {_family_counts(findings)}]", file=sys.stderr)
     if args.no_gate:
         return 0
     return 1 if fresh else 0

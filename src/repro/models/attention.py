@@ -100,7 +100,21 @@ def _sdpa(q, k, v, mask, scale):
 # default "dense" keeps the baseline implementation the §Roofline table
 # measures.
 import os as _os
-ATTN_IMPL = _os.environ.get("REPRO_ATTN", "dense")
+
+
+def _env_impl(var: str, default: str, legal: tuple) -> str:
+    """Read an impl-selection env toggle, rejecting unknown values at
+    import: a typo (REPRO_PAGED_ATTN=kernal) must not silently fall
+    through to the default path."""
+    val = _os.environ.get(var, default)
+    if val not in legal:
+        raise ValueError(
+            f"{var}={val!r} is not a known implementation; legal values: "
+            + ", ".join(repr(v) for v in legal))
+    return val
+
+
+ATTN_IMPL = _env_impl("REPRO_ATTN", "dense", ("dense", "chunked"))
 CHUNKED_THRESHOLD = 2048   # use chunked path when Sq*Skv exceeds threshold^2
 
 
@@ -257,7 +271,7 @@ def gqa_decode(cfg, params, x, cache_k, cache_v, position, *, window: int = 0):
 # Toggle: REPRO_PAGED_ATTN=kernel routes the score/softmax/context through
 # the Pallas paged kernels in repro.kernels.paged_attention (block-table
 # gathers via scalar prefetch); default "jnp" keeps the reference path.
-PAGED_ATTN_IMPL = _os.environ.get("REPRO_PAGED_ATTN", "jnp")
+PAGED_ATTN_IMPL = _env_impl("REPRO_PAGED_ATTN", "jnp", ("jnp", "kernel"))
 
 
 class PagedKV:

@@ -53,11 +53,11 @@ from repro.serving.multipool import (ModelEntry, ModelGroup,
 from repro.serving.router import AdmissionRouter
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
                                      SchedulerConfig, SlotSnapshot,
-                                     StepReport)
+                                     StageSpec, StepReport)
 
 __all__ = ["ServeConfig", "ServingEngine", "make_serve_step",
            "prime_whisper_cross_cache", "ContinuousBatchScheduler",
-           "Request", "SchedulerConfig", "SlotSnapshot", "StepReport",
-           "AdmissionRouter", "ClusterConfig", "ClusterRequest",
-           "TieredServingCluster", "derive_tier_slots", "ModelEntry",
-           "ModelGroup", "MultiModelScheduler", "SpecPair"]
+           "Request", "SchedulerConfig", "SlotSnapshot", "StageSpec",
+           "StepReport", "AdmissionRouter", "ClusterConfig",
+           "ClusterRequest", "TieredServingCluster", "derive_tier_slots",
+           "ModelEntry", "ModelGroup", "MultiModelScheduler", "SpecPair"]

@@ -67,17 +67,17 @@ from typing import Dict, List, Optional, Set, Union
 import numpy as np
 
 from repro.core.cost_model import (DeviceProfile, LinkProfile,
-                                   build_cost_graph, compute_time,
-                                   kv_cache_bytes_per_token)
+                                   compute_time, kv_cache_bytes_per_token)
 from repro.core.offload import compression_decision, measured_tx_time
-from repro.core.paradigms import AdmissionDecision, Scenario, _tier_profile
+from repro.core.paradigms import (AdmissionDecision, Scenario, _tier_profile,
+                                  analytic_step_cost)
 from repro.core.resilience import resilience_report
 from repro.serving.multipool import (ModelGroup, MultiModelScheduler,
                                      SpecPair)
 from repro.serving.router import AdmissionRouter
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
                                      SchedulerConfig, SlotSnapshot,
-                                     StepReport)
+                                     StageSpec, StepReport)
 
 
 @dataclasses.dataclass
@@ -317,9 +317,9 @@ class TieredServingCluster:
         self._tok_flops: Dict[str, float] = {}
         kv_slot: Dict[str, float] = {}
         for name, pc in plan_cfgs.items():
-            g = build_cost_graph(pc, 1, cfg.max_len)
-            self._tok_flops[name] = g.total_flops / cfg.max_len
-            kv_slot[name] = kv_cache_bytes_per_token(pc) * cfg.max_len
+            c = analytic_step_cost(pc, 1, cfg.max_len)
+            self._tok_flops[name] = c.flops_per_token
+            kv_slot[name] = c.kv_bytes_per_token * cfg.max_len
 
         sc = self.scenario
         scfg = SchedulerConfig(
@@ -1051,6 +1051,15 @@ class TieredServingCluster:
                for n, tr in self.tiers.items()}
         for m, pair in self._spec_pairs.items():
             out[f"spec:{m}"] = pair.jit_cache_sizes()
+        return out
+
+    def audit_stages(self) -> Dict[str, Dict[str, "StageSpec"]]:
+        """Per-tier stage registries for the jaxpr auditor, plus one
+        ``"spec:<model>"`` entry per instantiated speculative bridge —
+        same key scheme as ``jit_cache_sizes``."""
+        out = {n: tr.sched.audit_stages() for n, tr in self.tiers.items()}
+        for m, pair in self._spec_pairs.items():
+            out[f"spec:{m}"] = pair.audit_stages()
         return out
 
     def stats(self) -> Dict[str, object]:

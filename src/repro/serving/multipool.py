@@ -47,7 +47,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
-                                     SchedulerConfig, StepReport)
+                                     SchedulerConfig, StageSpec, StepReport)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -289,6 +289,16 @@ class MultiModelScheduler:
         for name, pool in self.pools.items():
             for stage, v in pool.jit_cache_sizes().items():
                 out[f"{name}/{stage}"] = v
+        return out
+
+    def audit_stages(self) -> Dict[str, StageSpec]:
+        """Flattened ``"model/stage" -> StageSpec`` over every arena, for
+        the jaxpr auditor — same key scheme as ``jit_cache_sizes``."""
+        out: Dict[str, StageSpec] = {}
+        for name, pool in self.pools.items():
+            for stage, spec in pool.audit_stages().items():
+                key = f"{name}/{stage}"
+                out[key] = dataclasses.replace(spec, name=key)
         return out
 
 

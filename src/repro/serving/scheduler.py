@@ -79,7 +79,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Dict, FrozenSet, List, Optional
+from typing import (Any, Callable, Dict, FrozenSet, List, Optional, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -261,6 +261,27 @@ class _PendingPrefill:
     # so ``cache`` is None in paged mode.
     start: Any = None                  # np [n_slots] int32
     start_d: Any = None                # device copy
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One registered jitted stage, described abstractly for the jaxpr
+    auditor (``repro.analysis.jaxpr_audit``): the jitted callable plus the
+    exact abstract argument shapes the serving loop feeds it, so the
+    auditor can ``jax.make_jaxpr`` / ``jax.eval_shape`` the stage without
+    executing anything on device.
+
+    ``cache_in`` names the argument position holding the cache pytree and
+    ``cache_out`` selects the returned cache from the stage's output —
+    together they let the auditor prove the cache's leaf dtypes survive
+    the stage unchanged (bit-parity: no silent widening).  Stages that
+    only *read* the cache (export gathers) leave ``cache_out`` as None."""
+    name: str
+    fn: Any                                    # the jitted callable
+    args: Tuple[Any, ...]                      # ShapeDtypeStruct pytrees
+    donate_argnums: Tuple[int, ...] = ()
+    cache_in: Optional[int] = None             # argnum of the cache pytree
+    cache_out: Optional[Callable[[Any], Any]] = None   # out -> cache pytree
 
 
 class ContinuousBatchScheduler:
@@ -1799,3 +1820,108 @@ class ContinuousBatchScheduler:
             sizes["propose"] = size(self._propose)
             sizes["verify"] = size(self._verify)
         return sizes
+
+    def audit_stages(self) -> Dict[str, "StageSpec"]:
+        """Registry of every jitted stage this arena dispatches, with the
+        exact abstract argument shapes the serving loop feeds it — the
+        contract the jaxpr auditor (``repro.analysis.jaxpr_audit``) traces
+        against.  Mirrors ``jit_cache_sizes()`` (plus the init/merge
+        helpers); segment/probe/finalize shapes are chained through
+        ``jax.eval_shape`` so hidden-state widths come from the model, not
+        a guess.  The encdec cross-cache primer is NOT registered: its
+        frames argument is per-request-shaped, so there is no single
+        abstract signature to audit."""
+        cfg, b = self.cfg, self.cfg.n_slots
+        i32, f32 = jnp.int32, jnp.float32
+        S = jax.ShapeDtypeStruct
+        params_s = jax.tree.map(lambda a: S(jnp.shape(a), a.dtype),
+                                self.params)
+        cache_s = jax.eval_shape(self._init_cache)
+        key_s = S(self._zero_key.shape, self._zero_key.dtype)
+        counters_s = S((self._n_exits + 1,), i32)
+        bvec_i, bvec_b = S((b,), i32), S((b,), jnp.bool_)
+        tok1, last_s = S((b, 1), i32), S((b, self._vocab), f32)
+        scalar_i, scalar_f = S((), i32), S((), f32)
+        paged = cfg.paged
+        tbl_s = S((b, self._pps), i32) if paged else None
+
+        stages: Dict[str, StageSpec] = {
+            "init_cache": StageSpec("init_cache", self._init_cache, (),
+                                    cache_out=lambda o: o),
+            "fresh_last": StageSpec("fresh_last", self._fresh_last, ()),
+        }
+        if self._reset_states is not None:
+            stages["reset_states"] = StageSpec(
+                "reset_states", self._reset_states, (cache_s, bvec_b),
+                donate_argnums=(0,), cache_in=0, cache_out=lambda o: o)
+        if not paged:
+            stages["merge"] = StageSpec(
+                "merge", self._merge, (bvec_b, cache_s, cache_s),
+                donate_argnums=(2,), cache_in=2, cache_out=lambda o: o)
+        chunk_s = S((b, cfg.prefill_chunk), i32)
+        if paged:
+            pf_args = (params_s, cache_s, chunk_s, scalar_i, bvec_i,
+                       bvec_i, last_s, tbl_s)
+            pf_donate = (1, 6)
+        else:
+            pf_args = (params_s, cache_s, chunk_s, scalar_i, bvec_i, last_s)
+            pf_donate = (1, 5)
+        stages["prefill"] = StageSpec(
+            "prefill", self._prefill_chunk, pf_args,
+            donate_argnums=pf_donate, cache_in=1, cache_out=lambda o: o[0])
+        if cfg.segmented:
+            x = tok1
+            for seg in self._segments:
+                fn = self._segment_fns[seg.index]
+                args = (params_s, cache_s, x, bvec_i, bvec_b, bvec_b,
+                        tbl_s) if paged \
+                    else (params_s, cache_s, x, bvec_i, bvec_b)
+                stages[f"segment{seg.index}"] = StageSpec(
+                    f"segment{seg.index}", fn, args, donate_argnums=(1,),
+                    cache_in=1, cache_out=lambda o: o[1])
+                x = jax.eval_shape(fn, *args)[0]
+                if seg.exit_index is not None:
+                    stages[f"probe{seg.exit_index}"] = StageSpec(
+                        f"probe{seg.exit_index}",
+                        self._probe_fns[seg.exit_index],
+                        (params_s, x, bvec_b, bvec_i, scalar_f))
+            stages["finalize"] = StageSpec(
+                "finalize", self._finalize,
+                (params_s, x, counters_s, bvec_i, bvec_b, key_s, scalar_i),
+                donate_argnums=(2,))
+        else:
+            dec_args = (params_s, cache_s, tok1, bvec_i, bvec_b, counters_s,
+                        scalar_f, key_s, scalar_i)
+            if paged:
+                dec_args = dec_args + (tbl_s,)
+            stages["decode"] = StageSpec(
+                "decode", self._decode, dec_args, donate_argnums=(1, 5),
+                cache_in=1, cache_out=lambda o: o[2])
+        if paged:
+            exp_args = (cache_s, S((self._pps,), i32), scalar_i)
+            rows_s = jax.eval_shape(self._export_rows, *exp_args)
+            imp_args = (cache_s, rows_s, S((self._pps,), i32), scalar_i)
+        else:
+            exp_args = (cache_s, scalar_i)
+            rows_s = jax.eval_shape(self._export_rows, *exp_args)
+            imp_args = (cache_s, rows_s, scalar_i)
+        stages["export_rows"] = StageSpec(
+            "export_rows", self._export_rows, exp_args, cache_in=0)
+        stages["import_rows"] = StageSpec(
+            "import_rows", self._import_rows, imp_args,
+            donate_argnums=(0,), cache_in=0, cache_out=lambda o: o)
+        if self._spec_k:
+            k = self._spec_k
+            pro_args = (params_s, cache_s, bvec_i, bvec_i, bvec_b, bvec_i)
+            ver_args = (params_s, cache_s, S((b, k), i32), bvec_i, bvec_b,
+                        bvec_i)
+            if paged:
+                pro_args = pro_args + (tbl_s,)
+                ver_args = ver_args + (tbl_s,)
+            stages["propose"] = StageSpec(
+                "propose", self._propose, pro_args, donate_argnums=(1,),
+                cache_in=1, cache_out=lambda o: o[0])
+            stages["verify"] = StageSpec(
+                "verify", self._verify, ver_args, donate_argnums=(1,),
+                cache_in=1, cache_out=lambda o: o[0])
+        return stages
