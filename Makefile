@@ -15,11 +15,15 @@
 #   make bench-spec  cross-tier speculative decoding: lossless vs target-only
 #                    greedy, measured acceptance, decode-rate + p50 wins on
 #                    high-RTT links (assertion-gated, part of make check)
+#   make bench-pipeline  overlapped decode pipeline vs sync poll(): smoke
+#                    trace asserting overlap speedup + bit-parity (part of
+#                    make check); bench-pipeline-full runs the 10^4-request
+#                    acceptance trace with the 1.3x floor
 #   make bench-targets  fail if benchmarks/run.py registers a bench with no
 #                    Makefile target (consistency gate, part of make check)
 .PHONY: test test-fast lint analyze check serve-bench bench-smoke \
 	bench-exit bench-multi bench-migrate bench-paged bench-spec \
-	bench-targets
+	bench-pipeline bench-pipeline-full bench-targets
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
@@ -34,7 +38,7 @@ lint:
 analyze:
 	PYTHONPATH=src python -m repro.analysis
 
-check: lint analyze bench-targets test-fast bench-spec
+check: lint analyze bench-targets test-fast bench-spec bench-pipeline
 
 serve-bench:
 	python benchmarks/serving_bench.py
@@ -56,6 +60,12 @@ bench-paged:
 
 bench-spec:
 	python benchmarks/spec_decode_bench.py
+
+bench-pipeline:
+	python benchmarks/pipeline_bench.py --requests 600 --min-speedup 1.1
+
+bench-pipeline-full:
+	python benchmarks/pipeline_bench.py
 
 bench-targets:
 	python benchmarks/check_targets.py

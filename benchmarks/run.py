@@ -90,7 +90,8 @@ def main() -> None:
                             runtime_micro, serving_bench,
                             tiered_serving_bench, exit_bench,
                             multi_model_bench, migration_bench,
-                            paged_kv_bench, spec_decode_bench)
+                            paged_kv_bench, spec_decode_bench,
+                            pipeline_bench)
     from benchmarks.common import emit_csv
 
     table1_models.run()
@@ -109,7 +110,9 @@ def main() -> None:
     # the paged KV arena (capacity at equal bytes + prefix reuse), then
     # cross-tier speculative decoding (device draft, cloud batched verify:
     # lossless vs target-only greedy, measured acceptance, decode-rate and
-    # p50 wins on high-RTT links)
+    # p50 wins on high-RTT links), and the overlapped decode pipeline
+    # (double-buffered dispatch + deferred batched readback vs the
+    # synchronous poll loop: bit-parity and overlap speedup)
     print()
     serving = serving_bench.run(requests=6, slots=2, prompt_len=8, max_new=8)
     print()
@@ -126,6 +129,9 @@ def main() -> None:
     paged_kv = paged_kv_bench.run(max_new=7)
     print()
     spec_decode = spec_decode_bench.run(max_new=12)
+    print()
+    pipeline = pipeline_bench.run(requests=200, max_new=12,
+                                  min_speedup=1.0)
     print()
     emit_csv()
 
@@ -145,6 +151,7 @@ def main() -> None:
         "migration": migration,
         "paged_kv": paged_kv,
         "spec_decode": spec_decode,
+        "pipeline": pipeline,
         "analysis_violations": _analysis_violations(),
     }
     trajectory = [e for e in _load_trajectory()

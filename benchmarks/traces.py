@@ -1,0 +1,11 @@
+"""Benchmark-side alias for the shared trace generators.
+
+The real implementations live in ``repro.serving.traces`` (on
+``PYTHONPATH=src``); this shim lets benchmark scripts and notebooks
+``import traces`` without caring about the package layout.  Every serving
+bench (poisson, tiered, pipeline) should draw its arrivals from here
+instead of hand-rolling ``np.cumsum(exponential)``.
+"""
+from repro.serving.traces import (TRACE_KINDS, diurnal_trace,  # noqa: F401
+                                  flash_crowd_trace, make_trace,
+                                  mixed_slo_trace, poisson_trace)

@@ -9,7 +9,8 @@
 * :mod:`repro.analysis.costcheck` — compiled decode FLOPs vs the analytic
   router costs, gated on a committed tolerance band (CST001).
 * :mod:`repro.analysis.guards` — runtime guards tests attach to live
-  schedulers: ``no_recompile``, ``guard_polling`` and ``SlotAudit``.
+  schedulers: ``no_recompile``, ``guard_polling``, ``guard_sync_budget`` and
+  ``SlotAudit``.
 * :mod:`repro.analysis.report` — findings, rendering and the committed
   baseline (CI gates on NEW violations only).
 
@@ -22,7 +23,8 @@ from repro.analysis.costcheck import (TOLERANCE, check_cost_graphs,
                                       decode_flops_per_token, jaxpr_bytes,
                                       jaxpr_flops)
 from repro.analysis.guards import (GuardError, SlotAudit, guard_polling,
-                                   no_recompile, transfer_guard)
+                                   guard_sync_budget, no_recompile,
+                                   transfer_guard)
 from repro.analysis.jaxpr_audit import (audit_registry, audit_serving_stack,
                                         audit_stage, build_audit_stack)
 from repro.analysis.lint import lint_file, lint_paths, lint_source
@@ -34,7 +36,7 @@ __all__ = [
     "CallGraph", "Finding", "GuardError", "RULES", "Rule", "SlotAudit",
     "TOLERANCE", "audit_registry", "audit_serving_stack", "audit_stage",
     "build_audit_stack", "check_cost_graphs", "decode_flops_per_token",
-    "guard_polling", "jaxpr_bytes", "jaxpr_flops", "lint_file",
+    "guard_polling", "guard_sync_budget", "jaxpr_bytes", "jaxpr_flops", "lint_file",
     "lint_paths", "lint_source", "load_baseline", "map_tainted_params",
     "new_findings", "no_recompile", "save_baseline", "sort_findings",
     "to_json", "transfer_guard",

@@ -11,6 +11,11 @@ nothing):
   host<->device transfers inside ``poll()`` hard errors.  Intended syncs
   in the hot loop must be explicit (``jax.device_get`` /
   ``jax.device_put``) so every round-trip is visible in the source.
+* :func:`guard_sync_budget` — count the EXPLICIT ``jax.device_get``
+  syncs each ``poll()`` performs and assert the count never exceeds
+  ``bound``.  The overlapped pipeline's contract is at most one device
+  sync per readback window (the batched ring readback); this guard makes
+  a regression back to per-token syncs a hard test failure.
 * :class:`SlotAudit` — wraps ``poll()`` and re-checks slot-accounting
   invariants after every round: free+staged+live slots partition the
   pool, positions/steps stay in range, booking ledgers balance, and at
@@ -99,7 +104,21 @@ def guard_polling(target: Any, mode: str = "disallow") -> Iterator[Any]:
     an implicit sync inside the scheduler/cluster hot loop is a hard
     error, while setup/teardown (submit, flush, result reads) outside
     ``poll()`` stays unrestricted.  Warm the jit caches with one poll
-    BEFORE entering — compilation itself may transfer."""
+    BEFORE entering — compilation itself may transfer.
+
+    Legal (explicit) sync points inside ``poll()``:
+
+    * synchronous pools — the one ``jax.device_get`` of the step's
+      sampled tokens, plus the periodic exit-counter flush;
+    * async pools (``cfg.async_decode``) — the one BATCHED
+      ``jax.device_get`` of a readback window's token ring (one sync per
+      ``readback_interval`` decode steps), the counter flush, and the
+      host->device uploads of a fresh window's slot state
+      (``jnp.asarray`` on host numpy, an explicit put).
+
+    Everything else — ``.item()``, ``float()``, ``np.asarray`` straight
+    on a traced output — is implicit and trips the guard (and the SYN
+    analyzer rules flag it statically)."""
     orig = target.poll
 
     def guarded(*a: Any, **kw: Any):
@@ -111,6 +130,69 @@ def guard_polling(target: Any, mode: str = "disallow") -> Iterator[Any]:
         yield target
     finally:
         target.poll = orig
+
+
+@contextlib.contextmanager
+def guard_sync_budget(target: Any, *, bound: int = 1,
+                      count_puts: bool = False) -> Iterator[Dict[str, int]]:
+    """Patch ``target.poll`` so each call counts its explicit
+    ``jax.device_get`` syncs (and ``jax.device_put`` uploads when
+    ``count_puts``) and raise :class:`GuardError` the moment one poll
+    exceeds ``bound``.
+
+    This is the overlapped pipeline's quantitative contract: at most ONE
+    device readback per readback window — the batched token-ring fetch.
+    A sync scheduler pays one ``device_get`` per decoded token, so
+    attaching this guard with ``bound=1`` to a decode-phase async pool
+    both passes and FAILS if someone reintroduces a per-step sync.
+
+    Caveats: the periodic exit-counter flush is itself a ``device_get``,
+    so polls where ``flush_every`` fires need ``bound >= 2`` — tests
+    should either raise the bound or configure ``flush_every`` past the
+    guarded span.  Prefill/admission polls also read back exit probes;
+    attach the guard around the DECODE phase (queue drained, prefills
+    done) for a tight bound.
+
+    Yields a stats dict (``polls``, ``syncs``, ``max_per_poll``) that
+    keeps updating while the guard is attached."""
+    orig_poll = target.poll
+    stats = {"polls": 0, "syncs": 0, "max_per_poll": 0}
+
+    def counted(*a: Any, **kw: Any):
+        real_get, real_put = jax.device_get, jax.device_put
+        n = [0]
+
+        def spy_get(x, *ga: Any, **gkw: Any):
+            n[0] += 1
+            return real_get(x, *ga, **gkw)
+
+        def spy_put(x, *pa: Any, **pkw: Any):
+            n[0] += 1
+            return real_put(x, *pa, **pkw)
+
+        jax.device_get = spy_get
+        if count_puts:
+            jax.device_put = spy_put
+        try:
+            rep = orig_poll(*a, **kw)
+        finally:
+            jax.device_get = real_get
+            jax.device_put = real_put
+        stats["polls"] += 1
+        stats["syncs"] += n[0]
+        stats["max_per_poll"] = max(stats["max_per_poll"], n[0])
+        if n[0] > bound:
+            raise GuardError(
+                f"guard_sync_budget(bound={bound}): poll {stats['polls']} "
+                f"performed {n[0]} device sync(s) — the overlapped pipeline "
+                f"allows at most {bound} per readback window")
+        return rep
+
+    target.poll = counted
+    try:
+        yield stats
+    finally:
+        target.poll = orig_poll
 
 
 # ---------------------------------------------------------------------------

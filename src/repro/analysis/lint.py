@@ -23,6 +23,13 @@ Per module it runs three passes:
    module-level ban on ``jax.default_backend()`` probes outside
    ``kernels/backend.py``.
 
+4. **Poll hot-loop sync hygiene** (SYN rules) — in classes that define
+   ``poll()`` and register jitted stages on ``self``, the hot methods
+   must not concretize stage outputs implicitly (``.item()``, ``int()``,
+   ``np.asarray`` on a device value) or stall the dispatch queue
+   (``block_until_ready``); the only legal readback is an explicit
+   ``jax.device_get``, batched per readback window.
+
 Dims are resolved through literal assignments, parameter defaults and
 simple arithmetic; anything unresolvable is skipped, never guessed.
 """
@@ -49,6 +56,10 @@ _NUMPY_ALIASES = {"np", "numpy", "onp"}
 _DEVICE_CONSTRUCTORS = {"array", "asarray", "zeros", "ones", "full", "arange",
                         "linspace", "eye", "zeros_like", "ones_like",
                         "full_like"}
+# poll-hot-loop method names (SYN rules): the scheduler/cluster round
+# entry points plus their dispatch/commit helpers
+_HOT_METHOD_NAMES = {"poll", "step", "tick", "prefill_poll"}
+_HOT_METHOD_PREFIXES = ("_step", "_poll", "_dispatch", "_commit")
 
 
 def _dotted(node: ast.AST) -> str:
@@ -502,11 +513,75 @@ class ModuleLinter:
                       f"index_map returns {len(index_map.body.elts)} coords "
                       f"for a rank-{len(shape.elts)} block")
 
+    # -- pass 4: host-sync hazards in poll hot loops (SYN rules) -------------
+    def check_poll_sync(self) -> None:
+        """Flag implicit device syncs inside the serving poll hot loop.
+
+        Scope: classes that define ``poll`` AND assign jitted stages to
+        ``self`` attributes (``self._step = jax.jit(...)``).  Inside that
+        class's hot methods (``poll``/``step``/``tick``/``prefill_poll``
+        and ``_step*``/``_poll*``/``_dispatch*``/``_commit*`` helpers),
+        values produced by calling those stages are *device* values:
+        concretizing one without an explicit ``jax.device_get`` is a
+        hidden host sync (SYN001/SYN002), and ``block_until_ready`` is a
+        pipeline stall (SYN003).  ``jax.device_get(...)`` launders the
+        taint — the legal batched-readback idiom
+        ``np.asarray(jax.device_get(ring))`` never fires."""
+        for cls in ast.walk(self.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            methods = [n for n in cls.body
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))]
+            if not any(m.name == "poll" for m in methods):
+                continue
+            jit_attrs = self._jit_stage_attrs(cls)
+            if not jit_attrs:
+                continue
+            dev_attrs = self._device_state_attrs(cls, jit_attrs)
+            for m in methods:
+                if m.name in _HOT_METHOD_NAMES \
+                        or m.name.startswith(_HOT_METHOD_PREFIXES):
+                    _PollSyncWalker(self, m, jit_attrs, dev_attrs).run()
+
+    @staticmethod
+    def _jit_stage_attrs(cls: ast.ClassDef) -> Set[str]:
+        """``self.x`` attributes assigned from ``jax.jit(...)`` anywhere
+        in the class — the pool's registered jitted stages."""
+        out: Set[str] = set()
+        for node in ast.walk(cls):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call) \
+                    and _is_jit(_dotted(node.value.func)):
+                for t in node.targets:
+                    d = _dotted(t)
+                    if d.startswith("self."):
+                        out.add(d)
+        return out
+
+    @staticmethod
+    def _device_state_attrs(cls: ast.ClassDef, jit_attrs: Set[str]
+                            ) -> Set[str]:
+        """``self.x`` attributes assigned (anywhere in the class) directly
+        from a jitted-stage call — cross-method device state like a cache
+        handle or token ring."""
+        out: Set[str] = set()
+        for node in ast.walk(cls):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call) \
+                    and _dotted(node.value.func) in jit_attrs:
+                for t in node.targets:
+                    d = _dotted(t)
+                    if d.startswith("self."):
+                        out.add(d)
+        return out
+
     # -- driver -------------------------------------------------------------
     def run(self) -> List[Finding]:
         self.discover_traced()
         self.check_traced()
         self.check_pallas()
+        self.check_poll_sync()
         return self.findings
 
 
@@ -741,6 +816,127 @@ class _TaintWalker:
                 self.linter, helper, self.mark,
                 chain=self.chain + (func_display_name(helper),),
                 tainted_params=tainted, visited=self.visited).run()
+
+
+class _PollSyncWalker:
+    """Walks one poll-hot method, tracking which local values are outputs
+    of the class's jitted stages (device values) and firing the SYN rules
+    on implicit host syncs.  ``jax.device_get(...)`` launders the taint:
+    the batched-readback idiom ``np.asarray(jax.device_get(x))`` and the
+    explicit ``int(jax.device_get(x))`` commit read are both legal."""
+
+    _DEVICE_GET = {"jax.device_get", "device_get"}
+
+    def __init__(self, linter: ModuleLinter, fn: FuncNode,
+                 jit_attrs: Set[str], dev_attrs: Set[str]):
+        self.linter = linter
+        self.fn = fn
+        self.jit_attrs = jit_attrs
+        self.dev = set(dev_attrs)          # dotted self.x device state
+        self.tainted: Set[str] = set()     # local names holding device vals
+
+    # taintedness of an expression ------------------------------------------
+    def _tainted(self, expr: ast.AST) -> bool:
+        if isinstance(expr, ast.Call):
+            d = _dotted(expr.func)
+            if d in self._DEVICE_GET:
+                return False               # explicit sync launders
+            if d in self.jit_attrs:
+                return True                # jitted-stage output
+            return any(self._tainted(c)
+                       for c in ast.iter_child_nodes(expr))
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in _STATIC_ATTRS:
+                return False
+            if _dotted(expr) in self.dev:
+                return True
+            return self._tainted(expr.value)
+        if isinstance(expr, ast.Name):
+            return expr.id in self.tainted
+        return any(self._tainted(c) for c in ast.iter_child_nodes(expr))
+
+    def _taint_target(self, target: ast.AST) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._taint_target(el)
+            return
+        if isinstance(target, ast.Starred):
+            self._taint_target(target.value)
+            return
+        d = _dotted(target)
+        if d.startswith("self."):
+            self.dev.add(d)
+        elif isinstance(target, ast.Name):
+            self.tainted.add(target.id)
+        elif isinstance(target, ast.Subscript):
+            self._taint_target(target.value)
+
+    # walk -------------------------------------------------------------------
+    def run(self) -> None:
+        for stmt in self.fn.body:
+            self._walk(stmt)
+
+    def _walk(self, node: ast.AST) -> None:
+        if isinstance(node, _FUNC_TYPES):
+            return                         # nested defs: out of scope
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            value = node.value
+            if value is not None:
+                self._walk(value)
+                if self._tainted(value):
+                    targets = node.targets if isinstance(node, ast.Assign) \
+                        else [node.target]
+                    for t in targets:
+                        self._taint_target(t)
+            return
+        if isinstance(node, ast.Call):
+            self._check_call(node)
+            for child in ast.iter_child_nodes(node):
+                self._walk(child)
+            return
+        for child in ast.iter_child_nodes(node):
+            self._walk(child)
+
+    def _check_call(self, call: ast.Call) -> None:
+        func = call.func
+        where = f"in poll hot method '{self.fn.name}'"
+        if isinstance(func, ast.Name):
+            if func.id in ("int", "float", "bool") \
+                    and any(self._tainted(a) for a in call.args):
+                self.linter.emit(
+                    "SYN001", call,
+                    f"{func.id}() on a jitted-stage output {where}: hidden "
+                    f"per-call device sync (wrap in jax.device_get at the "
+                    f"batched readback point)")
+            return
+        if not isinstance(func, ast.Attribute):
+            return
+        d = _dotted(func)
+        if func.attr in ("item", "tolist") and self._tainted(func.value):
+            self.linter.emit(
+                "SYN001", call,
+                f".{func.attr}() on a jitted-stage output {where}: hidden "
+                f"per-call device sync (defer to the batched "
+                f"jax.device_get readback)")
+            return
+        if func.attr == "block_until_ready" \
+                or d == "jax.block_until_ready":
+            self.linter.emit(
+                "SYN003", call,
+                f"block_until_ready {where} stalls the host per dispatch "
+                f"— the batched readback already synchronizes")
+            return
+        root = func.value
+        while isinstance(root, ast.Attribute):
+            root = root.value
+        if isinstance(root, ast.Name) and root.id in _NUMPY_ALIASES \
+                and any(self._tainted(a) for a in call.args):
+            self.linter.emit(
+                "SYN002", call,
+                f"{d}() on a jitted-stage output {where} without an "
+                f"explicit jax.device_get: hidden blocking transfer "
+                f"(use np.asarray(jax.device_get(x)) at the readback "
+                f"boundary)")
 
 
 # ---------------------------------------------------------------------------

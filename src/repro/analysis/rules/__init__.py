@@ -15,6 +15,12 @@ violating snippet plus its fix.  The ids are grouped:
 * ``CST***`` — cost-graph honesty: compiled-stage FLOPs vs the analytic
   per-tier costs the admission router prices with
   (``analysis/costcheck.py``).
+* ``SYN***`` — host-sync hazards in the serving poll hot loop: methods of
+  a polling class (``poll``/``step``/``tick``/``prefill_poll`` and the
+  ``_step*``/``_poll*``/``_dispatch*``/``_commit*`` helpers) must not
+  concretize jitted-stage outputs implicitly; the only legal readback is
+  an explicit ``jax.device_get`` (the overlapped pipeline batches ONE per
+  readback window).
 
 ``docs/invariants.md`` lists every rule with its enforced invariant and
 how to run / append the committed baseline.
@@ -190,6 +196,32 @@ _ALL = [
          fix="re-derive core/cost_model._layer_flops for the changed "
              "architecture (or widen analysis/costcheck.TOLERANCE with a "
              "written justification in docs/invariants.md)"),
+    Rule("SYN001", "poll-implicit-concretize", "error",
+         ".item()/.tolist()/int()/float() directly on a jitted-stage "
+         "output inside a poll hot method: a hidden per-call device sync "
+         "that serializes the overlapped decode pipeline",
+         example="class Pool:\n    def poll(self):\n        out = self."
+                 "_decode(self.cache)\n        return out.item()",
+         fix="defer the readback and batch it: tok = int(jax.device_get"
+             "(out)) at the ONE intended sync point per readback window"),
+    Rule("SYN002", "poll-host-numpy-sync", "error",
+         "np.* called on a jitted-stage output inside a poll hot method "
+         "without an explicit jax.device_get: the conversion is a hidden "
+         "blocking transfer the transfer guard only catches at runtime",
+         example="class Pool:\n    def poll(self):\n        out = self."
+                 "_decode(self.cache)\n        return np.asarray(out)",
+         fix="make the sync explicit and batched: np.asarray(jax."
+             "device_get(out)) — one readback per window, visible in "
+             "the source"),
+    Rule("SYN003", "poll-block-until-ready", "error",
+         ".block_until_ready() inside a poll hot method stalls the host "
+         "on every dispatch, defeating double-buffered decode (the device "
+         "queue should stay >=1 window deep)",
+         example="class Pool:\n    def poll(self):\n        out = self."
+                 "_decode(self.cache)\n        out.block_until_ready()",
+         fix="drop the barrier from the hot loop; the batched jax."
+             "device_get at the readback boundary already synchronizes "
+             "(benchmarks may block OUTSIDE poll)"),
     Rule("PARSE", "unparseable-file", "error",
          "file failed to parse; the analyzer cannot vouch for it",
          example="def broken(:",

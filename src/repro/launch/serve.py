@@ -60,6 +60,10 @@ Flags:
     --slots       [poisson] decode slot-pool size (concurrent requests)
     --rate        [poisson] mean arrival rate, requests/second
     --requests    [poisson] total requests in the trace
+    --async-decode  [poisson] overlapped decode pipeline (on-device
+                  sampling ring, double-buffered dispatch, deferred
+                  batched readback; see docs/pipeline.md)
+    --readback-interval  [async] decode steps per batched host readback
     --prefill-chunk  tokens per jitted prefill dispatch
     --tiered      [poisson] route through cloud/edge/device pools
     --scenario    [tiered] hardware scenario preset (default |
@@ -99,7 +103,7 @@ from repro.models import Model, ShardCtx
 from repro.serving import (ClusterConfig, ContinuousBatchScheduler,
                            ModelGroup, MultiModelScheduler, Request,
                            ServeConfig, ServingEngine, SchedulerConfig,
-                           TieredServingCluster)
+                           TieredServingCluster, poisson_trace)
 
 SCENARIOS = {"default": Scenario.default,
              "degraded-wan": Scenario.degraded_wan,
@@ -130,11 +134,10 @@ def _print_migration(stats):
 
 
 def _poisson_trace(rs, rate: float, n_requests: int, prompt_len: int):
-    """Exponential inter-arrival gaps + uniform prompt lengths — the shared
-    open-loop trace every Poisson driver replays."""
-    arrivals = np.cumsum(rs.exponential(1.0 / rate, n_requests))
-    lengths = rs.randint(max(1, prompt_len // 4), prompt_len + 1, n_requests)
-    return arrivals, lengths
+    """The shared open-loop trace every Poisson driver replays.  Thin alias
+    for ``repro.serving.traces.poisson_trace`` (same draw order, so old
+    seeds reproduce old traces bit-for-bit)."""
+    return poisson_trace(rs, rate, n_requests, prompt_len)
 
 
 def _drive_open_loop(sched, reqs, arrivals):
@@ -192,10 +195,14 @@ def serve_poisson(arch: str, *, rate: float = 4.0, n_requests: int = 32,
                   slots: int = 8, prompt_len: int = 16, max_new: int = 32,
                   threshold: float = 0.5, prefill_chunk: int = 16,
                   long_mode: bool = False, paged: bool = False,
+                  async_decode: bool = False, readback_interval: int = 8,
                   seed: int = 0, params=None, quiet: bool = False):
     """Open-loop Poisson-arrival serving through the continuous-batching
-    scheduler.  Returns a stats dict (p50/p95 latency, sustained tok/s,
-    jit cache sizes — the no-recompile invariant)."""
+    scheduler.  Returns a stats dict (p50/p95 latency, WALL-CLOCK sustained
+    tok/s, host/device time split, jit cache sizes — the no-recompile
+    invariant).  ``async_decode`` runs the overlapped pipeline: on-device
+    sampling ring, double-buffered window dispatch, one batched readback
+    per ``readback_interval`` decode steps."""
     cfg = get_config(arch)
     model = Model(cfg, ShardCtx(None))
     if params is None:
@@ -208,7 +215,9 @@ def serve_poisson(arch: str, *, rate: float = 4.0, n_requests: int = 32,
         SchedulerConfig(n_slots=slots, max_len=max_len,
                         prefill_chunk=min(prefill_chunk, max(1, prompt_len)),
                         exit_threshold=threshold, long_mode=long_mode,
-                        paged=paged))
+                        paged=paged, segmented=not async_decode,
+                        async_decode=async_decode,
+                        readback_interval=readback_interval))
 
     rs = np.random.RandomState(seed)
     arrivals, lengths = _poisson_trace(rs, rate, n_requests, prompt_len)
@@ -241,6 +250,10 @@ def serve_poisson(arch: str, *, rate: float = 4.0, n_requests: int = 32,
         "p95_latency_s": float(np.percentile(lat, 95)),
         "sustained_tok_s": total_tokens / makespan,
         "tokens": total_tokens,
+        "async_decode": async_decode,
+        "host_ms": sched.host_ms_total,
+        "device_ms": sched.device_ms_total,
+        "peak_tokens_in_flight": sched.peak_tokens_in_flight,
         "jit_cache_sizes": sched.jit_cache_sizes(),
         "exit_stats": sched.exit_stats(),
     }
@@ -249,11 +262,14 @@ def serve_poisson(arch: str, *, rate: float = 4.0, n_requests: int = 32,
         stats["prefill_chunks_skipped"] = sched.prefill_chunks_skipped
     if not quiet:
         print(f"arch={cfg.name} poisson rate={rate}/s requests={n_requests} "
-              f"slots={slots}" + (" paged" if paged else ""))
+              f"slots={slots}" + (" paged" if paged else "")
+              + (f" async(r={readback_interval})" if async_decode else ""))
         print(f"  p50={stats['p50_latency_s']*1e3:.0f}ms "
               f"p95={stats['p95_latency_s']*1e3:.0f}ms "
               f"sustained={stats['sustained_tok_s']:.1f} tok/s "
               f"makespan={makespan:.2f}s")
+        print(f"  host={stats['host_ms']:.0f}ms device={stats['device_ms']:.0f}ms "
+              f"peak-in-flight={stats['peak_tokens_in_flight']} tokens")
         print(f"  jit cache sizes (must stay 1): {stats['jit_cache_sizes']}")
     return stats
 
@@ -273,6 +289,8 @@ def serve_multi_poisson(archs, *, rate: float = 4.0, n_requests: int = 32,
                         slots: int = 4, prompt_len: int = 16,
                         max_new: int = 32, threshold: float = 0.5,
                         prefill_chunk: int = 16, long_mode: bool = False,
+                        async_decode: bool = False,
+                        readback_interval: int = 8,
                         seed: int = 0, quiet: bool = False):
     """Open-loop Poisson trace through ONE multi-model pool: requests are
     assigned round-robin across ``archs`` and the ``MultiModelScheduler``
@@ -284,7 +302,10 @@ def serve_multi_poisson(archs, *, rate: float = 4.0, n_requests: int = 32,
         group,
         SchedulerConfig(n_slots=slots, max_len=prompt_len + max_new,
                         prefill_chunk=min(prefill_chunk, max(1, prompt_len)),
-                        exit_threshold=threshold, long_mode=long_mode))
+                        exit_threshold=threshold, long_mode=long_mode,
+                        segmented=not async_decode,
+                        async_decode=async_decode,
+                        readback_interval=readback_interval))
 
     rs = np.random.RandomState(seed)
     arrivals, lengths = _poisson_trace(rs, rate, n_requests, prompt_len)
@@ -335,11 +356,16 @@ def serve_multi_poisson(archs, *, rate: float = 4.0, n_requests: int = 32,
         "p95_latency_s": _pctl(lat, 95),
         "sustained_tok_s": total_tokens / makespan,
         "tokens": total_tokens,
+        "async_decode": async_decode,
+        "host_ms": sched.host_ms_total,
+        "device_ms": sched.device_ms_total,
+        "peak_tokens_in_flight": sched.peak_tokens_in_flight,
         "jit_cache_sizes": sched.jit_cache_sizes(),
     }
     if not quiet:
         print(f"multi-model poisson models={','.join(archs)} rate={rate}/s "
-              f"requests={n_requests} slots={slots}/model")
+              f"requests={n_requests} slots={slots}/model"
+              + (f" async(r={readback_interval})" if async_decode else ""))
         print(f"  p50={stats['p50_latency_s']*1e3:.0f}ms "
               f"p95={stats['p95_latency_s']*1e3:.0f}ms "
               f"sustained={stats['sustained_tok_s']:.1f} tok/s "
@@ -362,6 +388,8 @@ def serve_multi_tiered_poisson(archs, *, rate: float = 4.0,
                                deadline: float = 0.0,
                                long_mode: bool = False, seed: int = 0,
                                spec_draft: str = "", spec_k: int = 4,
+                               async_decode: bool = False,
+                               readback_interval: int = 8,
                                quiet: bool = False):
     """Multi-model Poisson trace through the tiered cluster: each request is
     routed per (model, request) using that model's cost graphs (plan config
@@ -386,7 +414,9 @@ def serve_multi_tiered_poisson(archs, *, rate: float = 4.0,
                           prefill_chunk=min(prefill_chunk,
                                             max(1, prompt_len)),
                           exit_threshold=threshold, long_mode=long_mode,
-                          spec_draft=spec_draft, spec_k=spec_k))
+                          spec_draft=spec_draft, spec_k=spec_k,
+                          async_decode=async_decode,
+                          readback_interval=readback_interval))
     rs = np.random.RandomState(seed)
     arrivals, lengths = _poisson_trace(rs, rate, n_requests, prompt_len)
     for i, (arr, l) in enumerate(zip(arrivals, lengths)):
@@ -432,6 +462,8 @@ def serve_tiered_poisson(arch: str, *, rate: float = 4.0,
                          threshold: float = 0.5, prefill_chunk: int = 16,
                          scenario: str = "default", plan_arch: str = "",
                          deadline: float = 0.0, long_mode: bool = False,
+                         async_decode: bool = False,
+                         readback_interval: int = 8,
                          seed: int = 0, params=None, quiet: bool = False):
     """Poisson trace through the tiered cluster: the admission router sends
     each arrival to a cloud/edge/device pool (or a prefill/decode split)
@@ -450,7 +482,9 @@ def serve_tiered_poisson(arch: str, *, rate: float = 4.0,
                           max_len=prompt_len + max_new,
                           prefill_chunk=min(prefill_chunk,
                                             max(1, prompt_len)),
-                          exit_threshold=threshold, long_mode=long_mode))
+                          exit_threshold=threshold, long_mode=long_mode,
+                          async_decode=async_decode,
+                          readback_interval=readback_interval))
     rs = np.random.RandomState(seed)
     arrivals, lengths = _poisson_trace(rs, rate, n_requests, prompt_len)
     for arr, l in zip(arrivals, lengths):
@@ -506,6 +540,12 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="paged KV arena + radix prefix cache "
                          "(poisson single-pool mode)")
+    ap.add_argument("--async-decode", action="store_true",
+                    help="overlapped decode pipeline: on-device sampling "
+                         "ring, double-buffered window dispatch, batched "
+                         "readback every --readback-interval steps")
+    ap.add_argument("--readback-interval", type=int, default=8,
+                    help="[async] decode steps per batched host readback")
     ap.add_argument("--spec-draft", default="",
                     help="[tiered multi-model] group entry to use as the "
                          "device-tier speculative draft model")
@@ -527,14 +567,17 @@ def main():
                 max_new=args.max_new, threshold=args.threshold,
                 prefill_chunk=args.prefill_chunk, scenario=args.scenario,
                 deadline=args.deadline, long_mode=args.long, seed=args.seed,
-                spec_draft=args.spec_draft, spec_k=args.spec_k)
+                spec_draft=args.spec_draft, spec_k=args.spec_k,
+                async_decode=args.async_decode,
+                readback_interval=args.readback_interval)
         else:
             serve_multi_poisson(
                 archs, rate=args.rate, n_requests=args.requests,
                 slots=args.slots, prompt_len=args.prompt_len,
                 max_new=args.max_new, threshold=args.threshold,
                 prefill_chunk=args.prefill_chunk, long_mode=args.long,
-                seed=args.seed)
+                async_decode=args.async_decode,
+                readback_interval=args.readback_interval, seed=args.seed)
     elif args.mode == "poisson" and args.tiered:
         serve_tiered_poisson(
             args.arch, rate=args.rate, n_requests=args.requests,
@@ -542,13 +585,16 @@ def main():
             max_new=args.max_new, threshold=args.threshold,
             prefill_chunk=args.prefill_chunk, scenario=args.scenario,
             plan_arch=args.plan_arch, deadline=args.deadline,
-            long_mode=args.long, seed=args.seed)
+            long_mode=args.long, async_decode=args.async_decode,
+            readback_interval=args.readback_interval, seed=args.seed)
     elif args.mode == "poisson":
         serve_poisson(args.arch, rate=args.rate, n_requests=args.requests,
                       slots=args.slots, prompt_len=args.prompt_len,
                       max_new=args.max_new, threshold=args.threshold,
                       prefill_chunk=args.prefill_chunk, long_mode=args.long,
-                      paged=args.paged, seed=args.seed)
+                      paged=args.paged, async_decode=args.async_decode,
+                      readback_interval=args.readback_interval,
+                      seed=args.seed)
     else:
         serve(args.arch, args.batch, args.prompt_len, args.max_new,
               threshold=args.threshold, long_mode=args.long, seed=args.seed)

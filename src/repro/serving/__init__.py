@@ -43,6 +43,8 @@ Architecture (survey §2.3 made runtime):
   (raw handoff, so outputs stay bit-identical to the single pool),
   multi-model via ``generate_multi`` when given a ``ModelGroup``.
 * ``adaptive``   — closed-loop exit-threshold control from flushed counters.
+* ``traces``     — seeded open-loop arrival-trace generators (Poisson,
+  diurnal, flash-crowd, mixed SLO-class) shared by every serving bench.
 """
 from repro.serving.cluster import (ClusterConfig, ClusterRequest,
                                    TieredServingCluster, derive_tier_slots)
@@ -54,10 +56,15 @@ from repro.serving.router import AdmissionRouter
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
                                      SchedulerConfig, SlotSnapshot,
                                      StageSpec, StepReport)
+from repro.serving.traces import (diurnal_trace, flash_crowd_trace,
+                                  make_trace, mixed_slo_trace,
+                                  poisson_trace)
 
 __all__ = ["ServeConfig", "ServingEngine", "make_serve_step",
            "prime_whisper_cross_cache", "ContinuousBatchScheduler",
            "Request", "SchedulerConfig", "SlotSnapshot", "StageSpec",
            "StepReport", "AdmissionRouter", "ClusterConfig",
            "ClusterRequest", "TieredServingCluster", "derive_tier_slots",
-           "ModelEntry", "ModelGroup", "MultiModelScheduler", "SpecPair"]
+           "ModelEntry", "ModelGroup", "MultiModelScheduler", "SpecPair",
+           "poisson_trace", "diurnal_trace", "flash_crowd_trace",
+           "mixed_slo_trace", "make_trace"]

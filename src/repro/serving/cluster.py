@@ -122,6 +122,15 @@ class ClusterConfig:
     spec_k: int = 4
     stream_tokens: bool = False
     spec_draft_frac: float = 0.1
+    # overlapped host-device decode in every tier pool (scheduler
+    # ``async_decode``): decode runs in zero-readback windows of
+    # ``readback_interval`` steps, committed in batches — tier clocks
+    # charge per COMMITTED step (``StepReport.decode_steps``), migration
+    # entry points drain in-flight windows first (``_sync_pool``).  Forces
+    # the monolithic decode path (segmented pipelines host-sync per
+    # probe).  Speculative bridges stay synchronous (lockstep exemption).
+    async_decode: bool = False
+    readback_interval: int = 8
 
 
 @dataclasses.dataclass
@@ -329,7 +338,10 @@ class TieredServingCluster:
             temperature=cfg.temperature, long_mode=cfg.long_mode,
             flush_every=cfg.flush_every,
             max_prefill_chunks_per_step=cfg.max_prefill_chunks_per_step,
-            paged=cfg.paged, page_size=cfg.page_size)
+            paged=cfg.paged, page_size=cfg.page_size,
+            segmented=not cfg.async_decode,
+            async_decode=cfg.async_decode,
+            readback_interval=cfg.readback_interval)
         self.tiers: Dict[str, TierRuntime] = {}
         for name, uplink in (("device", None), ("edge", sc.dev_edge),
                              ("cloud", sc.dev_cloud)):
@@ -529,6 +541,10 @@ class TieredServingCluster:
                                   kv[draft]),
                 derive_tier_slots(sc.cloud, sc.cloud, cfg.base_slots,
                                   kv[m])))
+            # NOTE: the pair's SchedulerConfig deliberately omits
+            # cfg.async_decode — the propose/verify protocol is a
+            # synchronous lockstep round trip (SpecPair rejects async),
+            # so the bridge keeps per-round polls even in an async cluster
             self._spec_pairs[m] = SpecPair(
                 ModelGroup([self.group[draft], self.group[m]]),
                 SchedulerConfig(
@@ -735,6 +751,40 @@ class TieredServingCluster:
             cr.pf_booked_slot, cr.pf_booked_until, cr.pf_booked_released0)
         cr.pf_booked_slot = -1
 
+    def _sync_pool(self, tr: TierRuntime):
+        """Drain a tier pool's async decode pipeline before a migration
+        boundary (split handoff, outage drain): commit every in-flight
+        window, charge the tier clock for the drained steps at each
+        model's rate, and stamp any completions the drain surfaced — they
+        never appear in a later poll report.  No-op for sync pools."""
+        sync = getattr(tr.sched, "sync", None)
+        if sync is None or not getattr(tr.sched, "cfg").async_decode:
+            return
+        pools = getattr(tr.sched, "pools", None)
+        arenas = list(pools.items()) if pools else [("", tr.sched)]
+        steps0 = [a._step_idx for _, a in arenas]
+        toks0 = [a.tokens_served for _, a in arenas]
+        done = sync()
+        cost = 0.0
+        steps_max = 0
+        for (m, a), s0, t0 in zip(arenas, steps0, toks0):
+            steps = a._step_idx - s0
+            cost += tr.tok_cost[m] * steps   # async windows run full depth
+            steps_max = max(steps_max, steps)
+            tr.slot_tokens += a.tokens_served - t0
+        tr.vclock += cost
+        tr.busy += cost
+        tr.decode_steps += steps_max
+        for r in done:
+            cr = self._cr_of[id(r)]
+            down = (tr.uplink.tx_time(len(r.out_tokens) * 4.0)
+                    if tr.uplink else 0.0)
+            cr.t_done_v = tr.vclock + down
+            cr.final_tier = tr.name
+            self._release_pf_booking(cr)
+            self._reconcile_booking(self.tiers[cr.booked_tier or tr.name],
+                                    cr)
+
     def _poll_tier(self, tr: TierRuntime):
         if tr.dead:
             return False
@@ -768,15 +818,19 @@ class TieredServingCluster:
             if sub.decode_stepped:
                 # charge the *truncated* step cost: the scheduler reports
                 # the layer-weighted fraction of the stack its segment
-                # stages dispatched (1.0 when nothing exited / monolithic)
+                # stages dispatched (1.0 when nothing exited / monolithic).
+                # Async pools commit a whole window per poll: charge every
+                # COMMITTED step (decode_steps; sync polls report 1)
                 depth = sub.decode_depth_frac \
                     if sub.decode_depth_frac > 0.0 else 1.0
-                decode_cost += tr.tok_cost[m] * depth
+                steps = sub.decode_steps or (1 if sub.decode_stepped else 0)
+                decode_cost += tr.tok_cost[m] * depth * steps
         if rep.decode_stepped:
             tr.vclock += decode_cost
             tr.busy += decode_cost
-            tr.decode_steps += 1
-            tr.slot_tokens += rep.n_active
+            steps = rep.decode_steps or 1
+            tr.decode_steps += steps
+            tr.slot_tokens += rep.n_active * steps
         for r in rep.completed:
             cr = self._cr_of[id(r)]
             down = (tr.uplink.tx_time(len(r.out_tokens) * 4.0)
@@ -791,6 +845,11 @@ class TieredServingCluster:
         # handoff happens at a clean token boundary).  If the decode tier
         # died while the prefill was running, fail over to a survivor —
         # possibly this very tier, in which case the slot simply stays.
+        # Async pools drain their in-flight decode windows first: the
+        # export below must see committed host state.
+        if any(cr.decision.is_split and cr.decision.tier != tr.name
+               and not cr.req.done for cr in went_live):
+            self._sync_pool(tr)
         for cr in went_live:
             self._release_pf_booking(cr)   # prompt replay is over
             if (cr.decision.is_split and cr.decision.tier != tr.name
@@ -921,6 +980,10 @@ class TieredServingCluster:
         tr.dead = True
         self.dead.add(tr.name)
         now = self.virtual_now()
+        # commit the dying tier's in-flight async decode windows: the
+        # exports below must ship committed host state, and the tokens
+        # were really decoded before the outage fired
+        self._sync_pool(tr)
         redo = list(tr.waiting)
         tr.waiting = []
         if self.spec_enabled and tr.name in ("device", "cloud"):
@@ -1080,6 +1143,12 @@ class TieredServingCluster:
                 "measured_depth": tr.sched.measured_depth_fraction(),
                 "p50_latency_s": _pctl(tl, 50),
                 "p95_latency_s": _pctl(tl, 95),
+                # wall-clock host/device split of the tier pool's polls
+                # (satellite of the async pipeline work; sync pools report
+                # their per-step readback blocking the same way)
+                "host_ms": tr.sched.host_ms_total,
+                "device_ms": tr.sched.device_ms_total,
+                "peak_tokens_in_flight": tr.sched.peak_tokens_in_flight,
             }
         out: Dict[str, object] = {
             "requests": len(self.requests),

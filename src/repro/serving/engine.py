@@ -52,6 +52,13 @@ class ServeConfig:
     # the routed model verifies batched on the cloud tier; empty disables.
     spec_draft: str = ""
     spec_k: int = 4
+    # overlapped host-device decode (scheduler ``async_decode``): decode
+    # runs in zero-readback jitted windows of ``readback_interval`` steps
+    # with deferred batched readback — forces the monolithic decode path
+    # (the segmented pipeline host-syncs per probe).  Greedy outputs stay
+    # bit-identical to the synchronous path.
+    async_decode: bool = False
+    readback_interval: int = 8
 
 
 def make_serve_step(model, *, long_mode: bool = False):
@@ -165,7 +172,11 @@ class ServingEngine:
                 SchedulerConfig(n_slots=n_slots, max_len=max_len,
                                 exit_threshold=self.scfg.exit_threshold,
                                 temperature=self.scfg.temperature,
-                                long_mode=self.scfg.long_mode))
+                                long_mode=self.scfg.long_mode,
+                                segmented=not self.scfg.async_decode,
+                                async_decode=self.scfg.async_decode,
+                                readback_interval=(
+                                    self.scfg.readback_interval)))
         sched = self._scheds[key]
         sched.params = self.params     # pick up any engine params update
         return sched
@@ -252,7 +263,10 @@ class ServingEngine:
                                   long_mode=self.scfg.long_mode,
                                   kv_handoff="raw",
                                   spec_draft=self.scfg.spec_draft,
-                                  spec_k=self.scfg.spec_k))
+                                  spec_k=self.scfg.spec_k,
+                                  async_decode=self.scfg.async_decode,
+                                  readback_interval=(
+                                      self.scfg.readback_interval)))
         return self._cluster
 
     def _finish_cluster_batch(self, cl, routes_before):

@@ -168,6 +168,18 @@ class MultiModelScheduler:
     def depth_weighted_tokens(self) -> float:
         return sum(p.depth_weighted_tokens for p in self.pools.values())
 
+    @property
+    def host_ms_total(self) -> float:
+        return sum(p.host_ms_total for p in self.pools.values())
+
+    @property
+    def device_ms_total(self) -> float:
+        return sum(p.device_ms_total for p in self.pools.values())
+
+    @property
+    def peak_tokens_in_flight(self) -> int:
+        return max(p.peak_tokens_in_flight for p in self.pools.values())
+
     def poll(self) -> StepReport:
         """One pool round: each arena admits / prefills / decodes once,
         sharing the pool-wide prefill budget round-robin.  Returns one
@@ -196,6 +208,14 @@ class MultiModelScheduler:
             rep.decode_stepped = rep.decode_stepped or sub.decode_stepped
             rep.n_active += sub.n_active
             rep.decode_segments_run += sub.decode_segments_run
+            # async decode: steps committed is a per-round gauge (max over
+            # arenas — they commit in parallel rounds), dispatches/time
+            # splits/in-flight tokens are additive device+host work
+            rep.decode_steps = max(rep.decode_steps, sub.decode_steps)
+            rep.decode_dispatched += sub.decode_dispatched
+            rep.host_ms += sub.host_ms
+            rep.device_ms += sub.device_ms
+            rep.tokens_in_flight += sub.tokens_in_flight
             active_depth += sub.decode_depth_frac * sub.n_active
             rep.completed += sub.completed
         if rep.n_active:               # active-slot-weighted mean depth
@@ -205,6 +225,16 @@ class MultiModelScheduler:
 
     def tick(self) -> bool:
         return self.poll().worked
+
+    def sync(self) -> List[Request]:
+        """Drain every arena's async decode pipeline (no-op for sync
+        arenas).  Returns the requests the drain completed — like the
+        single-pool ``sync()``, the caller must stamp them itself."""
+        out: List[Request] = []
+        for pool in self.pools.values():
+            out += pool.sync()
+        self.completed += out
+        return out
 
     # ------------------------------------------------------------------
     # slot migration (delegates to the named arena — snapshots carry their
@@ -350,6 +380,13 @@ class SpecPair(MultiModelScheduler):
                 "the verify stage always runs the target at full depth, "
                 "so early-exited target-only output would diverge from "
                 "the speculative stream. Use exit_threshold=0.")
+        if cfg.async_decode:
+            raise ValueError(
+                "SpecPair + async_decode is rejected at config time: the "
+                "propose/verify round is host-lockstep by construction "
+                "(the draft window feeds the same round's verify), so "
+                "deferred-readback windows cannot overlap it. Speculative "
+                "pairs keep the synchronous poll cadence.")
         if k < 2:
             raise ValueError(f"SpecPair window k must be >= 2, got {k}")
         # SpecPair arenas always run the monolithic decode_step: verify is a

@@ -146,6 +146,17 @@ class SchedulerConfig:
     page_size: int = 16
     n_pages: int = 0
     prefix_cache: bool = True
+    # overlapped host-device pipeline: decode runs as jitted WINDOWS of
+    # ``readback_interval`` monolithic steps with sampling, token feedback
+    # and eos/max_new termination fully on device (per-slot token ring);
+    # ``poll()`` double-buffers dispatch (window N+1 is enqueued from the
+    # device carry while window N executes) and host readback is deferred
+    # to one batched d2h per window, replayed through the exact synchronous
+    # commit semantics (bounded-staleness commit — see docs/pipeline.md).
+    # Requires segmented=False: the segment pipeline's per-probe host
+    # short-circuit is a sync point inside the window.
+    async_decode: bool = False
+    readback_interval: int = 8
 
 
 @dataclasses.dataclass
@@ -172,6 +183,20 @@ class StepReport:
     spec_rounds: int = 0
     spec_committed: int = 0
     spec_drafted: int = 0
+    # async decode (cfg.async_decode): decode steps COMMITTED this poll
+    # (a whole window's worth at each readback; synchronous polls report 1
+    # per stepped poll) and windows DISPATCHED this poll — a dispatch-only
+    # poll did real device work even though nothing committed yet, so
+    # external drivers must not treat it as idle.
+    decode_steps: int = 0
+    decode_dispatched: int = 0
+    # host/device wall-time split of this poll (satellite of the pipeline
+    # work: host_ms is python bookkeeping, device_ms is time blocked in
+    # jax.device_get readbacks) and tokens still in flight inside
+    # dispatched-but-unread windows at poll end.
+    host_ms: float = 0.0
+    device_ms: float = 0.0
+    tokens_in_flight: int = 0
     completed: List[Request] = dataclasses.field(default_factory=list)
     # multi-model pools (repro.serving.multipool): the per-model sub-reports
     # behind this aggregate, keyed by model name.  Empty for a single-model
@@ -183,7 +208,7 @@ class StepReport:
     @property
     def worked(self) -> bool:
         return bool(self.admitted) or self.prefill_chunks > 0 \
-            or self.decode_stepped
+            or self.decode_stepped or self.decode_dispatched > 0
 
 
 @dataclasses.dataclass
@@ -300,6 +325,14 @@ class ContinuousBatchScheduler:
         self.cfg = cfg
         self.controller = controller
         self.adaptive_every = 64
+        if cfg.async_decode:
+            if cfg.segmented:
+                raise ValueError(
+                    "async_decode requires segmented=False: the segment "
+                    "pipeline's per-probe host short-circuit is a sync "
+                    "point inside the zero-readback decode window")
+            if cfg.readback_interval < 1:
+                raise ValueError("readback_interval must be >= 1")
 
         b = cfg.n_slots
         mcfg = model.cfg
@@ -367,6 +400,25 @@ class ContinuousBatchScheduler:
         # analysis.guards.guard_polling and docs/invariants.md
         self._t0_cache: Dict[int, Any] = {}
         self._thr_cache: tuple = (None, None)   # (host value, device scalar)
+        # --- async decode pipeline state (cfg.async_decode) ---
+        # _win_q: FIFO of dispatched-but-unread windows as (ring handle,
+        # participating-slot mask, alive hint); _dev_carry chains the
+        # device-side (cur, pos, alive, budget) of the last dispatch so the
+        # next window uploads nothing; _carry_valid goes False whenever host
+        # state diverges from the carry (admission, import, sync).  Empty /
+        # False forever on synchronous schedulers, so shared code paths can
+        # consult them unconditionally.
+        self._win_q: deque = deque()
+        self._dev_carry = None
+        self._carry_valid = False
+        self._eos_dev = None
+        self._flag_cache: Dict[bool, Any] = {}
+        # host/device wall-time split accumulators (StepReport.host_ms /
+        # device_ms roll up here; reset_stats zeroes them)
+        self.host_ms_total = 0.0
+        self.device_ms_total = 0.0
+        self.peak_tokens_in_flight = 0
+        self._dev_s = 0.0
 
         # --- jitted, fixed-shape device functions ---
         self._counters = jnp.zeros(self._n_exits + 1, jnp.int32)
@@ -425,6 +477,13 @@ class ContinuousBatchScheduler:
         else:
             self._decode = jax.jit(self._make_decode_step(),
                                    donate_argnums=(1, 5))
+            if cfg.async_decode:
+                # donate the window's whole device carry (cache, cur, pos,
+                # alive, budget) plus counters; eos (6) stays undonated so
+                # the cached per-chain vector survives carry dispatches
+                self._decode_window = jax.jit(
+                    self._make_decode_window(),
+                    donate_argnums=(1, 2, 3, 4, 5, 7))
         if mcfg.family == "encdec":
             from repro.serving.engine import prime_whisper_cross_cache
             self._prime = jax.jit(
@@ -580,6 +639,66 @@ class ContinuousBatchScheduler:
             return greedy, nxt, cache, counters
 
         return step
+
+    def _make_decode_window(self):
+        """Zero-readback decode WINDOW (cfg.async_decode): a jitted
+        ``lax.scan`` of ``readback_interval`` monolithic steps with token
+        selection, feedback and termination fully on device, emitting a
+        per-slot token ring [B, R] the host replays later.
+
+        The on-device commit mirrors ``step()``'s host loop exactly so a
+        deferred replay reconstructs identical state: per step the running
+        budget (``max_new - steps_taken``) decrements for live rows; a row
+        whose budget hits zero freezes WITHOUT taking the trailing token
+        (max_new discards the trailing sample, like ``step()``); otherwise
+        the token feeds back as ``cur`` and matching ``eos`` (sentinel -1
+        = no eos) freezes the row.  Frozen rows keep computing garbage
+        exactly like inactive slots under the sync monolithic step —
+        private rows in contiguous arenas, ``act``-masked page writes in
+        paged ones — so greedy outputs stay bit-identical and freed pages
+        are never touched."""
+        model, cfg = self.model, self.cfg
+        n_exits, vocab = self._n_exits, self._vocab
+        R = cfg.readback_interval
+        paged = cfg.paged
+
+        def window(params, cache, cur, pos, alive, budget, eos, counters,
+                   threshold, key, tick0, use_sampled, *rest):
+            tbl = rest[0] if rest else None
+
+            def body(carry, j):
+                cache, cur, pos, alive, budget, counters = carry
+                act = alive
+                tok_in = cur[:, None]
+                if paged:
+                    logits, ee, new_cache = model.decode_step(
+                        params, cache, tok_in, pos, long_mode=cfg.long_mode,
+                        paged=attn_mod.PagedKV(tbl, act))
+                    cache = model.merge_decode_cache(act, new_cache, cache,
+                                                     paged=True)
+                else:
+                    logits, ee, cache = model.decode_step(
+                        params, cache, tok_in, pos, long_mode=cfg.long_mode)
+                if n_exits:
+                    idx = first_exit_index(ee, threshold, vocab)
+                else:
+                    idx = jnp.zeros((cur.shape[0],), jnp.int32)
+                greedy, nxt, counters = self._sample_and_count(
+                    logits, idx, act, counters, key, tick0 + j)
+                tok = jnp.where(use_sampled, nxt, greedy)
+                pos = pos + act.astype(pos.dtype)
+                budget = budget - act.astype(jnp.int32)
+                spent = act & (budget <= 0)
+                cur = jnp.where(act & ~spent, tok, cur)
+                alive = act & ~spent & ~(tok == eos)
+                return (cache, cur, pos, alive, budget, counters), tok
+
+            (cache, cur, pos, alive, budget, counters), ring = jax.lax.scan(
+                body, (cache, cur, pos, alive, budget, counters),
+                jnp.arange(R))
+            return cache, cur, pos, alive, budget, counters, ring.T
+
+        return window
 
     # ------------------------------------------------------------------
     # depth-segmented decode stages (one jit per segment, compiled once)
@@ -805,15 +924,29 @@ class ContinuousBatchScheduler:
         at most that many chunks; 0 runs none (decode still steps, and an
         admission may still be *staged* — chunks replay on a later poll).
         Multi-model pools use this to enforce one prefill-fairness budget
-        across every per-model arena."""
+        across every per-model arena.
+
+        With ``cfg.async_decode`` the decode half routes through the
+        double-buffered window pipeline (``_poll_async``): a poll either
+        dispatches a decode window, commits one (a whole window's worth of
+        ``decode_steps`` lands at once), or both — see docs/pipeline.md."""
+        if self.cfg.async_decode:
+            return self._poll_async(prefill_budget)
+        t_poll = time.perf_counter()
+        self._dev_s = 0.0
         rep = self.prefill_poll(prefill_budget)
         done_before = len(self.completed)
         rep.decode_stepped = self.step()
+        rep.decode_steps = 1 if rep.decode_stepped else 0
         rep.n_active = self._last_step_active
         if rep.decode_stepped:
             rep.decode_segments_run = self._last_segments_run
             rep.decode_depth_frac = self._last_depth_frac
         rep.completed += self.completed[done_before:]
+        rep.device_ms = self._dev_s * 1e3
+        rep.host_ms = (time.perf_counter() - t_poll) * 1e3 - rep.device_ms
+        self.host_ms_total += rep.host_ms
+        self.device_ms_total += rep.device_ms
         return rep
 
     def prefill_poll(self, prefill_budget: Optional[int] = None) -> StepReport:
@@ -1082,6 +1215,11 @@ class ContinuousBatchScheduler:
                 self._finish(slot)
         self._pending = None
         rep.prefill_done = True
+        # async decode: host state diverged from the device carry (new live
+        # slots) — the next window must be a FRESH dispatch.  Device-side
+        # ordering already serializes this merge after any in-flight window
+        # (both chain through self.cache donation).
+        self._carry_valid = False
 
     def _sample_first(self, logits_row) -> int:
         # seed-engine semantics: sampling needs BOTH temperature>0 and an rng
@@ -1149,6 +1287,8 @@ class ContinuousBatchScheduler:
         return greedy, sampled
 
     def step(self) -> bool:
+        assert not self._win_q, \
+            "step(): async decode windows in flight — sync() first"
         self._last_step_active = int(self.active.sum())
         if not self.active.any():
             return False
@@ -1170,8 +1310,10 @@ class ContinuousBatchScheduler:
             greedy, sampled, self.cache, self._counters = self._decode(*args)
             self._last_segments_run = len(self._segments)
             self._last_depth_frac = 1.0
+        t0 = time.perf_counter()
         nxt = np.asarray(jax.device_get(
             sampled if self._rng is not None else greedy))
+        self._dev_s += time.perf_counter() - t0
         self._step_idx += 1
         self._rng_tick += 1
         n_active = int(self.active.sum())
@@ -1195,14 +1337,189 @@ class ContinuousBatchScheduler:
         return True
 
     # ------------------------------------------------------------------
-    # speculative decoding: draft propose / target verify+commit
+    # async decode (cfg.async_decode): double-buffered window pipeline
     # ------------------------------------------------------------------
+    def _poll_async(self, prefill_budget: Optional[int] = None) -> StepReport:
+        """One overlapped scheduler round: admission/prefill as usual, then
+        — if a window is already in flight — pre-dispatch window N+1 from
+        the device carry BEFORE blocking on window N's ring readback (the
+        device computes N+1 while the host replays N's commits), else
+        dispatch a fresh window from host state.  Exactly one batched d2h
+        (the ring) per committed window; see docs/pipeline.md."""
+        t_poll = time.perf_counter()
+        dev_s = 0.0
+        rep = self.prefill_poll(prefill_budget)
+        # re-capture AFTER prefill_poll: it already stamped its completions
+        done_before = len(self.completed)
+        if self._win_q:
+            if self._carry_valid:
+                # the overlap: enqueue N+1 while N's results are read back
+                self._dispatch_window(from_carry=True)
+                rep.decode_dispatched += 1
+            ring, part, _ = self._win_q.popleft()
+            t0 = time.perf_counter()
+            ring_np = np.asarray(jax.device_get(ring))
+            dev_s += time.perf_counter() - t0
+            self._commit_window(ring_np, part, rep)
+        elif self.active.any():
+            self._dispatch_window(from_carry=False)
+            rep.decode_dispatched += 1
+        rep.completed += self.completed[done_before:]
+        rep.tokens_in_flight = self.tokens_in_flight
+        self.peak_tokens_in_flight = max(self.peak_tokens_in_flight,
+                                         rep.tokens_in_flight)
+        rep.device_ms = dev_s * 1e3
+        rep.host_ms = (time.perf_counter() - t_poll) * 1e3 - rep.device_ms
+        self.host_ms_total += rep.host_ms
+        self.device_ms_total += rep.device_ms
+        return rep
+
+    def _eos_host(self) -> np.ndarray:
+        """Per-slot eos vector for the window jit (-1 = no eos: token ids
+        are non-negative, so the device compare never fires)."""
+        eos = np.full(self.cfg.n_slots, -1, np.int32)
+        for slot in np.nonzero(self.active)[0]:
+            r = self.slot_req[slot]
+            if r.eos_id is not None:
+                eos[slot] = r.eos_id
+        return eos
+
+    def _flag_dev(self, val: bool):
+        """Cached device bool scalar (explicit h2d, uploaded once per
+        value) — the window's greedy-vs-sampled selector."""
+        flag = self._flag_cache.get(val)
+        if flag is None:
+            flag = jax.device_put(np.asarray(val, bool))
+            self._flag_cache[val] = flag
+        return flag
+
+    @property
+    def tokens_in_flight(self) -> int:
+        """Upper bound on tokens inside dispatched-but-unread windows
+        (alive-at-dispatch slots x window length per queued window)."""
+        return sum(h * self.cfg.readback_interval
+                   for _, _, h in self._win_q)
+
+    def _dispatch_window(self, *, from_carry: bool):
+        """Enqueue one decode window.  ``from_carry`` chains the previous
+        dispatch's device-side (cur, pos, alive, budget) — zero uploads,
+        the same request chain, device-ordered after the previous window.
+        A fresh dispatch uploads host state and opens a new chain whose
+        participating-slot mask snapshots ``active`` (slots admitted later
+        join at the NEXT fresh dispatch, never mid-chain)."""
+        thr = (self.controller.threshold if self.controller is not None
+               else self.cfg.exit_threshold)
+        key = self._rng if self._rng is not None else self._zero_key
+        if from_carry:
+            assert self._carry_valid and self._win_q
+            cur, pos, alive, budget = self._dev_carry
+            part = self._win_q[-1][1]          # same chain, same mask
+        else:
+            b = self.cfg.n_slots
+            budget_h = np.zeros(b, np.int32)
+            for slot in np.nonzero(self.active)[0]:
+                budget_h[slot] = (self.slot_req[slot].max_new
+                                  - self.steps_taken[slot])
+            cur = jnp.asarray(self.current_tok)
+            pos = jnp.asarray(self.positions.astype(np.int32))
+            alive = jnp.asarray(self.active)
+            budget = jnp.asarray(budget_h)
+            self._eos_dev = jnp.asarray(self._eos_host())
+            part = self.active.copy()
+        args = (self.params, self.cache, cur, pos, alive, budget,
+                self._eos_dev, self._counters, self._thr_device(thr), key,
+                jax.device_put(np.asarray(self._rng_tick, np.int32)),
+                self._flag_dev(self._rng is not None))
+        if self.page_alloc is not None:
+            args = args + (self._tbl_dev(),)
+        (self.cache, cur, pos, alive, budget,
+         self._counters, ring) = self._decode_window(*args)
+        self._dev_carry = (cur, pos, alive, budget)
+        self._carry_valid = True
+        self._rng_tick += self.cfg.readback_interval
+        self._win_q.append((ring, part, int((self.active & part).sum())))
+
+    def _commit_window(self, ring: np.ndarray, part: np.ndarray,
+                       rep: StepReport):
+        """Replay one window's token ring through the EXACT synchronous
+        commit semantics of ``step()`` — same ordering, same max_new
+        trailing-sample discard, same eos handling — so host state after
+        the replay is bit-identical to R synchronous polls.  ``part``
+        masks the replay to the window's own chain: slots admitted while
+        it was in flight have no ring tokens and must not replay.
+
+        A chain whose slots all finished mid-replay leaves any still-
+        queued successor window permanently dead: drop it (and the carry)
+        eagerly so a later admission reusing the slot indices can never
+        replay the dead chain's garbage."""
+        R = self.cfg.readback_interval
+        replayed = 0
+        for j in range(R):
+            mask = self.active & part
+            if not mask.any():
+                break
+            n_active = int(mask.sum())
+            self.tokens_served += n_active
+            self._tokens_since_adapt += n_active
+            self.depth_weighted_tokens += 1.0 * n_active
+            self._depth_since_adapt += 1.0 * n_active
+            rep.n_active = n_active
+            for slot in np.nonzero(mask)[0]:
+                r = self.slot_req[slot]
+                self.steps_taken[slot] += 1
+                self.positions[slot] += 1
+                if self.steps_taken[slot] >= r.max_new:
+                    self._finish(slot)  # trailing sample discarded, like
+                    part[slot] = False  # the synchronous step(); the slot
+                    continue            # leaves the chain PERMANENTLY (a
+                tok = int(ring[slot, j])    # re-admission must not rejoin)
+                r.out_tokens.append(tok)
+                self.current_tok[slot] = tok
+                if r.eos_id is not None and tok == r.eos_id:
+                    self._finish(slot)
+                    part[slot] = False
+            self._step_idx += 1
+            replayed += 1
+        if replayed:
+            self._last_segments_run = len(self._segments)
+            self._last_depth_frac = 1.0
+            rep.decode_stepped = True
+            rep.decode_steps += replayed
+            rep.decode_segments_run = self._last_segments_run
+            rep.decode_depth_frac = self._last_depth_frac
+        if not (self.active & part).any():
+            # chain died: any queued successor window is all-dead compute
+            # (its act masks are false from step 0 — no counter updates,
+            # no page writes) — abandon it without a readback
+            self._win_q.clear()
+            self._carry_valid = False
+        self._maybe_flush(steps=max(1, replayed))
+
+    def sync(self) -> List[Request]:
+        """Drain the async pipeline: read back and commit every in-flight
+        window, invalidate the carry.  Returns the requests completed BY
+        THE DRAIN (they never appear in a later ``poll()`` report — an
+        external driver calling ``sync()`` must stamp them itself).  No-op
+        on synchronous schedulers; migration entry points (``export_slot``
+        / ``release_slot``) and ``reset_stats`` require it first."""
+        n0 = len(self.completed)
+        while self._win_q:
+            ring, part, _ = self._win_q.popleft()
+            if not (self.active & part).any():
+                continue                # dead chain: no readback needed
+            rep = StepReport()
+            self._commit_window(np.asarray(jax.device_get(ring)), part, rep)
+        self._carry_valid = False
+        return self.completed[n0:]
     def ensure_spec(self, k: int):
         """Fix the speculation window width and build the propose/verify
         jits.  ``k`` is a SHAPE (tokens are [B, k]), so it is fixed per
         arena — each stage then compiles exactly once and
         ``jit_cache_sizes()`` gains one ``propose`` and one ``verify``
         entry bounded by 1 like every other stage."""
+        assert not self.cfg.async_decode, \
+            "speculative pairs run propose/verify in lockstep — the async " \
+            "window pipeline is exempt (SpecPair rejects async_decode)"
         assert k >= 2, f"spec window k must be >= 2, got {k}"
         if self._spec_k == 0:
             self._spec_k = k
@@ -1509,6 +1826,8 @@ class ContinuousBatchScheduler:
         """
         del model                      # single-model arena: one namespace
         from repro.kernels import ops as kops
+        assert not self._win_q, \
+            "export_slot: async decode windows in flight — sync() first"
         r = self.slot_req[slot]
         assert r is not None and self.active[slot], f"slot {slot} not active"
         position = int(self.positions[slot])
@@ -1691,7 +2010,8 @@ class ContinuousBatchScheduler:
         self.steps_taken[slot] = snap.steps_taken
         self.active[slot] = True
         self.n_imported += 1
-        return slot
+        self._carry_valid = False   # async decode: new live slot, fresh
+        return slot                 # dispatch required
 
     def free_slots(self, model: str = "") -> List[int]:
         """Slots with no request bound (staged admissions count as bound)."""
@@ -1710,6 +2030,8 @@ class ContinuousBatchScheduler:
         snapshot.  The cache rows are left stale; admission merge or
         ``import_slot`` overwrites them before the slot is read again."""
         del model
+        assert not self._win_q, \
+            "release_slot: async decode windows in flight — sync() first"
         r = self.slot_req[slot]
         assert r is not None, f"slot {slot} empty"
         self.slot_req[slot] = None
@@ -1741,7 +2063,12 @@ class ContinuousBatchScheduler:
     # ------------------------------------------------------------------
     # exit statistics: device counters, periodic flush, adaptive control
     # ------------------------------------------------------------------
-    def _maybe_flush(self):
+    def _maybe_flush(self, steps: int = 1):
+        """Periodic counter flush / adaptive update.  ``steps`` is how many
+        decode steps landed since the last check (async window commits
+        replay a whole window at once): the flush fires iff ``_step_idx``
+        crossed a multiple of ``flush_every`` within the last ``steps``
+        increments — identical to the per-step check at ``steps=1``."""
         if (self.controller is not None
                 and self._tokens_since_adapt >= self.adaptive_every):
             self.flush_counters()
@@ -1752,7 +2079,7 @@ class ContinuousBatchScheduler:
                 self._depth_since_adapt / max(1, self._tokens_since_adapt))
             self._tokens_since_adapt = 0
             self._depth_since_adapt = 0.0
-        elif self._step_idx % self.cfg.flush_every == 0:
+        elif (self._step_idx % self.cfg.flush_every) < steps:
             self.flush_counters()
 
     def flush_counters(self) -> np.ndarray:
@@ -1765,7 +2092,10 @@ class ContinuousBatchScheduler:
 
     def reset_stats(self):
         """Zero served-token accounting and exit counters (e.g. after a
-        compile-warmup request, so reports cover only the real trace)."""
+        compile-warmup request, so reports cover only the real trace).
+        Drains any in-flight async windows first — their committed tokens
+        belong to the PRE-reset accounting era."""
+        self.sync()
         self._counters = jnp.zeros(self._n_exits + 1, jnp.int32)
         self.exit_counts = np.zeros(self._n_exits + 1, np.int64)
         self._host_exit_extra = np.zeros(self._n_exits + 1, np.int64)
@@ -1777,6 +2107,9 @@ class ContinuousBatchScheduler:
         self.spec_committed = 0
         for name in self.stage_calls:
             self.stage_calls[name] = 0
+        self.host_ms_total = 0.0
+        self.device_ms_total = 0.0
+        self.peak_tokens_in_flight = 0
         self.completed.clear()
 
     def measured_depth_fraction(self) -> float:
@@ -1816,6 +2149,8 @@ class ContinuousBatchScheduler:
             sizes["finalize"] = size(self._finalize)
         else:
             sizes["decode"] = size(self._decode)
+            if self.cfg.async_decode:
+                sizes["decode_window"] = size(self._decode_window)
         if self._spec_k:
             sizes["propose"] = size(self._propose)
             sizes["verify"] = size(self._verify)
@@ -1897,6 +2232,16 @@ class ContinuousBatchScheduler:
             stages["decode"] = StageSpec(
                 "decode", self._decode, dec_args, donate_argnums=(1, 5),
                 cache_in=1, cache_out=lambda o: o[2])
+            if cfg.async_decode:
+                win_args = (params_s, cache_s, bvec_i, bvec_i, bvec_b,
+                            bvec_i, bvec_i, counters_s, scalar_f, key_s,
+                            scalar_i, S((), jnp.bool_))
+                if paged:
+                    win_args = win_args + (tbl_s,)
+                stages["decode_window"] = StageSpec(
+                    "decode_window", self._decode_window, win_args,
+                    donate_argnums=(1, 2, 3, 4, 5, 7),
+                    cache_in=1, cache_out=lambda o: o[0])
         if paged:
             exp_args = (cache_s, S((self._pps,), i32), scalar_i)
             rows_s = jax.eval_shape(self._export_rows, *exp_args)
